@@ -1,0 +1,47 @@
+"""Shared benchmark harness: CSV emission + the Table-II simulation setup."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+from repro.core import make_edge_network, vgg16_profile
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def paper_profile():
+    return vgg16_profile(work_units="bytes")
+
+
+def paper_network(num_servers=6, seed=0, *, bandwidth="low", **kw):
+    bw = (10e6, 50e6) if bandwidth == "low" else (100e6, 200e6)
+    kw.setdefault("bw_range_hz", bw)
+    return make_edge_network(num_servers=num_servers, num_clients=4,
+                             seed=seed, kappa=1 / 32.0, **kw)
+
+
+def emit(name: str, rows: list, header: list):
+    """Print `name,us_per_call,derived`-style CSV lines + write the file."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    print(f"# {name} -> {path}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,36 @@
+"""Fig. 1: total latency of pipelined SL vs #servers, and vs no-pipeline.
+
+(a) pipelined SL latency falls as servers are added (1..10);
+(b) pipelined vs non-pipelined across bandwidths."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import no_pipeline, ours
+from .common import emit, paper_network, paper_profile
+
+B = 512
+
+
+def run(seeds=(0, 1, 2)):
+    prof = paper_profile()
+    rows = []
+    for n in range(2, 11):
+        for seed in seeds:
+            net = paper_network(num_servers=n, seed=seed)
+            p = ours(prof, net, B=B, b0=20)
+            np_ = no_pipeline(prof, net, B=B)
+            rows.append([n, seed, round(p.L_t, 4), round(np_.L_t, 4),
+                         round(np_.L_t / p.L_t, 3), p.b])
+    emit("fig1_latency_vs_servers", rows,
+         ["num_servers", "seed", "pipelined_s", "no_pipeline_s",
+          "speedup", "micro_batch"])
+    sp = np.array([r[4] for r in rows], dtype=float)
+    print(f"# speedup range {sp.min():.2f}x..{sp.max():.2f}x "
+          f"(paper: ~3-7x to reach equal accuracy)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Fig. 4: test accuracy vs wall-clock for the four schemes.
+
+The update sequence of every scheme is identical (synchronous SGD; the
+paper notes "the same converged accuracy") — only the per-round latency
+differs, so accuracy-vs-time curves are the SAME accuracy sequence mapped
+through each scheme's L_t.  We train the VGG executor once on the synthetic
+CIFAR-shaped stream (no CIFAR offline — documented in DESIGN.md) and emit
+time-stamped accuracy for each scheme; IID and non-IID client splits both
+run (the partition affects the data stream, not the latency model).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import no_pipeline, ours, rc_op, rp_oc
+from repro.data import classification_batches
+from repro.pipeline import SplitLearningExecutor
+from .common import emit, paper_network, paper_profile
+
+
+def run(rounds: int = 10, batch: int = 32, iid: bool = True):
+    prof = paper_profile()
+    net = paper_network(num_servers=6, seed=1)
+    plans = {
+        "ours": ours(prof, net, B=batch, b0=8),
+        "rc_op": rc_op(prof, net, B=batch, seed=3),
+        "rp_oc": rp_oc(prof, net, B=batch, seed=3),
+        "no_pipeline": no_pipeline(prof, net, B=batch),
+    }
+    # one shared training trajectory (updates are scheme-independent)
+    ex = SplitLearningExecutor(plans["ours"], prof, net, seed=0)
+    data = classification_batches(batch=batch, seed=0 if iid else 99)
+    eval_batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+    accs = [ex.evaluate(eval_batch)]
+    for _ in range(rounds):
+        ex.train_round({k: jnp.asarray(v) for k, v in next(data).items()},
+                       lr=0.04)
+        accs.append(ex.evaluate(eval_batch))
+    rows = []
+    for name, plan in plans.items():
+        for r, acc in enumerate(accs):
+            rows.append([name, r, round(r * plan.L_t, 3), round(acc, 4)])
+    emit("fig4_accuracy", rows, ["scheme", "round", "sim_time_s", "accuracy"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Fig. 5: total latency vs (a) #servers, (b) bandwidth, (c) compute,
+(d) memory — for ours / RC+OP / RP+OC / no-pipeline."""
+
+from __future__ import annotations
+
+from repro.core import no_pipeline, ours, rc_op, rp_oc
+from .common import emit, paper_network, paper_profile
+
+B = 512
+SCHEMES = {"ours": ours, "rc_op": rc_op, "rp_oc": rp_oc,
+           "no_pipeline": no_pipeline}
+
+
+def _latencies(net, prof):
+    out = {}
+    for name, fn in SCHEMES.items():
+        kw = {"seed": 7} if name in ("rc_op", "rp_oc") else {}
+        out[name] = fn(prof, net, B=B, **kw).L_t
+    return out
+
+
+def run(seeds=(0, 1)):
+    prof = paper_profile()
+    rows = []
+    # (a) servers 2..10
+    for n in (2, 4, 6, 8, 10):
+        for s in seeds:
+            la = _latencies(paper_network(num_servers=n, seed=s), prof)
+            rows += [["servers", n, s, k, round(v, 4)]
+                     for k, v in la.items()]
+    # (b) bandwidth 10..200 MHz
+    for bw in (10e6, 50e6, 100e6, 200e6):
+        for s in seeds:
+            net = paper_network(num_servers=6, seed=s,
+                                bw_range_hz=(bw, bw * 1.2))
+            la = _latencies(net, prof)
+            rows += [["bandwidth_mhz", bw / 1e6, s, k, round(v, 4)]
+                     for k, v in la.items()]
+    # (c) compute 2e10..12e10 cycles/s (paper's Fig. 5(c) axis)
+    for f in (2e10, 5e10, 8e10, 12e10):
+        for s in seeds:
+            net = paper_network(num_servers=6, seed=s,
+                                f_range=(f, f * 1.2))
+            la = _latencies(net, prof)
+            rows += [["compute_flops", f, s, k, round(v, 4)]
+                     for k, v in la.items()]
+    # (d) memory 2..16 GB
+    for gb in (2, 4, 8, 16):
+        for s in seeds:
+            net = paper_network(num_servers=6, seed=s,
+                                mem_range=(gb * 2**30, gb * 2**30))
+            la = _latencies(net, prof)
+            rows += [["memory_gb", gb, s, k, round(v, 4)]
+                     for k, v in la.items()]
+    emit("fig5_sweeps", rows, ["sweep", "value", "seed", "scheme",
+                               "latency_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

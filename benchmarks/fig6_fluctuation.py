@@ -1,0 +1,30 @@
+"""Fig. 6: robustness to resource fluctuation (CV noise on rates/compute)."""
+
+from __future__ import annotations
+
+from repro.core import evaluate_under_fluctuation, ours
+from .common import emit, paper_network, paper_profile
+
+
+def run(cvs=(0.0, 0.05, 0.1, 0.2, 0.3), seeds=(0, 1)):
+    prof = paper_profile()
+    rows = []
+    for s in seeds:
+        net = paper_network(num_servers=6, seed=s)
+        plan = ours(prof, net, B=512, b0=20)
+        for cv in cvs:
+            rep = evaluate_under_fluctuation(prof, net, plan, cv,
+                                             draws=32, seed=s)
+            rows.append([s, cv, round(rep.planned_latency, 4),
+                         round(rep.mean_latency, 4),
+                         round(rep.std_latency, 4),
+                         round(rep.p95_latency, 4),
+                         round(rep.degradation, 4)])
+    emit("fig6_fluctuation", rows,
+         ["seed", "cv", "planned_s", "mean_s", "std_s", "p95_s",
+          "degradation"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig. 8: total latency across physical topologies (mesh/line/star/tree)
+and vs #servers."""
+
+from __future__ import annotations
+
+from repro.core import ours
+from .common import emit, paper_network, paper_profile
+
+B = 512
+TOPOLOGIES = ("mesh", "line", "star", "tree")
+
+
+def run(seeds=(0, 1, 2)):
+    prof = paper_profile()
+    rows = []
+    for topo in TOPOLOGIES:
+        for n in (2, 4, 6, 8, 10):
+            for s in seeds:
+                net = paper_network(num_servers=n, seed=s, topology=topo)
+                p = ours(prof, net, B=B, b0=20)
+                rows.append([topo, n, s, round(p.L_t, 4), p.b])
+    emit("fig8_topologies", rows,
+         ["topology", "servers", "seed", "latency_s", "micro_batch"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Pipeline-runtime micro-benchmarks (ours):
+
+  - event-sim vs Eq. (14) across random instances (validation of the
+    paper's latency model, incl. the shared-engine pessimism gap);
+  - TPU stage-planner outputs for three assigned archs (stage counts,
+    micro-batch, bubble fraction) — what core/planner feeds spmd.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import arch_profile, get_config
+from repro.core import SplitSolution, breakdown, num_fills, plan_stages, \
+    total_latency
+from repro.core import make_edge_network, random_profile
+from repro.pipeline import simulate_from_breakdown
+from .common import emit
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    gaps, shared_gaps = [], []
+    for seed in range(10):
+        prof = random_profile(np.random.default_rng(seed), 6)
+        net = make_edge_network(num_servers=3, num_clients=2, seed=seed)
+        sol = SplitSolution(cuts=(2, 4, 6), placement=(0, 1, 2))
+        b, B = 8, 64
+        q = num_fills(B, b) + 1
+        bd = breakdown(prof, net, sol, b)
+        sim = simulate_from_breakdown(bd, q)
+        shared = simulate_from_breakdown(bd, q, shared_engine=True)
+        analytic = total_latency(prof, net, sol, b, B)
+        gaps.append(abs(sim.makespan - analytic) / analytic)
+        shared_gaps.append(shared.makespan / analytic - 1)
+    rows.append(["eventsim_vs_eq14_max_relgap", round(max(gaps), 9)])
+    rows.append(["shared_engine_extra_latency_mean",
+                 round(float(np.mean(shared_gaps)), 4)])
+
+    for arch in ("llama3-8b", "qwen3-0.6b", "jamba-1.5-large-398b"):
+        prof = arch_profile(get_config(arch))
+        sp = plan_stages(prof, total_chips=256, global_batch=256,
+                         stage_candidates=(2, 4, 8, 16))
+        rows.append([f"planner_{arch}_stages", sp.num_stages])
+        rows.append([f"planner_{arch}_microbatch", sp.microbatch])
+        rows.append([f"planner_{arch}_bubble_frac",
+                     round(sp.bubble_fraction, 4)])
+    emit("pipeline_exec", rows, ["metric", "value"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Roofline harness: turn results/dryrun/*.json into the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import os
+
+from repro.launch.roofline import load_records, markdown_table, roofline_row
+from .common import RESULTS_DIR, emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def run():
+    recs = load_records(DRYRUN_DIR)
+    if not recs:
+        print("# roofline: no dry-run records found — run "
+              "`python -m repro.launch.dryrun` first")
+        return []
+    rows = [roofline_row(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    table = [[r["arch"], r["shape"], r["mesh"], f"{r['compute_s']:.3e}",
+              f"{r['memory_s']:.3e}", f"{r['collective_s']:.3e}",
+              r["dominant"], f"{r['useful_ratio']:.3f}",
+              f"{r['roofline_fraction']:.3f}", f"{r['hbm_gib']:.2f}",
+              int(r["fits"])] for r in rows]
+    emit("roofline", table,
+         ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+          "dominant", "useful_ratio", "roofline_fraction", "hbm_gib",
+          "fits"])
+    md = markdown_table(rows)
+    path = os.path.join(RESULTS_DIR, "roofline.md")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(path, "w") as f:
+        f.write(md + "\n")
+    print(f"# markdown table -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

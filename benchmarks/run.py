@@ -1,0 +1,64 @@
+"""Run every benchmark (one per paper table/figure + ours).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer seeds / smaller sweeps")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated module names to skip")
+    args = ap.parse_args()
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    from . import (fig1_latency_vs_servers, fig4_accuracy, fig5_sweeps,
+                   fig6_fluctuation, fig7_optimality, fig8_topologies,
+                   pipeline_exec, roofline)
+
+    jobs = [
+        ("fig1_latency_vs_servers",
+         lambda: fig1_latency_vs_servers.run(seeds=(0,) if args.quick
+                                             else (0, 1, 2))),
+        ("fig4_accuracy",
+         lambda: fig4_accuracy.run(rounds=3 if args.quick else 10,
+                                   batch=16 if args.quick else 32)),
+        ("fig5_sweeps",
+         lambda: fig5_sweeps.run(seeds=(0,) if args.quick else (0, 1))),
+        ("fig6_fluctuation",
+         lambda: fig6_fluctuation.run(seeds=(0,) if args.quick
+                                      else (0, 1))),
+        ("fig7_optimality",
+         lambda: fig7_optimality.run(server_counts=(2, 6) if args.quick
+                                     else (2, 4, 6, 8, 10))),
+        ("fig8_topologies",
+         lambda: fig8_topologies.run(seeds=(0,) if args.quick
+                                     else (0, 1, 2))),
+        ("pipeline_exec", pipeline_exec.run),
+        ("roofline", roofline.run),
+    ]
+    failed = []
+    for name, fn in jobs:
+        if name in skip:
+            print(f"# SKIP {name}")
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"# {name} done in {time.perf_counter() - t0:.1f}s\n")
+        except Exception as e:  # keep going; report at the end
+            failed.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}\n")
+    if failed:
+        print("FAILED:", failed)
+        sys.exit(1)
+    print("# all benchmarks done")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,9 @@
+"""Inter-stage traffic compression (activations fwd / act-grads bwd)."""
+
+from .codecs import (int8_quantize, int8_dequantize, topk_sparsify,
+                     topk_densify, ErrorFeedback, make_link_hooks,
+                     compressed_bytes)
+
+__all__ = ["int8_quantize", "int8_dequantize", "topk_sparsify",
+           "topk_densify", "ErrorFeedback", "make_link_hooks",
+           "compressed_bytes"]

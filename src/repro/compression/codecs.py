@@ -1,0 +1,95 @@
+"""Gradient/activation compression for bandwidth-constrained links.
+
+The paper's multi-hop links are the bottleneck term of Eq. (13) whenever
+comm dominates; compressing the cut-layer traffic moves D_k / D'_k
+(Eqs. 5/9) down by the codec ratio, which the planner then re-optimizes
+around (the cut may move once links get cheaper!).  Codecs:
+
+  int8     per-tensor affine quantization            (ratio 4x vs fp32)
+  top-k    magnitude sparsification + error feedback (ratio ~ k)
+
+Error feedback keeps the residual locally and re-injects it the next round
+— the standard fix for biased compressors' convergence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(x):
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x, k: int):
+    """Keep the k largest-|.| entries (flat); returns (values, indices)."""
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_densify(values, idx, shape):
+    flat = jnp.zeros((int(jnp.prod(jnp.array(shape))),), values.dtype)
+    return flat.at[idx].set(values).reshape(shape)
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """Residual accumulator around a biased codec."""
+    residual: jnp.ndarray | None = None
+
+    def compress(self, x, codec_fwd: Callable, codec_bwd: Callable):
+        if self.residual is not None:
+            x = x + self.residual.astype(x.dtype)
+        payload = codec_fwd(x)
+        decoded = codec_bwd(payload).astype(x.dtype)
+        self.residual = x - decoded
+        return decoded
+
+
+def compressed_bytes(nbytes_fp32: float, codec: str,
+                     topk_ratio: float = 0.05) -> float:
+    """D_k scaling for the latency model / planner."""
+    if codec == "none":
+        return nbytes_fp32
+    if codec == "int8":
+        return nbytes_fp32 / 4.0
+    if codec == "topk":
+        # values (4B) + indices (4B) per kept entry
+        return nbytes_fp32 * topk_ratio * 2.0
+    raise ValueError(codec)
+
+
+def make_link_hooks(codec: str = "int8", topk_ratio: float = 0.05):
+    """pipeline.LinkHooks factory applying the codec in both directions.
+    Straight-through in autodiff: quantization is applied inside
+    lax.stop_gradient deltas so training stays stable."""
+    def roundtrip(x):
+        if codec == "none":
+            return x
+        xf = x.astype(jnp.float32)
+        if codec == "int8":
+            q, s = int8_quantize(xf)
+            dec = int8_dequantize(q, s)
+        elif codec == "topk":
+            k = max(1, int(xf.size * topk_ratio))
+            vals, idx = topk_sparsify(xf, k)
+            dec = topk_densify(vals, idx, xf.shape)
+        else:
+            raise ValueError(codec)
+        # straight-through estimator
+        return (x + jax.lax.stop_gradient(dec.astype(x.dtype) - x))
+
+    from repro.pipeline.executor import LinkHooks
+    return LinkHooks(fwd=roundtrip, bwd=roundtrip)

@@ -1,0 +1,37 @@
+"""Arch registry: ``get_config(arch_id)`` + the assigned shape grid."""
+
+from repro.models.common import ArchConfig
+
+from . import (command_r_35b, granite_moe_3b, internvl2_1b, jamba_1_5_large,
+               llama3_8b, qwen1_5_4b, qwen3_0_6b, qwen3_moe_235b, rwkv6_1_6b,
+               whisper_small)
+from .base import (SHAPES, SHAPE_NAMES, ShapeSpec, arch_profile, cache_specs,
+                   count_params, input_specs, param_specs, runnable_cells,
+                   supports_shape)
+
+_MODULES = {
+    "qwen3-0.6b": qwen3_0_6b,
+    "command-r-35b": command_r_35b,
+    "llama3-8b": llama3_8b,
+    "qwen1.5-4b": qwen1_5_4b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b,
+    "granite-moe-3b-a800m": granite_moe_3b,
+    "jamba-1.5-large-398b": jamba_1_5_large,
+    "rwkv6-1.6b": rwkv6_1_6b,
+    "internvl2-1b": internvl2_1b,
+    "whisper-small": whisper_small,
+}
+
+ARCH_IDS = tuple(_MODULES)
+CONFIGS = {name: mod.CONFIG for name, mod in _MODULES.items()}
+
+
+def get_config(arch_id: str, reduced: bool = False) -> ArchConfig:
+    mod = _MODULES[arch_id]
+    return mod.reduced() if reduced else mod.CONFIG
+
+
+__all__ = ["ARCH_IDS", "CONFIGS", "get_config", "SHAPES", "SHAPE_NAMES",
+           "ShapeSpec", "input_specs", "cache_specs", "param_specs",
+           "arch_profile", "count_params", "supports_shape",
+           "runnable_cells"]

@@ -1,0 +1,206 @@
+"""Config substrate: assigned input shapes, input_specs(), reduced configs,
+and per-arch workload profiles for the planner.
+
+Every assigned architecture gets ``src/repro/configs/<id>.py`` exporting:
+  CONFIG   — the exact assigned dims (ArchConfig)
+  reduced() — a tiny same-family config for CPU smoke tests
+
+The four assigned shapes apply to each arch (cells), with the documented
+skips: ``long_500k`` only for sub-quadratic archs (ssm / hybrid).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig
+from repro.core.profiles import ModelProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str             # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SHAPE_NAMES = tuple(SHAPES)
+
+
+def supports_shape(cfg: ArchConfig, shape: str) -> bool:
+    """long_500k needs sub-quadratic attention: ssm + hybrid only
+    (full-attention archs are recorded as N/A — DESIGN.md §4)."""
+    if shape == "long_500k":
+        return cfg.family in ("ssm", "hybrid")
+    return True
+
+
+def runnable_cells(configs: dict) -> list:
+    return [(a, s) for a in configs for s in SHAPE_NAMES
+            if supports_shape(configs[a], s)]
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Returns {name: ShapeDtypeStruct} for the step function of this cell.
+
+    train/prefill: a batch dict.  decode: {'token', 'pos'} (the cache comes
+    from ``cache_specs``).  No device memory is touched.
+    """
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    i32 = jnp.int32
+    f = cfg.compute_dtype
+    if sp.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.patch_tokens, cfg.d_model), f)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_frames, cfg.d_model), f)
+        return batch
+    if sp.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.patch_tokens, cfg.d_model), f)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_frames, cfg.d_model), f)
+        return batch
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """ShapeDtypeStructs of the KV cache / SSM state for decode cells."""
+    from repro.models import get_model
+    sp = SHAPES[shape_name]
+    api = get_model(cfg)
+    return jax.eval_shape(lambda: api.make_cache(sp.global_batch, sp.seq_len))
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    from repro.models import get_model
+    api = get_model(cfg)
+    return jax.eval_shape(api.init, jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Workload profiles for the planner (per-layer FLOPs / boundary bytes)
+# ---------------------------------------------------------------------------
+
+def _attn_layer_flops(cfg: ArchConfig, seq: int) -> float:
+    hd = cfg.head_dim
+    qkv = 2 * cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv) * hd
+    out = 2 * cfg.n_heads * hd * cfg.d_model
+    scores = 2 * 2 * cfg.n_heads * hd * (seq / 2)   # causal average
+    return float((qkv + out + scores) * seq)
+
+
+def _ffn_layer_flops(cfg: ArchConfig, seq: int) -> float:
+    if cfg.moe_experts:
+        per_tok = (cfg.moe_top_k * cfg.ffn_mult * 2 * cfg.d_model * cfg.d_ff
+                   + 2 * cfg.d_model * cfg.moe_experts)
+    else:
+        per_tok = cfg.ffn_mult * 2 * cfg.d_model * cfg.d_ff
+    return float(per_tok * seq)
+
+
+def _mamba_layer_flops(cfg: ArchConfig, seq: int) -> float:
+    from repro.models.mamba import d_inner, dt_rank
+    di, ds, dtr = d_inner(cfg), cfg.mamba_d_state, dt_rank(cfg)
+    per_tok = (2 * cfg.d_model * 2 * di + 2 * di * (dtr + 2 * ds)
+               + 2 * dtr * di + 10 * di * ds + 2 * di * cfg.d_model)
+    return float(per_tok * seq)
+
+
+def _rwkv_layer_flops(cfg: ArchConfig, seq: int) -> float:
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim
+    per_tok = (5 * 2 * d * d        # r/k/v/g/o projections
+               + 2 * d * 64 * 2     # decay LoRA
+               + 4 * d * hd         # WKV state update + readout
+               + 2 * 2 * d * ff + 2 * d * d)   # channel mix
+    return float(per_tok * seq)
+
+
+def arch_profile(cfg: ArchConfig, shape_name: str = "train_4k",
+                 dtype_bytes: int = 2, optimizer_mult: float | None = None
+                 ) -> ModelProfile:
+    """Per-layer (embedding + blocks + head) profile for the MSP planner.
+
+    ``optimizer_mult`` (sigma bytes per param byte): None picks the same
+    policy as the trainer — AdamW (2.0 = 8 B/param) below 100B params,
+    Adafactor (~0.025) above (launch/steps.py).
+    """
+    if optimizer_mult is None:
+        probe = arch_profile(cfg, shape_name, dtype_bytes, 2.0)
+        n = float(probe.param_cum()[-1]) / 4.0
+        optimizer_mult = 0.025 if n >= 100e9 else 2.0
+    seq = SHAPES[shape_name].seq_len
+    act = float(cfg.d_model * seq * dtype_bytes)
+    fp, bp, acts, grads, params, opt = [], [], [], [], [], []
+
+    def add(flops, pbytes, a=act):
+        fp.append(flops)
+        bp.append(2.0 * flops)
+        acts.append(a)
+        grads.append(a)
+        params.append(float(pbytes))
+        opt.append(float(pbytes) * optimizer_mult)
+
+    pd = 4  # param bytes (fp32 masters)
+    add(1e6, cfg.vocab * cfg.d_model * pd)          # embedding
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            fl = _attn_layer_flops(cfg, seq)
+            pb = (cfg.n_heads + 2 * cfg.n_kv) * cfg.head_dim * cfg.d_model * pd * 2
+        elif kind == "mamba":
+            fl = _mamba_layer_flops(cfg, seq)
+            from repro.models.mamba import d_inner
+            pb = 3 * cfg.d_model * d_inner(cfg) * pd
+        else:  # rwkv
+            fl = _rwkv_layer_flops(cfg, seq)
+            pb = 6 * cfg.d_model * cfg.d_model * pd
+        if kind != "rwkv":
+            if cfg.is_moe_layer(i):
+                fl += _ffn_layer_flops(cfg, seq)
+                pb += cfg.moe_experts * cfg.ffn_mult * cfg.d_model * cfg.d_ff * pd
+            else:
+                fl += _ffn_layer_flops(
+                    dataclasses.replace(cfg, moe_experts=0), seq)
+                pb += cfg.ffn_mult * cfg.d_model * cfg.d_ff * pd
+        else:
+            pb += 2 * cfg.d_model * cfg.d_ff * pd
+        add(fl, pb)
+    add(2.0 * cfg.d_model * cfg.vocab * seq,
+        cfg.vocab * cfg.d_model * pd,
+        a=float(cfg.vocab * seq * dtype_bytes))     # head
+    return ModelProfile(
+        name=cfg.name, fp_work=np.array(fp), bp_work=np.array(bp),
+        act_bytes=np.array(acts), grad_bytes=np.array(grads),
+        param_bytes=np.array(params), opt_bytes=np.array(opt))
+
+
+def count_params(cfg: ArchConfig) -> int:
+    prof = arch_profile(cfg)
+    return int(prof.param_cum()[-1] // 4)

@@ -1,0 +1,24 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8.  [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+NOTE: the assignment text says both "MoE 40e" and "32 experts"; we follow the
+config line (40 experts) — recorded in DESIGN.md §4.  40 does not divide the
+16-wide model axis, so experts shard on d_ff instead (512/16 = 32)."""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    num_layers=32, d_model=1536, n_heads=24, n_kv=8, d_ff=512,
+    vocab=49155, d_head=64, qk_norm=False, qkv_bias=False,
+    tie_embeddings=True, ffn_mult=3, rope_theta=1e4,
+    moe_experts=40, moe_top_k=8, moe_every=1, capacity_factor=1.25,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="granite-moe-3b-reduced", num_layers=2, d_model=64,
+        n_heads=4, n_kv=2, d_head=16, d_ff=64, vocab=384,
+        moe_experts=5, moe_top_k=2)

@@ -1,0 +1,32 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2; Mamba:attn 7:1 interleave.
+[arXiv:2403.19887; hf]
+
+Period structure: 8 layers = 7 Mamba + 1 attention; MoE every 2nd layer.
+The heterogeneous per-layer profile is the most interesting input to the
+paper's MSP planner among the assigned archs (DESIGN.md §4)."""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    num_layers=72, d_model=8192, n_heads=64, n_kv=8, d_ff=24576,
+    vocab=65536, d_head=128, qk_norm=False, qkv_bias=False,
+    tie_embeddings=False, ffn_mult=3, use_rope=False,
+    moe_experts=16, moe_top_k=2, moe_every=2, capacity_factor=1.25,
+    attn_every=8, mamba_d_state=16, mamba_expand=2, mamba_d_conv=4,
+    moe_ff_chunks=4,   # bound live FSDP-gathered expert-weight bytes
+    # §Perf cell-C winners (EXPERIMENTS.md): dots-remat kills the period
+    # recompute chain (flops −45%, collectives −52%); Q=8 halves the FSDP
+    # weight re-gathers (collectives −29% more); both fit 16 GiB adjusted.
+    remat="dots", train_microbatches=8,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="jamba-1.5-large-reduced", num_layers=8, d_model=64,
+        n_heads=4, n_kv=2, d_head=16, d_ff=128, vocab=384,
+        moe_experts=4, moe_top_k=2, attn_every=4)

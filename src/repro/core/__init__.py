@@ -1,0 +1,39 @@
+"""The paper's contribution: pipelined split learning via joint model
+splitting & placement (Algorithm 1), closed-form micro-batching (Theorem 1),
+and their BCD combination (Algorithm 2) — plus the TPU stage-planner facade.
+"""
+
+from .profiles import (ModelProfile, vgg16_profile, transformer_profile,
+                       uniform_profile, random_profile)
+from .network import (Node, EdgeNetwork, make_edge_network, shannon_rate,
+                      tpu_stage_network, TPU_PEAK_FLOPS, TPU_HBM_BW,
+                      TPU_ICI_BW, TPU_HBM_BYTES)
+from .latency import (SplitSolution, validate_solution, fill_latency,
+                      pipeline_interval, total_latency, no_pipeline_latency,
+                      memory_feasible, node_memory_usage, num_fills,
+                      breakdown, client_shares)
+from .msp_graph import MSPGraph, build_graph, graph_stats
+from .shortest_path import (MSPResult, solve_msp, brute_force_msp,
+                            enumerate_solutions)
+from .microbatch import (MicrobatchResult, optimal_microbatch,
+                         exhaustive_microbatch, feasibility_box)
+from .bcd import Plan, bcd_solve, exhaustive_joint
+from .baselines import rc_op, rp_oc, no_pipeline, ours, optimal, SCHEMES
+from .fluctuation import FluctuationReport, evaluate_under_fluctuation
+from .planner import StagePlan, plan_stages, replan
+
+__all__ = [
+    "ModelProfile", "vgg16_profile", "transformer_profile", "uniform_profile",
+    "random_profile", "Node", "EdgeNetwork", "make_edge_network",
+    "shannon_rate", "tpu_stage_network", "TPU_PEAK_FLOPS", "TPU_HBM_BW",
+    "TPU_ICI_BW", "TPU_HBM_BYTES", "SplitSolution", "validate_solution",
+    "fill_latency", "pipeline_interval", "total_latency",
+    "no_pipeline_latency", "memory_feasible", "node_memory_usage",
+    "num_fills", "breakdown", "client_shares", "MSPGraph", "build_graph",
+    "graph_stats", "MSPResult", "solve_msp", "brute_force_msp",
+    "enumerate_solutions", "MicrobatchResult", "optimal_microbatch",
+    "exhaustive_microbatch", "feasibility_box", "Plan", "bcd_solve",
+    "exhaustive_joint", "rc_op", "rp_oc", "no_pipeline", "ours", "optimal",
+    "SCHEMES", "FluctuationReport", "evaluate_under_fluctuation",
+    "StagePlan", "plan_stages", "replan",
+]

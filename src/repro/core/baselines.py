@@ -1,0 +1,157 @@
+"""The paper's benchmark schemes (Sec. VI-A):
+
+  RC+OP       random cut, optimal placement (our placement + micro-batching)
+  RP+OC       random placement, optimal cut (our splitting + micro-batching)
+  No-Pipeline optimal MSP but a single micro-batch b = B (Eq. 14 collapses
+              to T_f(B)); the upper bound for non-pipelined multi-hop SL/SI
+  Optimal     exhaustive-over-b joint optimum (Fig. 7's reference)
+  Ours        BCD (Algorithm 2)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from . import latency as L
+from .bcd import Plan, bcd_solve, exhaustive_joint
+from .latency import SplitSolution
+from .microbatch import optimal_microbatch
+from .network import EdgeNetwork
+from .profiles import ModelProfile
+from .shortest_path import solve_msp
+
+
+def _finish_plan(profile, net, sol, b, B) -> Plan:
+    T_f = L.fill_latency(profile, net, sol, b)
+    T_i = L.pipeline_interval(profile, net, sol, b)
+    return Plan(solution=sol, b=b, B=B, T_f=T_f, T_i=T_i,
+                L_t=T_f + L.num_fills(B, b) * T_i, iterations=1, history=[],
+                solve_seconds=0.0,
+                feasible=math.isfinite(T_f) and
+                L.memory_feasible(profile, net, sol, b))
+
+
+def random_cuts(rng: np.random.Generator, I: int, K: int) -> tuple:
+    """K-segment random non-decreasing cut vector ending at I (C4/C5)."""
+    s = int(rng.integers(2, K + 1)) if K >= 2 else 1
+    if s == 1:
+        return (I,)
+    inner = np.sort(rng.choice(np.arange(1, I), size=s - 1, replace=False))
+    return tuple(int(c) for c in inner) + (I,)
+
+
+def rc_op(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
+          b0: int = 20, K: int | None = None, tries: int = 4,
+          memory_model: str = "paper") -> Plan:
+    """Random Cut + Optimal Placement (+ optimal micro-batch for the pipeline
+    comparison to be apples-to-apples, as in Fig. 4/5)."""
+    rng = np.random.default_rng(seed)
+    K = K or min(1 + net.num_servers, profile.num_layers)
+    best = None
+    for _ in range(tries):  # a random cut can be infeasible; re-draw
+        cuts = random_cuts(rng, profile.num_layers, K)
+        msp = solve_msp(profile, net, b0, B, K=len(cuts),
+                        restrict_cuts=cuts, memory_model=memory_model)
+        if not msp.feasible:
+            continue
+        mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
+                                memory_model=memory_model)
+        b = mb.b if mb.b > 0 else b0
+        plan = _finish_plan(profile, net, msp.solution, b, B)
+        if best is None or plan.L_t < best.L_t:
+            best = plan
+    return best if best is not None else _infeasible(profile, B)
+
+
+def rp_oc(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
+          b0: int = 20, K: int | None = None, tries: int = 4,
+          memory_model: str = "paper") -> Plan:
+    """Random Placement + Optimal Cut (+ optimal micro-batch)."""
+    rng = np.random.default_rng(seed)
+    K = K or min(1 + net.num_servers, profile.num_layers)
+    servers = list(net.server_indices())
+    best = None
+    for _ in range(tries):
+        s = min(int(rng.integers(2, K + 1)), 1 + len(servers))
+        order = list(rng.permutation(servers)[:s - 1])
+        placement = (0,) + tuple(int(n) for n in order)
+        msp = solve_msp(profile, net, b0, B, K=len(placement),
+                        restrict_placement=placement,
+                        memory_model=memory_model)
+        if not msp.feasible:
+            continue
+        mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
+                                memory_model=memory_model)
+        b = mb.b if mb.b > 0 else b0
+        plan = _finish_plan(profile, net, msp.solution, b, B)
+        if best is None or plan.L_t < best.L_t:
+            best = plan
+    return best if best is not None else _infeasible(profile, B)
+
+
+def no_pipeline(profile: ModelProfile, net: EdgeNetwork, B: int,
+                K: int | None = None, memory_model: str = "paper") -> Plan:
+    """Optimal MSP with b = B (xi = 0 -> pure min-sum Dijkstra).  'Due to the
+    optimality, also the upper bound of existing split inference/learning
+    schemes without pipeline parallelism' (Sec. VI-A)."""
+    msp = solve_msp(profile, net, B, B, K=K, memory_model=memory_model)
+    if not msp.feasible:
+        # memory may force b < B even without pipelining benefits: fall back
+        # to the largest feasible single micro-batch
+        for b in (B // 2, B // 4, B // 8, B // 16, 1):
+            msp = solve_msp(profile, net, max(b, 1), B, K=K,
+                            memory_model=memory_model)
+            if msp.feasible:
+                sol = msp.solution
+                ticks = math.ceil(B / max(b, 1))
+                T_f = L.fill_latency(profile, net, sol, max(b, 1))
+                return Plan(solution=sol, b=max(b, 1), B=B, T_f=T_f,
+                            T_i=T_f, L_t=ticks * T_f, iterations=1,
+                            history=[], solve_seconds=0.0)
+        return _infeasible(profile, B)
+    sol = msp.solution
+    T_f = L.fill_latency(profile, net, sol, B)
+    return Plan(solution=sol, b=B, B=B, T_f=T_f, T_i=T_f, L_t=T_f,
+                iterations=1, history=[], solve_seconds=0.0)
+
+
+def ours(profile: ModelProfile, net: EdgeNetwork, B: int, *, b0: int = 20,
+         theta: float = 0.01, K: int | None = None,
+         memory_model: str = "paper", restarts: bool = True) -> Plan:
+    """Algorithm 2, with multi-start over b0 (beyond-paper robustness: BCD
+    is a coordinate descent and can sit in a poor basin for one seed; three
+    extra solves cost milliseconds and close most of the Fig. 7 gap)."""
+    plan = bcd_solve(profile, net, B, b0=b0, theta=theta, K=K,
+                     memory_model=memory_model)
+    if not restarts:
+        return plan
+    for alt in {max(1, B // 16), max(1, B // 4), max(1, B // 2)} - {b0}:
+        cand = bcd_solve(profile, net, B, b0=alt, theta=theta, K=K,
+                         memory_model=memory_model)
+        if cand.feasible and (not plan.feasible or cand.L_t < plan.L_t):
+            plan = cand
+    return plan
+
+
+def optimal(profile: ModelProfile, net: EdgeNetwork, B: int,
+            K: int | None = None, b_step: int = 1,
+            memory_model: str = "paper") -> Plan:
+    return exhaustive_joint(profile, net, B, K=K, b_step=b_step,
+                            memory_model=memory_model)
+
+
+SCHEMES = {
+    "ours": ours,
+    "rc_op": rc_op,
+    "rp_oc": rp_oc,
+    "no_pipeline": no_pipeline,
+}
+
+
+def _infeasible(profile: ModelProfile, B: int) -> Plan:
+    return Plan(solution=SplitSolution((profile.num_layers,), (0,)), b=0, B=B,
+                T_f=math.inf, T_i=math.inf, L_t=math.inf, iterations=0,
+                history=[], solve_seconds=0.0, feasible=False)

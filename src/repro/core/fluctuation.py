@@ -1,0 +1,50 @@
+"""Resource-fluctuation robustness (Fig. 6).
+
+Edge resources fluctuate during training; the plan is computed on *measured*
+conditions but executes under *actual* conditions.  We model actuals as the
+measured network perturbed by Gaussian multiplicative noise with a given
+coefficient of variation (CV) on both data rates and compute capabilities,
+then evaluate the fixed plan's true latency under each draw.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import latency as L
+from .bcd import Plan
+from .network import EdgeNetwork
+from .profiles import ModelProfile
+
+
+@dataclasses.dataclass
+class FluctuationReport:
+    cv: float
+    mean_latency: float
+    std_latency: float
+    p95_latency: float
+    planned_latency: float
+    degradation: float       # mean / planned
+
+    def row(self):
+        return (self.cv, self.mean_latency, self.std_latency,
+                self.p95_latency, self.planned_latency, self.degradation)
+
+
+def evaluate_under_fluctuation(profile: ModelProfile, net: EdgeNetwork,
+                               plan: Plan, cv: float, *, draws: int = 32,
+                               seed: int = 0) -> FluctuationReport:
+    rng = np.random.default_rng(seed)
+    lats = []
+    for _ in range(draws):
+        noisy = net.with_fluctuation(rng, cv)
+        lats.append(L.total_latency(profile, noisy, plan.solution, plan.b,
+                                    plan.B))
+    lats = np.asarray(lats)
+    return FluctuationReport(
+        cv=cv, mean_latency=float(lats.mean()), std_latency=float(lats.std()),
+        p95_latency=float(np.percentile(lats, 95)),
+        planned_latency=plan.L_t,
+        degradation=float(lats.mean() / plan.L_t) if plan.L_t > 0 else 1.0)

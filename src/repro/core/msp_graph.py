@@ -1,0 +1,136 @@
+"""Graph representation of the MSP problem (Sec. V-D, Eqs. 20-22).
+
+The paper's vertex v^{k,n}_{(i-m),i} ("submodel k = layers i-m..i on node n")
+admits a compact *state* encoding: because the next segment always starts at
+the current segment's end, the reachable-cost state is ``(k, n, i)`` =
+"the k-th (non-empty) submodel ends at layer i on node n".  An edge
+
+    (k, n, i)  ->  (k+1, n', j)      with j > i, n' a server, n' != n
+
+carries the Eq. (22) weight *folded onto the head vertex*:
+
+    c = t^F_comm(cut i, n->n') + t^B_comm(cut i, n'->n)
+      + t^F((i, j], n') + t^B((i, j], n')
+
+so that a source->dest path cost equals T_f of Eq. (12) exactly.  (The paper
+prints zero-weight terminal edges, which would drop stage-K compute from T_f;
+we keep stage compute on the head so the sum is exact — noted in DESIGN.md §6.)
+
+Each edge also carries the *bottleneck* value
+
+    beta = max(t^F_comm, t^B_comm, t^F_head, t^B_head)
+
+so a path's max-beta equals T_i of Eq. (13) whenever no node hosts two
+submodels (paper mode; see DESIGN.md §6 for the exact-mode discussion).
+
+Everything is materialized as dense numpy arrays over the edge space
+``(n, i, n', j)`` — independent of k — so Algorithm 1's repeated
+shortest-path sweeps are vectorized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .latency import (SplitSolution, bp_latency, bwd_bytes, client_max_share,
+                      comm_latency, fp_latency, fwd_bytes, memory_bytes)
+from .network import EdgeNetwork
+from .profiles import ModelProfile
+
+
+@dataclasses.dataclass
+class MSPGraph:
+    """Dense arrays over the layered edge space.
+
+    Shapes: ``N`` nodes (index 0 = client tier), ``I`` layers.
+      seg_cost[n, i, j]   compute (FP+BP) of segment (i, j] on node n; inf if
+                          j <= i or memory-infeasible on n  (i, j in 0..I)
+      seg_beta[n, i, j]   max(FP, BP) of that segment
+      comm_cost[i, n, m]  fwd + bwd comm across cut i between nodes n -> m
+      comm_beta[i, n, m]  max(fwd, bwd) across cut i
+      src_cost[i]         client segment (0, i] compute cost (FP+BP)
+      src_beta[i]         max(FP, BP) of the client segment
+    """
+    profile: ModelProfile
+    net: EdgeNetwork
+    b: int
+    seg_cost: np.ndarray
+    seg_beta: np.ndarray
+    comm_cost: np.ndarray
+    comm_beta: np.ndarray
+    src_cost: np.ndarray
+    src_beta: np.ndarray
+
+    @property
+    def I(self) -> int:
+        return self.profile.num_layers
+
+    @property
+    def N(self) -> int:
+        return len(self.net.nodes)
+
+    def edge_cost(self, n: int, i: int, m: int, j: int) -> float:
+        """Full edge weight (comm across cut i) + (head segment (i,j] on m)."""
+        return float(self.comm_cost[i, n, m] + self.seg_cost[m, i, j])
+
+    def edge_beta(self, n: int, i: int, m: int, j: int) -> float:
+        return float(max(self.comm_beta[i, n, m], self.seg_beta[m, i, j]))
+
+
+def build_graph(profile: ModelProfile, net: EdgeNetwork, b: int,
+                memory_model: str = "paper") -> MSPGraph:
+    I = profile.num_layers
+    N = len(net.nodes)
+    seg_cost = np.full((N, I + 1, I + 1), np.inf)
+    seg_beta = np.full((N, I + 1, I + 1), np.inf)
+    for n in range(N):
+        node = net.nodes[n]
+        for i in range(I):            # segment (i, j]
+            for j in range(i + 1, I + 1):
+                fp = fp_latency(profile, net, i, j, n, b)
+                bp = bp_latency(profile, net, i, j, n, b)
+                mem = memory_bytes(profile, net, i, j, n, b, memory_model)
+                if mem > node.mem:
+                    continue          # per-vertex memory infeasibility (C7/C8)
+                seg_cost[n, i, j] = fp + bp
+                seg_beta[n, i, j] = max(fp, bp)
+
+    comm_cost = np.full((I + 1, N, N), np.inf)
+    comm_beta = np.full((I + 1, N, N), np.inf)
+    for i in range(1, I + 1):         # cut after layer i (1-based)
+        for n in range(N):
+            fb = fwd_bytes(profile, net, i, b, from_client=(n == 0))
+            gb = bwd_bytes(profile, net, i, b, to_client=(n == 0))
+            for m in range(N):
+                if m == n:
+                    continue
+                tf = comm_latency(net, n, m, fb)
+                tb = comm_latency(net, m, n, gb)
+                comm_cost[i, n, m] = tf + tb
+                comm_beta[i, n, m] = max(tf, tb)
+
+    src_cost = seg_cost[0, 0, :].copy()   # client segment (0, i]
+    src_beta = seg_beta[0, 0, :].copy()
+    return MSPGraph(profile=profile, net=net, b=b,
+                    seg_cost=seg_cost, seg_beta=seg_beta,
+                    comm_cost=comm_cost, comm_beta=comm_beta,
+                    src_cost=src_cost, src_beta=src_beta)
+
+
+def graph_stats(g: MSPGraph) -> dict:
+    """Vertex/edge counts of the *paper's* explicit graph (Eqs. 20-21),
+    for complexity reporting (Theorem 3)."""
+    I, N = g.I, g.N
+    vertices = sum(i for i in range(1, I + 1)) * N  # ranges x nodes
+    finite_edges = int(np.isfinite(g.seg_cost).sum()) * (N - 1)
+    return {"paper_vertices": vertices, "paper_edges_upper": finite_edges,
+            "state_edges": int(np.isfinite(g.seg_cost).sum())}
+
+
+def path_to_solution(path: list) -> SplitSolution:
+    """Convert [(node, end_layer), ...] (client first) into a SplitSolution."""
+    cuts = tuple(end for _, end in path)
+    placement = tuple(node for node, _ in path)
+    return SplitSolution(cuts=cuts, placement=placement)

@@ -1,0 +1,126 @@
+"""TPU stage planner — the paper's MSP + micro-batching, aimed at a pod.
+
+Hardware adaptation (DESIGN.md §2): nodes become homogeneous *stage groups*
+(chips x 197 TFLOP/s bf16, 16 GiB HBM each), links become ICI (~50 GB/s), and
+placement is *ordered* (stage k -> group k), so Algorithm 1 runs with
+``restrict_placement = (0, 1, .., S-1)`` — the min-max + min-sum structure
+is unchanged: cuts balance per-stage compute against inter-stage activation
+traffic, and Theorem 1 picks the pipeline micro-batch size.
+
+The planner tries several stage counts (a pod axis can be factored many
+ways) and returns the best plan; ``replan`` re-runs it after an elastic
+event (lost stage group / changed link bandwidth) — this is the paper's BCD
+promoted to a runtime fault-tolerance feature (ft/coordinator.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from .bcd import Plan, bcd_solve
+from .network import (TPU_HBM_BYTES, TPU_ICI_BW, TPU_PEAK_FLOPS, EdgeNetwork,
+                      tpu_stage_network)
+from .profiles import ModelProfile
+from .shortest_path import solve_msp
+from .microbatch import optimal_microbatch
+from . import latency as L
+
+
+@dataclasses.dataclass
+class StagePlan:
+    """Layer ranges per pipeline stage + micro-batching, ready for spmd.py."""
+    layer_ranges: tuple        # ((lo, hi], ...) per stage, 0-based cut points
+    num_stages: int
+    microbatch: int
+    num_microbatches: int
+    T_f: float
+    T_i: float
+    L_t: float
+    bubble_fraction: float     # (T_f - T_i) overhead share, GPipe-style
+    plan: Plan
+
+    def stage_of_layer(self, layer: int) -> int:
+        for s, (lo, hi) in enumerate(self.layer_ranges):
+            if lo <= layer < hi:
+                return s
+        raise ValueError(layer)
+
+
+def _solve_fixed_stages(profile: ModelProfile, net: EdgeNetwork, B: int,
+                        num_stages: int, b0: int) -> Plan | None:
+    # TPU memory semantics: params/optimizer state do NOT scale with the
+    # micro-batch (the paper's Eq. 11 multiplies everything by b, which is
+    # right for its edge servers swapping whole submodels but wrong for
+    # resident pod weights) -> "refined" model.
+    mm = "refined"
+    placement = tuple(range(num_stages))
+    b = max(1, min(b0, B))
+    prev_L = math.inf
+    plan = None
+    for _ in range(8):                       # BCD with ordered placement
+        msp = solve_msp(profile, net, b, B, K=num_stages,
+                        restrict_placement=placement, memory_model=mm)
+        if not msp.feasible:
+            if b > 1:
+                b = max(1, b // 2)
+                continue
+            return None
+        mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
+                                memory_model=mm)
+        if mb.b > 0:
+            b = mb.b
+        L_t = L.total_latency(profile, net, msp.solution, b, B)
+        plan = Plan(solution=msp.solution, b=b, B=B,
+                    T_f=L.fill_latency(profile, net, msp.solution, b),
+                    T_i=L.pipeline_interval(profile, net, msp.solution, b),
+                    L_t=L_t, iterations=1, history=[], solve_seconds=0.0)
+        if abs(prev_L - L_t) < 1e-6 * max(L_t, 1.0):
+            break
+        prev_L = L_t
+    return plan
+
+
+def plan_stages(profile: ModelProfile, *, total_chips: int,
+                stage_candidates: Sequence[int] = (2, 4, 8, 16),
+                global_batch: int = 256, b0: int = 8,
+                peak_flops: float = TPU_PEAK_FLOPS,
+                hbm_bytes: float = TPU_HBM_BYTES,
+                ici_bw: float = TPU_ICI_BW) -> StagePlan:
+    """Pick (num_stages, cuts, micro-batch) minimizing Eq. (14) on a pod."""
+    best: StagePlan | None = None
+    for S in stage_candidates:
+        if S > profile.num_layers or total_chips % S != 0:
+            continue
+        net = tpu_stage_network(S, total_chips // S, peak_flops=peak_flops,
+                                hbm_bytes=hbm_bytes, ici_bw=ici_bw)
+        plan = _solve_fixed_stages(profile, net, global_batch, S, b0)
+        if plan is None:
+            continue
+        sp = _to_stage_plan(plan, S)
+        if best is None or sp.L_t < best.L_t:
+            best = sp
+    if best is None:
+        raise ValueError("no feasible stage plan (model too large per stage?)")
+    return best
+
+
+def _to_stage_plan(plan: Plan, S: int) -> StagePlan:
+    segs = list(plan.solution.segments())
+    ranges = tuple((lo, hi) for _, lo, hi, _ in segs)
+    q = plan.num_microbatches
+    bubble = (plan.L_t - q * plan.T_i) / plan.L_t if plan.L_t > 0 else 0.0
+    return StagePlan(layer_ranges=ranges, num_stages=len(ranges),
+                     microbatch=plan.b, num_microbatches=q,
+                     T_f=plan.T_f, T_i=plan.T_i, L_t=plan.L_t,
+                     bubble_fraction=max(bubble, 0.0), plan=plan)
+
+
+def replan(profile: ModelProfile, *, total_chips: int, global_batch: int,
+           prev: StagePlan | None = None, **kw) -> StagePlan:
+    """Elastic re-plan after a resource change (ft/coordinator.py hook).
+    Seeds BCD with the previous micro-batch size for fast convergence."""
+    b0 = prev.microbatch if prev is not None else 8
+    return plan_stages(profile, total_chips=total_chips,
+                       global_batch=global_batch, b0=b0, **kw)

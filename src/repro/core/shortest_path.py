@@ -1,0 +1,305 @@
+"""Algorithm 1 — bottleneck-aware shortest path for the MSP problem.
+
+The MSP objective (P4) is  min over paths of  T_f(path) + xi(b) * T_1(path)
+with T_1 = the path's bottleneck (max edge beta) — a combined min-sum +
+min-max problem (Minoux 1989).  Exact strategy:
+
+  1. collect the sorted distinct bottleneck values  B = {beta(e)}
+  2. for each candidate threshold t in B (ascending), restrict the graph to
+     edges with beta <= t and run a shortest-path sweep on the layered DAG;
+     objective(t) = dist(t) + xi * t
+  3. answer = min over t.   dist(t) only changes at values of B, so scanning
+     B is exhaustive; two admissible prunings keep the scan short:
+       - binary-search the smallest feasible t (feasibility monotone in t)
+       - break once  dist(full graph) + xi * t >= best   (the paper's
+         lower-bound pruning l_b + xi*w(e) > L_t^*, with l_b the min-sum
+         lower bound; ours is the combinatorial bound from the unrestricted
+         graph — admissible without an LP solver, see DESIGN.md §6)
+
+The sweep itself is a vectorized DP over the layered DAG (the graph of
+msp_graph.py is acyclic in (k, i)), i.e. the role Dijkstra plays in the
+paper.  Restrictions (fixed cuts / fixed placement / ordered TPU stages) are
+expressed as per-segment masks so the same solver powers the RC+OP / RP+OC
+baselines and the TPU stage planner.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Sequence
+
+import numpy as np
+
+from . import latency as L
+from .latency import SplitSolution
+from .msp_graph import MSPGraph, build_graph
+from .network import EdgeNetwork
+from .profiles import ModelProfile
+
+
+@dataclasses.dataclass
+class MSPResult:
+    solution: SplitSolution
+    objective: float        # T_f + xi * T1  as searched (paper objective)
+    T_f: float              # min-sum part of the searched objective
+    T_1: float              # bottleneck of the chosen path (searched beta)
+    L_t: float              # true Eq. (14) latency of the solution
+    T_i_true: float         # true Eq. (13) interval (with co-location sums)
+    b: int
+    B: int
+    thresholds_scanned: int = 0
+    feasible: bool = True
+
+
+class _LayeredDP:
+    """Vectorized shortest-path sweep over the (k, n, i) layered DAG."""
+
+    def __init__(self, g: MSPGraph, K: int,
+                 restrict_cuts: Sequence[int] | None = None,
+                 restrict_placement: Sequence[int] | None = None):
+        self.g = g
+        self.K = K
+        self.N, self.I = g.N, g.I
+        # Dense edge arrays over (n, i, m, j):
+        #   cost[n, i, m, j] = comm_cost[i, n, m] + seg_cost[m, i, j]
+        #   beta[n, i, m, j] = max(comm_beta[i, n, m], seg_beta[m, i, j])
+        I1 = self.I + 1
+        cost = np.empty((self.N, I1, self.N, I1))
+        beta = np.empty((self.N, I1, self.N, I1))
+        cc, cb = g.comm_cost, g.comm_beta   # (I1, N, N) indexed [i, n, m]
+        sc, sb = g.seg_cost, g.seg_beta     # (N, I1, I1) indexed [m, i, j]
+        for n in range(self.N):
+            for m in range(self.N):
+                # cost[n, i, m, j] = cc[i, n, m] + sc[m, i, j]
+                cost[n, :, m, :] = cc[:, n, m][:, None] + sc[m, :, :]
+                beta[n, :, m, :] = np.maximum(cb[:, n, m][:, None], sb[m, :, :])
+        self.cost_e, self.beta_e = cost, beta
+        self.restrict_cuts = tuple(restrict_cuts) if restrict_cuts else None
+        self.restrict_placement = (tuple(restrict_placement)
+                                   if restrict_placement else None)
+
+    # -- masks ---------------------------------------------------------------
+    def _src_allowed(self) -> np.ndarray:
+        ok = np.isfinite(self.g.src_cost)
+        if self.restrict_cuts is not None:
+            sel = np.zeros_like(ok)
+            sel[self.restrict_cuts[0]] = True
+            ok &= sel
+        return ok
+
+    def _edge_allowed(self, k: int) -> np.ndarray:
+        """Mask over (n, i, m, j) for the transition into segment k (2-based)."""
+        ok = np.isfinite(self.cost_e)
+        ok[:, :, 0, :] = False                       # servers only for k >= 2
+        for n in range(self.N):
+            ok[n, :, n, :] = False                   # n' != n (Eq. 21)
+        if self.restrict_cuts is not None:
+            sel = np.zeros_like(ok)
+            prev, cur = self.restrict_cuts[k - 2], self.restrict_cuts[k - 1]
+            sel[:, prev, :, cur] = True
+            ok &= sel
+        if self.restrict_placement is not None:
+            sel = np.zeros_like(ok)
+            prev_n = self.restrict_placement[k - 2]
+            cur_n = self.restrict_placement[k - 1]
+            sel[prev_n, :, cur_n, :] = True
+            ok &= sel
+        return ok
+
+    # -- the sweep -----------------------------------------------------------
+    def run(self, t: float):
+        """Shortest path with all edge betas <= t. Returns (dist, path)."""
+        g = self.g
+        INF = np.inf
+        src_ok = self._src_allowed() & (g.src_beta <= t)
+        dist = np.full((self.N, self.I + 1), INF)
+        dist[0, :] = np.where(src_ok, g.src_cost, INF)
+        parents = []
+        best_val, best_state = INF, None
+        if np.isfinite(dist[0, self.I]):             # client-only path
+            best_val, best_state = float(dist[0, self.I]), (1, 0, self.I)
+        dists = [dist]
+        for k in range(2, self.K + 1):
+            ok = self._edge_allowed(k) & (self.beta_e <= t)
+            cand = np.where(ok, dists[-1][:, :, None, None] + self.cost_e, INF)
+            flat = cand.reshape(-1, self.N, self.I + 1)
+            nd = flat.min(axis=0)
+            parent = flat.argmin(axis=0)             # encodes (n, i)
+            parents.append(parent)
+            dists.append(nd)
+            v = nd[1:, self.I].min() if self.N > 1 else INF
+            if v < best_val:
+                m = 1 + int(nd[1:, self.I].argmin())
+                best_val, best_state = float(v), (k, m, self.I)
+            if not np.isfinite(nd).any():
+                break
+        if best_state is None:
+            return math.inf, None
+        # reconstruct
+        k, n, i = best_state
+        path = [(n, i)]
+        while k >= 2:
+            p = parents[k - 2][n, i]
+            pn, pi = divmod(int(p), self.I + 1)
+            path.append((pn, pi))
+            n, i, k = pn, pi, k - 1
+        path.reverse()
+        return best_val, path
+
+    def all_betas(self) -> np.ndarray:
+        vals = [self.g.src_beta[np.isfinite(self.g.src_beta)]]
+        ok = self._edge_allowed(2)  # structural mask (k-independent when free)
+        if self.restrict_cuts is None and self.restrict_placement is None:
+            vals.append(self.beta_e[ok & np.isfinite(self.beta_e)])
+        else:
+            for k in range(2, self.K + 1):
+                okk = self._edge_allowed(k)
+                vals.append(self.beta_e[okk & np.isfinite(self.beta_e)])
+        v = np.concatenate([np.atleast_1d(x) for x in vals])
+        return np.unique(np.round(v, 12))
+
+
+def solve_msp(profile: ModelProfile, net: EdgeNetwork, b: int, B: int,
+              K: int | None = None, memory_model: str = "paper",
+              restrict_cuts: Sequence[int] | None = None,
+              restrict_placement: Sequence[int] | None = None) -> MSPResult:
+    """Algorithm 1.  Returns the optimal (x, y) for fixed micro-batch b."""
+    if K is None:
+        K = min(1 + net.num_servers, profile.num_layers)
+    g = build_graph(profile, net, b, memory_model)
+    dp = _LayeredDP(g, K, restrict_cuts, restrict_placement)
+    xi = L.num_fills(B, b)
+
+    def finish(dist, path, t_scanned):
+        if path is None:
+            return MSPResult(solution=SplitSolution((profile.num_layers,), (0,)),
+                             objective=math.inf, T_f=math.inf, T_1=math.inf,
+                             L_t=math.inf, T_i_true=math.inf, b=b, B=B,
+                             thresholds_scanned=t_scanned, feasible=False)
+        sol = SplitSolution(cuts=tuple(i for _, i in path),
+                            placement=tuple(n for n, _ in path))
+        T_f = L.fill_latency(profile, net, sol, b)
+        T_i = L.pipeline_interval(profile, net, sol, b)
+        beta_path = _path_bottleneck(g, path)
+        return MSPResult(solution=sol, objective=dist + xi * beta_path,
+                         T_f=T_f, T_1=beta_path, L_t=T_f + xi * T_i,
+                         T_i_true=T_i, b=b, B=B, thresholds_scanned=t_scanned)
+
+    if xi == 0:                                # no pipelining: pure min-sum
+        dist, path = dp.run(math.inf)
+        return finish(dist, path, 1)
+
+    betas = dp.all_betas()
+    if betas.size == 0:
+        return finish(math.inf, None, 0)
+    dist_full, path_full = dp.run(math.inf)
+    if path_full is None:
+        return finish(math.inf, None, 1)
+
+    # binary search the smallest feasible threshold (feasibility monotone in t)
+    lo, hi = 0, len(betas) - 1
+    while lo < hi:
+        mid = (lo + hi) // 2
+        d, _ = dp.run(betas[mid])
+        if math.isfinite(d):
+            hi = mid
+        else:
+            lo = mid + 1
+
+    best, best_pair = math.inf, None
+    scanned = 0
+    for idx in range(lo, len(betas)):
+        t = float(betas[idx])
+        if dist_full + xi * t >= best:        # admissible prune -> break
+            break
+        d, p = dp.run(t)
+        scanned += 1
+        if p is None:
+            continue
+        beta_p = _path_bottleneck(g, p)       # actual path bottleneck <= t
+        obj = d + xi * beta_p
+        if obj < best:
+            best, best_pair = obj, (d, p)
+    if best_pair is None:
+        return finish(math.inf, None, scanned)
+    return finish(best_pair[0], best_pair[1], scanned)
+
+
+def _path_bottleneck(g: MSPGraph, path: list) -> float:
+    """Max component (paper-mode T_1) along a reconstructed path."""
+    (n0, i0) = path[0]
+    beta = float(g.src_beta[i0])
+    prev_n, prev_i = n0, i0
+    for (n, i) in path[1:]:
+        beta = max(beta, g.edge_beta(prev_n, prev_i, n, i))
+        prev_n, prev_i = n, i
+    return beta
+
+
+def path_cost(g: MSPGraph, path: list) -> float:
+    (n0, i0) = path[0]
+    c = float(g.src_cost[i0])
+    prev_n, prev_i = n0, i0
+    for (n, i) in path[1:]:
+        c += g.edge_cost(prev_n, prev_i, n, i)
+        prev_n, prev_i = n, i
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Brute-force verifiers (tests / Fig. 7 "optimal" baseline on small instances)
+# ---------------------------------------------------------------------------
+
+def enumerate_solutions(profile: ModelProfile, net: EdgeNetwork, K: int):
+    """Yield every feasible-shaped SplitSolution (cuts + placement)."""
+    I = profile.num_layers
+    servers = list(net.server_indices())
+    for s in range(1, K + 1):                 # number of non-empty segments
+        for cuts in itertools.combinations(range(1, I), s - 1):
+            cuts = cuts + (I,)
+            if s == 1:
+                yield SplitSolution(cuts=cuts, placement=(0,))
+                continue
+            for placing in itertools.product(servers, repeat=s - 1):
+                placement = (0,) + placing
+                if any(placement[a] == placement[a + 1] for a in range(s - 1)):
+                    continue
+                yield SplitSolution(cuts=cuts, placement=placement)
+
+
+def brute_force_msp(profile: ModelProfile, net: EdgeNetwork, b: int, B: int,
+                    K: int, objective: str = "paper",
+                    memory_model: str = "paper"):
+    """Exhaustive MSP search.  ``objective='paper'`` replicates Algorithm 1's
+    per-segment semantics (for optimality tests); ``'true'`` evaluates the
+    full Eq. (13)/(14) with co-location sums and joint memory (C8)."""
+    xi = L.num_fills(B, b)
+    g = build_graph(profile, net, b, memory_model) if objective == "paper" else None
+    best, best_sol = math.inf, None
+    for sol in enumerate_solutions(profile, net, K):
+        if objective == "paper":
+            path = list(zip(sol.placement, sol.cuts))
+            ok = np.isfinite(g.src_cost[path[0][1]])
+            prev = path[0]
+            cost = float(g.src_cost[path[0][1]])
+            beta = float(g.src_beta[path[0][1]])
+            for (n, i) in path[1:]:
+                c = g.edge_cost(prev[0], prev[1], n, i)
+                if not math.isfinite(c):
+                    ok = False
+                    break
+                cost += c
+                beta = max(beta, g.edge_beta(prev[0], prev[1], n, i))
+                prev = (n, i)
+            if not ok:
+                continue
+            val = cost + xi * beta
+        else:
+            if not L.memory_feasible(profile, net, sol, b, memory_model):
+                continue
+            val = L.total_latency(profile, net, sol, b, B)
+        if val < best:
+            best, best_sol = val, sol
+    return best, best_sol

@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic workloads + the paper's multi-client partition."""
+
+from .synthetic import (token_lm_batches, classification_batches,
+                        dirichlet_partition, ClientDataset, client_datasets)
+
+__all__ = ["token_lm_batches", "classification_batches",
+           "dirichlet_partition", "ClientDataset", "client_datasets"]

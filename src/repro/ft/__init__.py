@@ -1,0 +1,8 @@
+"""Fault tolerance & elasticity: failure detection -> BCD re-plan -> resume,
+and straggler mitigation via Theorem-1 micro-batch re-solving."""
+
+from .coordinator import (Coordinator, NodeFailure, RateChange, Straggler,
+                          ReplanOutcome)
+
+__all__ = ["Coordinator", "NodeFailure", "RateChange", "Straggler",
+           "ReplanOutcome"]

@@ -1,0 +1,137 @@
+"""Elastic coordinator — the paper's BCD promoted to a runtime feature.
+
+Events:
+  NodeFailure(server)  a server drops out -> rebuild the network without it,
+                       re-run Algorithm 2 (BCD), remap submodels, resume
+                       from the latest checkpoint (params are cut-agnostic:
+                       the full model is the unit of state, stages are views)
+  RateChange(n,n',f)   a link's measured rate changed by factor f -> replan
+  Straggler(stage, f)  a stage's observed compute time inflated by factor f
+                       -> first try the cheap fix (Theorem 1: re-solve the
+                       micro-batch size against the new bottleneck T_i);
+                       only if the predicted gain is small, full re-plan
+                       (move a cut across the slow boundary)
+
+Every outcome reports (old_plan, new_plan, predicted latencies) so the
+trainer can decide to pause-and-remap or continue — tests assert that the
+replanned latency is sane (>= within noise of a from-scratch plan, and the
+pipeline stays feasible).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import (EdgeNetwork, ModelProfile, Plan, bcd_solve,
+                        optimal_microbatch, total_latency, pipeline_interval,
+                        fill_latency, num_fills)
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailure:
+    server: int                  # node index in the current network
+
+
+@dataclasses.dataclass(frozen=True)
+class RateChange:
+    n_from: int
+    n_to: int
+    factor: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler:
+    node: int
+    slowdown: float              # f_n -> f_n / slowdown
+
+
+@dataclasses.dataclass
+class ReplanOutcome:
+    event: object
+    old_latency: float
+    new_plan: Plan
+    action: str                  # "microbatch" | "replan" | "none"
+    remapped_stages: bool
+
+
+class Coordinator:
+    """Holds the live (profile, network, plan); applies events."""
+
+    def __init__(self, profile: ModelProfile, net: EdgeNetwork, B: int,
+                 *, theta: float = 0.01, microbatch_gain_threshold: float = 0.95):
+        self.profile = profile
+        self.net = net
+        self.B = B
+        self.theta = theta
+        self.mb_gain_threshold = microbatch_gain_threshold
+        self.plan = bcd_solve(profile, net, B, theta=theta)
+        self.events: list = []
+
+    # -- event application ----------------------------------------------------
+    def apply(self, event) -> ReplanOutcome:
+        old_L = self._current_latency()
+        if isinstance(event, NodeFailure):
+            self.net = self.net.degraded([event.server])
+            outcome = self._full_replan(event, old_L)
+        elif isinstance(event, RateChange):
+            rate = self.net.rate.copy()
+            rate[event.n_from, event.n_to] *= event.factor
+            self.net = dataclasses.replace(self.net, rate=rate)
+            outcome = self._full_replan(event, old_L)
+        elif isinstance(event, Straggler):
+            self.net = dataclasses.replace(
+                self.net,
+                nodes=[dataclasses.replace(n, f=n.f / event.slowdown)
+                       if i == event.node else n
+                       for i, n in enumerate(self.net.nodes)])
+            outcome = self._straggler_mitigation(event, old_L)
+        else:
+            raise TypeError(event)
+        self.events.append(outcome)
+        return outcome
+
+    def _current_latency(self) -> float:
+        try:
+            return total_latency(self.profile, self.net, self.plan.solution,
+                                 self.plan.b, self.B)
+        except Exception:
+            return math.inf
+
+    def _full_replan(self, event, old_L) -> ReplanOutcome:
+        old_sol = self.plan.solution
+        self.plan = bcd_solve(self.profile, self.net, self.B,
+                              b0=max(self.plan.b, 1), theta=self.theta)
+        return ReplanOutcome(
+            event=event, old_latency=old_L, new_plan=self.plan,
+            action="replan",
+            remapped_stages=(self.plan.solution != old_sol))
+
+    def _straggler_mitigation(self, event, old_L) -> ReplanOutcome:
+        """Cheap path first: keep (x, y), re-solve b for the new bottleneck
+        (no weight movement!); fall back to a full re-plan if that recovers
+        too little."""
+        sol = self.plan.solution
+        T_i = pipeline_interval(self.profile, self.net, sol, self.plan.b)
+        mb = optimal_microbatch(self.profile, self.net, sol, self.B, T_i)
+        if mb.b > 0:
+            cheap_L = total_latency(self.profile, self.net, sol, mb.b, self.B)
+        else:
+            cheap_L = math.inf
+        full = bcd_solve(self.profile, self.net, self.B,
+                         b0=max(self.plan.b, 1), theta=self.theta)
+        if math.isfinite(cheap_L) and cheap_L <= full.L_t / self.mb_gain_threshold:
+            self.plan = dataclasses.replace(
+                self.plan, b=mb.b,
+                T_f=fill_latency(self.profile, self.net, sol, mb.b),
+                T_i=pipeline_interval(self.profile, self.net, sol, mb.b),
+                L_t=cheap_L)
+            return ReplanOutcome(event=event, old_latency=old_L,
+                                 new_plan=self.plan, action="microbatch",
+                                 remapped_stages=False)
+        self.plan = full
+        return ReplanOutcome(event=event, old_latency=old_L,
+                             new_plan=self.plan, action="replan",
+                             remapped_stages=True)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots our architectures hit:
+flash attention (prefill) and the RWKV6 chunked WKV scan.  Each ships
+``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling), ``ops.py`` (jit'd
+wrapper) and ``ref.py`` (pure-jnp oracle); validated in interpret mode.
+
+The paper itself has no kernel-level contribution (it is a scheduling
+paper) — these kernels are where the per-stage FLOPs of its pipeline go.
+"""

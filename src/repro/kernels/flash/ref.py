@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel (no Pallas, no tiling)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, S, H, hd); k, v: (B, T, KV, hd) with H % KV == 0.
+    Returns (B, S, H, hd).  fp32 softmax, dense S x T scores."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", probs.astype(q.dtype), v)

@@ -1,0 +1,29 @@
+"""Naive per-token WKV6 recurrence — the oracle for the chunked kernel.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u, S0):
+    """r, k, v, logw: (B, S, H, hd); u: (H, hd); S0: (B, H, hd, hd) fp32.
+    Returns (y (B, S, H, hd) fp32, S_final (B, H, hd, hd) fp32)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S_new = wt[..., None] * S + kv
+        return S_new, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, w))  # (S, B, H, hd)
+    S_fin, ys = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), S_fin

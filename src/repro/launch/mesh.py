@@ -1,0 +1,40 @@
+"""Production meshes.  A FUNCTION, not a module-level constant — importing
+this module never touches jax device state (the dry-run sets the fake
+device count before any jax initialization)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16 x 16 = 256 chips ("data", "model").
+    Multi-pod: 2 x 16 x 16 = 512 chips ("pod", "data", "model") — the "pod"
+    axis carries the cross-pod (DCN-class) gradient reduction."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_pipeline_mesh(*, multi_pod: bool = False, num_stages: int = 4):
+    """Mesh variant for the paper's pipelined train_step: the model axis is
+    factored into ("stage", "model").  16 = num_stages * tp."""
+    assert 16 % num_stages == 0
+    tp = 16 // num_stages
+    if multi_pod:
+        shape, axes = (2, 16, num_stages, tp), ("pod", "data", "stage",
+                                                "model")
+    else:
+        shape, axes = (16, num_stages, tp), ("data", "stage", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes for this mesh ('pod' folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_tag(mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)

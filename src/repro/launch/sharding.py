@@ -1,0 +1,221 @@
+"""Sharding rules: param / batch / cache PartitionSpecs per architecture.
+
+Baseline layout (all 40 roofline cells):
+  - tensor parallel on "model": attention heads, FFN hidden, MoE experts
+    (when E % tp == 0, else the per-expert FFN hidden), vocab/embedding;
+  - fully-sharded (FSDP-style) parameter + optimizer-state storage: the
+    d_model axis additionally shards over ("pod","data") — this is what
+    lets 35B/235B/398B fp32 masters + moments fit 16 GiB chips;
+  - batch over ("pod","data");
+  - decode caches: batch over data axes when divisible, cache length over
+    "model" (sequence-parallel attention; XLA inserts the softmax psums).
+
+Everything is *rules on leaf paths + shapes*, so the same code shards any
+family.  The hillclimbing pass (EXPERIMENTS.md §Perf) edits these rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig
+from .mesh import data_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Knobs the perf pass iterates on."""
+    fsdp: bool = True              # shard d_model of params over data axes
+    shard_vocab: bool = True
+    cache_seq_on_model: bool = True
+    batch_axes: tuple = ("pod", "data")
+
+
+def _divisible(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _data_spec(mesh, policy, dim: int) -> Any:
+    axes = tuple(a for a in policy.batch_axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if _divisible(dim, total) else None
+
+
+def param_spec(cfg: ArchConfig, mesh, path: str, shape: tuple,
+               policy: ShardingPolicy = ShardingPolicy()) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    tp = _axis_size(mesh, "model")
+    dsz = 1
+    for a in policy.batch_axes:
+        dsz *= _axis_size(mesh, a)
+    dax = tuple(a for a in policy.batch_axes if a in mesh.axis_names) or None
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    def fsdp_axis(candidates):
+        """Pick one remaining axis to shard over the data axes (FSDP)."""
+        if not policy.fsdp or dax is None:
+            return None
+        for ax in candidates:
+            if shape[ax] and _divisible(shape[ax], dsz):
+                return ax
+        return None
+
+    spec = [None] * nd
+
+    # --- embeddings / heads -------------------------------------------------
+    if name in ("embed", "tok_embed", "dec_pos"):
+        # vocab on "model" only: FSDP-sharding the d axis as well makes the
+        # token gather unpartitionable (XLA "involuntary full remat" — the
+        # whole (B, S, d) activation replicates per device).  Measured in
+        # EXPERIMENTS.md §Perf iteration 0.
+        if policy.shard_vocab and _divisible(shape[0], tp):
+            spec[0] = "model"
+        return P(*spec)
+    if name == "lm_head":
+        if policy.shard_vocab and _divisible(shape[-1], tp):
+            spec[-1] = "model"
+        ax = fsdp_axis([0])
+        if ax is not None:
+            spec[ax] = dax
+        return P(*spec)
+
+    # --- MoE expert tensors (leading L, then E) ------------------------------
+    if "moe" in path and name in ("w_gate", "w_up", "w_down"):
+        e_ax = nd - 3
+        if _divisible(shape[e_ax], tp):
+            spec[e_ax] = "model"           # expert parallelism
+            ax = fsdp_axis([nd - 2, nd - 1])
+            if ax is not None and spec[ax] is None:
+                spec[ax] = dax
+        else:
+            # per-expert tensor parallelism (e.g. granite's 40 experts on a
+            # 16-wide axis).  NO FSDP here: data-sharding d conflicts with
+            # the batch-sharded dispatch buffer and XLA all-gathers the
+            # whole (B, E*C, d) buffer (60 GiB/device measured on granite
+            # prefill_32k — EXPERIMENTS.md §Perf iteration 0).
+            hid = nd - 1 if name != "w_down" else nd - 2
+            if _divisible(shape[hid], tp):
+                spec[hid] = "model"
+        return P(*spec)
+    if name == "router":
+        if _divisible(shape[-1], tp):
+            spec[-1] = "model"
+        return P(*spec)
+
+    # --- attention / dense FFN / projections (stacked: axis0 = L or P) ------
+    if nd >= 2 and name in ("wq", "wk", "wv", "wg", "wr", "wk2", "wo",
+                            "w_gate", "w_up", "w_down", "ck", "cv", "cr",
+                            "in_proj", "out_proj", "x_proj", "dt_proj",
+                            "x_wq", "x_wk", "x_wv", "x_wo", "conv_w"):
+        out_first = name in ("wo", "w_down", "cv", "out_proj", "x_wo")
+        big = nd - 2 if out_first else nd - 1      # the "parallel" axis
+        other = nd - 1 if out_first else nd - 2
+        if _divisible(shape[big], tp):
+            spec[big] = "model"
+        elif _divisible(shape[other], tp):
+            spec[other] = "model"
+            other = big
+        ax = fsdp_axis([other])
+        if ax is not None and spec[ax] is None:
+            spec[ax] = dax
+        return P(*spec)
+
+    # --- everything else (norms, biases, decay vectors, A_log, ...) ---------
+    return P(*spec)
+
+
+def param_sharding_tree(cfg: ArchConfig, mesh, param_shapes,
+                        policy: ShardingPolicy = ShardingPolicy()):
+    """param_shapes: pytree of ShapeDtypeStructs (jax.eval_shape(init))."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        specs.append(NamedSharding(
+            mesh, param_spec(cfg, mesh, key, leaf.shape, policy)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_sharding_tree(mesh, optimizer_name: str, params_sharding,
+                      params_shapes):
+    """Optimizer-state shardings.  Moment tensors (AdamW m/v, momentum m)
+    inherit the parameter's spec — essential for the fp32-moment memory to
+    shard like FSDP params.  Adafactor's factored stats drop the factored
+    axis from the parameter spec; scalars replicate."""
+    rep = NamedSharding(mesh, P())
+    if optimizer_name == "sgd":
+        return {}
+    if optimizer_name == "momentum":
+        return {"m": params_sharding}
+    if optimizer_name == "adamw":
+        return {"m": params_sharding, "v": params_sharding, "t": rep}
+    if optimizer_name == "adafactor":
+        def leaf(sh, shape_sds):
+            nd = len(shape_sds.shape)
+            spec = list(sh.spec) + [None] * (nd - len(sh.spec))
+            if nd >= 2:
+                return {"vr": NamedSharding(mesh, P(*spec[:-1])),
+                        "vc": NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))}
+            return {"v": NamedSharding(mesh, P(*spec))}
+        f = jax.tree.map(leaf, params_sharding, params_shapes,
+                         is_leaf=lambda x: isinstance(x, NamedSharding))
+        return {"f": f, "t": rep}
+    raise ValueError(optimizer_name)
+
+
+def batch_sharding(cfg: ArchConfig, mesh, batch_shapes,
+                   policy: ShardingPolicy = ShardingPolicy()):
+    """Shard every batch array's leading (batch) dim over the data axes."""
+    def spec_for(s):
+        nd = len(s.shape)
+        bspec = _data_spec(mesh, policy, s.shape[0])
+        return NamedSharding(mesh, P(bspec, *([None] * (nd - 1))))
+    return jax.tree.map(spec_for, batch_shapes)
+
+
+def cache_sharding(cfg: ArchConfig, mesh, cache_shapes,
+                   policy: ShardingPolicy = ShardingPolicy()):
+    """Decode caches: (L/P, B, T, kv, hd) KV tensors -> batch over data,
+    T over "model" (sequence-parallel); SSM/conv states -> batch over data,
+    feature dim over "model" when divisible."""
+    tp = _axis_size(mesh, "model")
+
+    def spec_for(s):
+        sh = s.shape
+        nd = len(sh)
+        spec = [None] * nd
+        if nd >= 2:
+            spec[1] = _data_spec(mesh, policy, sh[1])    # batch dim
+        if nd == 5:                                      # (L, B, T, kv, hd)
+            if policy.cache_seq_on_model and _divisible(sh[2], tp):
+                spec[2] = "model"
+            elif _divisible(sh[3], tp):
+                spec[3] = "model"
+        elif nd == 4:                                    # (L, B, X, Y) states
+            if _divisible(sh[3], tp):
+                spec[3] = "model"
+            elif _divisible(sh[2], tp):
+                spec[2] = "model"
+        elif nd == 3 and _divisible(sh[2], tp):
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(spec_for, cache_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,7 @@
+"""All-JAX model zoo: scan-over-layers LMs for every assigned architecture
+(+ VGG-16 for the paper's own edge-SL workload)."""
+
+from .common import ArchConfig
+from .registry import ModelAPI, get_model
+
+__all__ = ["ArchConfig", "ModelAPI", "get_model"]

@@ -1,0 +1,240 @@
+"""Jamba-style hybrid: Mamba + attention (1:attn_every interleave) + MoE.
+
+Layer i:  mixer = attention   if i % attn_every == attn_every-1 else Mamba
+          ffn   = MoE         if i % moe_every == moe_every-1  else dense MLP
+
+The stack is scanned over *periods* of ``attn_every`` layers (Jamba-1.5:
+72 layers = 9 periods of 8), with the in-period structure unrolled — params
+are stacked per slot on a leading period axis, so the HLO contains one
+period body regardless of depth.  Heterogeneous per-layer profiles are
+exactly what makes the paper's MSP planner interesting for this arch
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ArchConfig, cross_entropy, dense_init, embed_init,
+                     remat_wrap, rms_norm)
+from . import mamba as mamba_lib
+from . import moe as moe_lib
+from . import transformer as tf_lib
+
+
+def num_periods(cfg: ArchConfig) -> int:
+    assert cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def _slot_kinds(cfg: ArchConfig):
+    """[(mixer, ffn)] for the attn_every slots inside one period."""
+    kinds = []
+    for j in range(cfg.attn_every):
+        mixer = "attn" if j == cfg.attn_every - 1 else "mamba"
+        ffn = "moe" if (j % cfg.moe_every) == (cfg.moe_every - 1) else "mlp"
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+def init_slot_params(key, cfg: ArchConfig, mixer: str, ffn: str):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    p = {}
+    if mixer == "attn":
+        attn_cfg = cfg
+        base = tf_lib.init_layer_params(ks[0], attn_cfg)
+        # keep only the attention part; ffn handled below
+        p.update({k: v for k, v in base.items()
+                  if k in ("ln1", "wq", "wk", "wv", "wo", "q_norm", "k_norm",
+                           "bq", "bk", "bv")})
+    else:
+        p["mamba"] = mamba_lib.init_mamba_params(ks[1], cfg)
+    p["ln2"] = jnp.ones((d,), cfg.param_dtype)
+    if ffn == "moe":
+        p["moe"] = moe_lib.init_moe_params(ks[2], cfg)
+    else:
+        p["w_gate"] = dense_init(ks[3], (d, ff), cfg.param_dtype)
+        p["w_up"] = dense_init(ks[4], (d, ff), cfg.param_dtype)
+        p["w_down"] = dense_init(ks[5], (ff, d), cfg.param_dtype)
+    return p
+
+
+def init_params(rng, cfg: ArchConfig):
+    P = num_periods(cfg)
+    kinds = _slot_kinds(cfg)
+    k_emb, k_head, *slot_keys = jax.random.split(rng, 2 + len(kinds))
+    period = {}
+    for j, ((mixer, ffn), sk) in enumerate(zip(kinds, slot_keys)):
+        per_keys = jax.random.split(sk, P)
+        period[f"slot{j}"] = jax.vmap(
+            lambda k: init_slot_params(k, cfg, mixer, ffn))(per_keys)
+    return {
+        "embed": embed_init(k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype),
+        "periods": period,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab),
+                              cfg.param_dtype),
+    }
+
+
+def _ffn(p, x, cfg, ffn):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if ffn == "moe":
+        return x + moe_lib.moe_ffn(p["moe"], h, cfg)
+    y = jax.nn.silu(h @ p["w_gate"].astype(h.dtype)) * \
+        (h @ p["w_up"].astype(h.dtype))
+    return x + y @ p["w_down"].astype(h.dtype)
+
+
+def _attn_mixer(p, x, cfg, *, positions, mode, cache, pos):
+    """Attention sub-block reusing transformer.block_fwd internals."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = tf_lib._project_qkv(p, h, cfg)
+    # Jamba uses no positional encoding in attention (Mamba provides order)
+    if mode == "decode":
+        from .common import decode_attention
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v.astype(vc.dtype), pos, axis=1)
+        attn = decode_attention(q, kc, vc, pos)
+        new_cache = (kc, vc)
+    else:
+        from .common import chunked_attention, full_attention
+        g = cfg.q_per_kv
+        kf = jnp.repeat(k, g, axis=2) if g > 1 else k
+        vf = jnp.repeat(v, g, axis=2) if g > 1 else v
+        S = x.shape[1]
+        if S > cfg.attn_chunk:
+            attn = chunked_attention(q, kf, vf, causal=True,
+                                     chunk=cfg.attn_chunk)
+        else:
+            attn = full_attention(q, kf, vf, causal=True)
+        new_cache = (k, v)
+    B, S = x.shape[:2]
+    attn = attn.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return x + attn @ p["wo"].astype(x.dtype), new_cache
+
+
+def period_fwd(period_params, x, cfg: ArchConfig, *, mode="train",
+               caches=None, pos=None):
+    """Run one period (attn_every layers).  caches: dict with
+    'kv' (k, v) for the attention slot and 'mamba{j}' states."""
+    kinds = _slot_kinds(cfg)
+    new_caches = {}
+    positions = jnp.arange(x.shape[1]) if pos is None else None
+    # per-slot remat (in addition to the per-period wrap): bounds backward
+    # residuals to ONE layer at a time — a 7-mamba-layer period's residuals
+    # otherwise coexist (measured ~35 GiB/device on jamba-398b).
+    inner_remat = (mode == "train" and cfg.remat != "none")
+    for j, (mixer, ffn) in enumerate(kinds):
+        p = period_params[f"slot{j}"]
+        if mixer == "attn":
+            cache = caches.get("kv") if caches else None
+            x, new_kv = _attn_mixer(p, x, cfg, positions=positions,
+                                    mode=mode, cache=cache, pos=pos)
+            new_caches["kv"] = new_kv
+        else:
+            state = caches.get(f"mamba{j}") if caches else None
+            mfwd = (jax.checkpoint(
+                        lambda pp, xx: mamba_lib.mamba_fwd(pp, xx, cfg,
+                                                           state=None))
+                    if inner_remat else
+                    lambda pp, xx: mamba_lib.mamba_fwd(pp, xx, cfg,
+                                                       state=state))
+            x, new_state = mfwd(p["mamba"], x)
+            new_caches[f"mamba{j}"] = new_state
+        if inner_remat:
+            x = jax.checkpoint(lambda pp, xx: _ffn(pp, xx, cfg, ffn))(p, x)
+        else:
+            x = _ffn(p, x, cfg, ffn)
+    return x, new_caches
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    body = remat_wrap(
+        lambda x, pp: period_fwd(pp, x, cfg, mode="train")[0], cfg.remat)
+    x, _ = jax.lax.scan(lambda c, pp: (body(c, pp), None), x,
+                        params["periods"])
+    return x
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    x = forward_hidden(params, batch["tokens"], cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return cross_entropy(logits, batch["labels"])
+
+
+def make_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    P = num_periods(cfg)
+    di, ds, dc = (mamba_lib.d_inner(cfg), cfg.mamba_d_state,
+                  cfg.mamba_d_conv)
+    cache = {
+        "k": jnp.zeros((P, batch, cache_len, cfg.n_kv, cfg.head_dim),
+                       cfg.compute_dtype),
+        "v": jnp.zeros((P, batch, cache_len, cfg.n_kv, cfg.head_dim),
+                       cfg.compute_dtype),
+    }
+    for j, (mixer, _) in enumerate(_slot_kinds(cfg)):
+        if mixer == "mamba":
+            cache[f"m{j}_conv"] = jnp.zeros((P, batch, dc - 1, di),
+                                            cfg.compute_dtype)
+            cache[f"m{j}_h"] = jnp.zeros((P, batch, di, ds), jnp.float32)
+    return cache
+
+
+def _caches_from_slices(cfg, sl):
+    caches = {"kv": (sl["k"], sl["v"])}
+    for j, (mixer, _) in enumerate(_slot_kinds(cfg)):
+        if mixer == "mamba":
+            caches[f"mamba{j}"] = (sl[f"m{j}_conv"], sl[f"m{j}_h"])
+    return caches
+
+
+def _slices_from_caches(cfg, new):
+    out = {"k": new["kv"][0], "v": new["kv"][1]}
+    for j, (mixer, _) in enumerate(_slot_kinds(cfg)):
+        if mixer == "mamba":
+            out[f"m{j}_conv"] = new[f"mamba{j}"][0]
+            out[f"m{j}_h"] = new[f"mamba{j}"][1]
+    return out
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache_len: int):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    B, S = tokens.shape
+
+    def scan_body(c, pp):
+        y, new = period_fwd(pp, c, cfg, mode="prefill", caches=None)
+        k, v = new["kv"]
+        pad = cache_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.compute_dtype)
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.compute_dtype)
+        new["kv"] = (k, v)
+        return y, _slices_from_caches(cfg, new)
+
+    x, cache = jax.lax.scan(scan_body, x, params["periods"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, cache
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig):
+    x = params["embed"].astype(cfg.compute_dtype)[token]
+
+    def scan_body(c, layer):
+        pp, sl = layer
+        caches = _caches_from_slices(cfg, sl)
+        y, new = period_fwd(pp, c, cfg, mode="decode", caches=caches,
+                            pos=pos)
+        return y, _slices_from_caches(cfg, new)
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["periods"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, new_cache

@@ -1,0 +1,154 @@
+"""Mamba (selective SSM) block — the Jamba hybrid's attention-free layer.
+
+Mamba-1 structure: in-proj -> depthwise causal conv -> selective SSM
+(input-dependent delta/B/C, diagonal A) -> gate -> out-proj.  The selective
+scan runs through ``chunked_linear_scan`` so the (B, S, d_inner, d_state)
+state tensor never materializes beyond one time-chunk — the TPU-friendly
+chunked formulation (DESIGN.md hardware adaptation).
+
+Decode keeps (conv_state, ssm_state) per layer: the "KV cache" of an SSM is
+O(1) in sequence length, which is why jamba/rwkv run the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, chunked_linear_scan, dense_init
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.mamba_expand * cfg.d_model
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba_params(key, cfg: ArchConfig):
+    d, di, ds, dc = cfg.d_model, d_inner(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), cfg.param_dtype),
+        "conv_w": dense_init(ks[1], (dc, di), cfg.param_dtype, in_axis=0),
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), cfg.param_dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), cfg.param_dtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.param_dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(cfg.param_dtype),
+        "D": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": dense_init(ks[4], (di, d), cfg.param_dtype),
+        "norm": jnp.ones((d,), cfg.param_dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv along time.  x: (B, S, di), w: (dc, di).
+
+    ``state``: (B, dc-1, di) tail of the previous segment (decode);
+    returns (y, new_state).
+    """
+    dc = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(x_pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(dc))
+    new_state = x_pad[:, -(dc - 1):, :] if dc > 1 else None
+    return y + b[None, None, :], new_state
+
+
+def mamba_fwd(p, x, cfg: ArchConfig, *, state=None):
+    """x: (B, S, d) -> (B, S, d).  ``state``: (conv_state, h) or None.
+
+    With S == 1 and a state, this is the O(1) decode step.
+    """
+    from .common import rms_norm
+    B, S, d = x.shape
+    di, ds = d_inner(cfg), cfg.mamba_d_state
+    h0 = None
+    conv_state = None
+    if state is not None:
+        conv_state, h0 = state
+
+    res = x
+    x = rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, new_conv = _causal_conv(xin, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xin = jax.nn.silu(xin)
+
+    proj = xin @ p["x_proj"].astype(x.dtype)
+    dtr = dt_rank(cfg)
+    dt, Bv, Cv = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(x.dtype) +
+                         p["dt_bias"].astype(x.dtype))        # (B, S, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (di, ds)
+
+    # discretize: a = exp(dt*A), u = dt * B * x   (ZOH for A, Euler for B)
+    from jax.sharding import PartitionSpec as P
+    from .common import maybe_constrain
+    dt = maybe_constrain(dt, P(("pod", "data"), None, "model"))
+    xin = maybe_constrain(xin, P(("pod", "data"), None, "model"))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+    Cf = Cv.astype(jnp.float32)
+    if S == 1:
+        a1 = jnp.exp(dt.astype(jnp.float32)[:, 0, :, None] * A[None])
+        u1 = (dt * xin).astype(jnp.float32)[:, 0, :, None] * \
+            Bv.astype(jnp.float32)[:, 0, None, :]
+        h = a1 * h0 + u1
+        h_last = h
+        y = jnp.einsum("bdn,bn->bd", h, Cf[:, 0])[:, None]      # (B,1,di)
+    else:
+        # Chunked selective scan, FULLY streaming: discretization (a, u),
+        # the associative scan, and the C-readout all happen inside one
+        # chunk — nothing (B, S, di, ds)-shaped ever materializes, neither
+        # as scan xs nor as outputs.  (Full-sequence a/u cost ~0.5 GB/device
+        # *per mamba layer* on jamba-398b; states-sequence materialization
+        # cost ~270 GB/device — EXPERIMENTS.md §Perf iteration 0.)
+        chunk = min(cfg.scan_chunk, S)
+        while S % chunk != 0:
+            chunk //= 2
+        chunk = max(chunk, 1)
+        n = S // chunk
+        resh = lambda t: t.reshape((B, n, chunk) + t.shape[2:]).swapaxes(0, 1)
+        dt_c, xin_c, B_c, C_c = (resh(t) for t in (dt, xin, Bv, Cf))
+
+        def combine(c1, c2):
+            a1, u1 = c1
+            a2, u2 = c2
+            return a1 * a2, a2 * u1 + u2
+
+        def step(h, inp):
+            dt_k, xin_k, B_k, C_k = inp                # (B, chunk, di) / ds
+            a_k = jnp.exp(dt_k.astype(jnp.float32)[..., None] * A[None, None])
+            u_k = (dt_k * xin_k).astype(jnp.float32)[..., None] * \
+                B_k.astype(jnp.float32)[..., None, :]  # (B, chunk, di, ds)
+            aa, uu = jax.lax.associative_scan(combine, (a_k, u_k), axis=1)
+            h_all = aa * h[:, None] + uu
+            y_k = jnp.einsum("bcdn,bcn->bcd", h_all, C_k)
+            return h_all[:, -1], y_k
+
+        step = jax.checkpoint(step)
+        h_last, y = jax.lax.scan(step, h0, (dt_c, xin_c, B_c, C_c))
+        y = y.swapaxes(0, 1).reshape(B, S, di)
+    y = y.astype(x.dtype) + xin * p["D"].astype(x.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    out = res + y @ p["out_proj"].astype(x.dtype)
+    return out, (new_conv, h_last)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int):
+    di, ds, dc = d_inner(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
+    conv = jnp.zeros((batch, dc - 1, di), cfg.compute_dtype)
+    h = jnp.zeros((batch, di, ds), jnp.float32)
+    return conv, h

@@ -1,0 +1,91 @@
+"""Uniform model API over all families — used by the trainer, the server,
+the dry-run, and the pipeline runtime.
+
+    api = get_model(cfg)
+    loss = api.loss(params, batch)                  # batch: dict of arrays
+    logits, cache = api.prefill(params, batch, cache_len)
+    logits, cache = api.decode(params, cache, token, pos)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig
+from . import jamba as jamba_lib
+from . import rwkv6 as rwkv_lib
+from . import transformer as tf_lib
+from . import vlm as vlm_lib
+from . import whisper as whisper_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable            # (rng) -> params
+    loss: Callable            # (params, batch) -> scalar
+    prefill: Callable         # (params, batch, cache_len) -> (logits, cache)
+    decode: Callable          # (params, cache, token, pos) -> (logits, cache)
+    make_cache: Callable      # (batch_size, cache_len) -> cache pytree
+
+    def param_count(self, params) -> int:
+        return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: tf_lib.init_params(rng, cfg),
+            loss=lambda p, b: tf_lib.loss_fn(p, b, cfg),
+            prefill=lambda p, b, n: tf_lib.prefill(p, b["tokens"], cfg, n),
+            decode=lambda p, c, t, pos: tf_lib.decode_step(p, c, t, pos, cfg),
+            make_cache=lambda bs, n: tf_lib.make_cache(cfg, bs, n),
+        )
+    if fam == "vlm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: vlm_lib.init_params(rng, cfg),
+            loss=lambda p, b: vlm_lib.loss_fn(p, b, cfg),
+            prefill=lambda p, b, n: vlm_lib.prefill(
+                p, b["tokens"], b["patch_embeds"], cfg, n),
+            decode=lambda p, c, t, pos: vlm_lib.decode_step(p, c, t, pos, cfg),
+            make_cache=lambda bs, n: vlm_lib.make_cache(cfg, bs, n),
+        )
+    if fam == "hybrid":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: jamba_lib.init_params(rng, cfg),
+            loss=lambda p, b: jamba_lib.loss_fn(p, b, cfg),
+            prefill=lambda p, b, n: jamba_lib.prefill(p, b["tokens"], cfg, n),
+            decode=lambda p, c, t, pos: jamba_lib.decode_step(
+                p, c, t, pos, cfg),
+            make_cache=lambda bs, n: jamba_lib.make_cache(cfg, bs, n),
+        )
+    if fam == "ssm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: rwkv_lib.init_params(rng, cfg),
+            loss=lambda p, b: rwkv_lib.loss_fn(p, b, cfg),
+            prefill=lambda p, b, n: rwkv_lib.prefill(p, b["tokens"], cfg, n),
+            decode=lambda p, c, t, pos: rwkv_lib.decode_step(
+                p, c, t, pos, cfg),
+            make_cache=lambda bs, n: rwkv_lib.init_state(cfg, bs),
+        )
+    if fam == "audio":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: whisper_lib.init_params(rng, cfg),
+            loss=lambda p, b: whisper_lib.loss_fn(p, b, cfg),
+            prefill=lambda p, b, n: whisper_lib.prefill(
+                p, b["frames"], b["tokens"], cfg, n),
+            decode=lambda p, c, t, pos: whisper_lib.decode_step(
+                p, c, t, pos, cfg),
+            make_cache=lambda bs, n: whisper_lib.make_cache(cfg, bs, n),
+        )
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,278 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay.
+
+Per layer: time-mix (the WKV linear-attention recurrence) + channel-mix.
+The WKV recurrence per head (state S in R^{hd x hd}):
+
+    S_t = diag(w_t) S_{t-1} + k_t  v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with per-channel decay w_t in (0,1) produced *from the input* via a LoRA
+(the "data-dependent decay" that distinguishes RWKV6 from RWKV4/5).
+
+Training uses the chunked-parallel formulation (never materializing all S_t):
+within a chunk of length C, with L_t = cumsum(log w),
+
+    y_t = (r_t . exp(L_{t-1})) S_0                       (cross-chunk)
+        + sum_{tau<t} exp(L_{t-1}-L_tau) (r_t.k_tau) v_tau   (intra, C x C)
+        + (r_t . u . k_t) v_t                            (current token)
+    S_C = exp(L_C) S_0 + sum_tau exp(L_C - L_tau) k_tau v_tau^T
+
+All exponents are differences of a non-increasing L — bounded <= 0 — so the
+chunk math is overflow-safe.  ``kernels/rwkv6`` implements the same chunk
+body as a Pallas TPU kernel; this jnp version is its oracle and the default
+CPU path.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, cross_entropy, dense_init, embed_init, rms_norm
+
+
+LORA_RANK = 32
+
+
+def num_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_layer_params(key, cfg: ArchConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 16)
+    mix = {f"mu_{n}": jnp.full((d,), 0.5, cfg.param_dtype)
+           for n in ("w", "k", "v", "r", "g")}
+    lora = {
+        "w_lora_a": dense_init(ks[0], (d, LORA_RANK), cfg.param_dtype),
+        "w_lora_b": dense_init(ks[1], (LORA_RANK, d), cfg.param_dtype),
+        "w0": jnp.full((d,), -6.0, cfg.param_dtype),   # slow default decay
+    }
+    return {
+        "ln1": jnp.ones((d,), cfg.param_dtype),
+        "ln2": jnp.ones((d,), cfg.param_dtype),
+        **mix, **lora,
+        "wr": dense_init(ks[2], (d, d), cfg.param_dtype),
+        "wk": dense_init(ks[3], (d, d), cfg.param_dtype),
+        "wv": dense_init(ks[4], (d, d), cfg.param_dtype),
+        "wg": dense_init(ks[5], (d, d), cfg.param_dtype),
+        "wo": dense_init(ks[6], (d, d), cfg.param_dtype),
+        "u": jnp.zeros((d,), cfg.param_dtype),         # per-channel bonus
+        "gn_scale": jnp.ones((d,), cfg.param_dtype),
+        # channel mix
+        "mu_ck": jnp.full((d,), 0.5, cfg.param_dtype),
+        "mu_cr": jnp.full((d,), 0.5, cfg.param_dtype),
+        "ck": dense_init(ks[7], (d, ff), cfg.param_dtype),
+        "cv": dense_init(ks[8], (ff, d), cfg.param_dtype),
+        "cr": dense_init(ks[9], (d, d), cfg.param_dtype),
+    }
+
+
+def init_params(rng, cfg: ArchConfig):
+    k_emb, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer_params(k, cfg))(layer_keys)
+    return {
+        "embed": embed_init(k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab),
+                              cfg.param_dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """(B, S, d) -> previous-token tensor; ``prev``: (B, 1, d) carry."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _heads(x, hd):
+    B, S, d = x.shape
+    return x.reshape(B, S, d // hd, hd)
+
+
+def wkv_chunked(r, k, v, logw, u, S0, chunk: int):
+    """The chunked WKV recurrence.  All inputs (B, S, H, hd) except
+    u (H, hd) and S0 (B, H, hd, hd).  Returns (y, S_final)."""
+    B, S, H, hd = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    resh = lambda x: x.reshape(B, n, chunk, H, hd).swapaxes(0, 1)
+    r_c, k_c, v_c, lw_c = map(resh, (r, k, v, logw))
+
+    def step(S_prev, inp):
+        rc, kc, vc, lwc = (t.astype(jnp.float32) for t in inp)  # (B,C,H,hd)
+        L = jnp.cumsum(lwc, axis=1)                      # L_t (inclusive)
+        Lm1 = L - lwc                                    # L_{t-1}
+        q = rc * jnp.exp(Lm1)                            # decayed queries
+        kd = kc * jnp.exp(L[:, -1:,] - L)                # keys to chunk end
+        # cross-chunk term: q @ S_prev
+        y_cross = jnp.einsum("bchk,bhkv->bchv", q, S_prev)
+        # intra-chunk: A[t,tau] = sum_k q[t] * k[tau] * exp(-L_tau), tau < t
+        att = jnp.einsum("bchk,bThk->bhcT", q, kc * jnp.exp(-L))
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhcT,bThv->bchv", att, vc)
+        # current token bonus
+        y_diag = jnp.einsum("bchk,bchk->bch", rc, u[None, None] * kc)
+        y_diag = y_diag[..., None] * vc
+        y = y_cross + y_intra + y_diag
+        # state update to chunk end (decay acts on the k-dim rows of S)
+        S_new = jnp.exp(L[:, -1])[..., None] * S_prev
+        S_new = S_new + jnp.einsum("bThk,bThv->bhkv", kd, vc)
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(step, S0.astype(jnp.float32),
+                             (r_c, k_c, v_c, lw_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, hd)
+    return y, S_fin
+
+
+def time_mix(p, x, cfg: ArchConfig, *, shift_state=None, wkv_state=None):
+    """Returns (y, (new_shift, new_wkv))."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    prev = shift_state if shift_state is not None else \
+        jnp.zeros((B, 1, d), x.dtype)
+    xx = _token_shift(x, prev)
+
+    def mixed(name):
+        mu = p[f"mu_{name}"].astype(x.dtype)
+        return x + (xx - x) * mu
+
+    xw, xk, xv, xr, xg = (mixed(n) for n in ("w", "k", "v", "r", "g"))
+    r = _heads(xr @ p["wr"].astype(x.dtype), hd)
+    k = _heads(xk @ p["wk"].astype(x.dtype), hd)
+    v = _heads(xv @ p["wv"].astype(x.dtype), hd)
+    g = xg @ p["wg"].astype(x.dtype)
+
+    # data-dependent decay (the RWKV6 LoRA): w in (0,1), logw <= 0
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)) @ \
+        p["w_lora_b"].astype(x.dtype)
+    logw = -jnp.exp((p["w0"].astype(jnp.float32) +
+                     lora.astype(jnp.float32)))
+    logw = _heads(logw, hd)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+
+    S0 = wkv_state if wkv_state is not None else \
+        jnp.zeros((B, H, hd, hd), jnp.float32)
+    if S == 1:
+        # decode: one recurrence step
+        rf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+        lw = logw[:, 0].astype(jnp.float32)
+        y = jnp.einsum("bhk,bhkv->bhv", rf, S0) + \
+            jnp.einsum("bhk,bhk->bh", rf, u[None] * kf)[..., None] * vf
+        S_new = jnp.exp(lw)[..., None] * S0 + \
+            jnp.einsum("bhk,bhv->bhkv", kf, vf)
+        y = y[:, None]
+    else:
+        chunk = min(cfg.scan_chunk, S)
+        while S % chunk != 0:
+            chunk //= 2
+        if cfg.use_pallas:
+            from repro.kernels.rwkv6.ops import wkv6 as wkv_kernel
+            y, S_new = wkv_kernel(r, k, v, logw, u, S0, chunk=max(chunk, 1))
+        else:
+            y, S_new = wkv_chunked(r, k, v, logw, u, S0, chunk=max(chunk, 1))
+
+    y = y.reshape(B, S, d)
+    # per-head group norm
+    y = y.reshape(B, S, H, hd)
+    y = (y - y.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        y.var(-1, keepdims=True) + 64e-5)
+    y = y.reshape(B, S, d) * p["gn_scale"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = y @ p["wo"].astype(x.dtype)
+    return out, (x[:, -1:], S_new)
+
+
+def channel_mix(p, x, cfg: ArchConfig, *, shift_state=None):
+    B, S, d = x.shape
+    prev = shift_state if shift_state is not None else \
+        jnp.zeros((B, 1, d), x.dtype)
+    xx = _token_shift(x, prev)
+    xk = x + (xx - x) * p["mu_ck"].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_cr"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["cr"].astype(x.dtype)) * \
+        (kk @ p["cv"].astype(x.dtype))
+    return out, x[:, -1:]
+
+
+def block_fwd(p, x, cfg: ArchConfig, *, state=None):
+    """state: (shift_tm, wkv, shift_cm) or None (train)."""
+    s_tm = s_wkv = s_cm = None
+    if state is not None:
+        s_tm, s_wkv, s_cm = state
+    h, (new_tm, new_wkv) = time_mix(p, rms_norm(x, p["ln1"], cfg.norm_eps),
+                                    cfg, shift_state=s_tm, wkv_state=s_wkv)
+    x = x + h
+    h, new_cm = channel_mix(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+                            shift_state=s_cm)
+    x = x + h
+    return x, (new_tm, new_wkv, new_cm)
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig):
+    from .common import remat_wrap
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    body = remat_wrap(lambda x, pl: block_fwd(pl, x, cfg)[0], cfg.remat)
+    x, _ = jax.lax.scan(lambda c, pl: (body(c, pl), None), x,
+                        params["layers"])
+    return x
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    x = forward_hidden(params, batch["tokens"], cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_state(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    L = cfg.num_layers
+    return {
+        "shift_tm": jnp.zeros((L, batch, 1, d), cfg.compute_dtype),
+        "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        "shift_cm": jnp.zeros((L, batch, 1, d), cfg.compute_dtype),
+    }
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache_len: int = 0):
+    """Returns (last logits, state).  cache_len unused (state is O(1))."""
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+
+    def scan_body(c, pl):
+        y, st = block_fwd(pl, c, cfg, state=None)
+        return y, st
+
+    x, states = jax.lax.scan(scan_body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, {"shift_tm": states[0], "wkv": states[1],
+                    "shift_cm": states[2]}
+
+
+def decode_step(params, state, token, pos, cfg: ArchConfig):
+    x = params["embed"].astype(cfg.compute_dtype)[token]
+
+    def scan_body(c, layer):
+        pl, s_tm, s_wkv, s_cm = layer
+        y, st = block_fwd(pl, c, cfg, state=(s_tm, s_wkv, s_cm))
+        return y, st
+
+    x, states = jax.lax.scan(
+        scan_body, x,
+        (params["layers"], state["shift_tm"], state["wkv"],
+         state["shift_cm"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, {"shift_tm": states[0], "wkv": states[1],
+                    "shift_cm": states[2]}

@@ -1,0 +1,75 @@
+"""VGG-16 on 32x32 inputs — the paper's own workload (Figs. 1, 4-8).
+
+Small enough to run on CPU; used by the pipelined-SL executor demo
+(examples/train_pipeline_sl.py), the split-learning integration tests, and
+as the reference whose analytical profile is core.profiles.vgg16_profile.
+The 16 "layers" match the paper's I = 16 (13 conv + 3 fc); pools fold into
+the following conv, exactly as the profile assumes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import cross_entropy, dense_init
+
+
+# (kind, out_channels, pool_before) mirroring core.profiles._VGG16_LAYERS
+LAYERS = (
+    ("conv", 64, False), ("conv", 64, False),
+    ("conv", 128, True), ("conv", 128, False),
+    ("conv", 256, True), ("conv", 256, False), ("conv", 256, False),
+    ("conv", 512, True), ("conv", 512, False), ("conv", 512, False),
+    ("conv", 512, True), ("conv", 512, False), ("conv", 512, False),
+    ("fc", 4096, True), ("fc", 4096, False), ("fc", 10, False),
+)
+
+
+def init_params(rng, dtype=jnp.float32):
+    params = []
+    in_c, hw = 3, 32
+    keys = jax.random.split(rng, len(LAYERS))
+    for key, (kind, out_c, pool) in zip(keys, LAYERS):
+        if pool:
+            hw //= 2
+        if kind == "conv":
+            w = dense_init(key, (3, 3, in_c, out_c), dtype, in_axis=2) \
+                / 3.0  # fan-in includes the 3x3 window
+            params.append({"w": w, "b": jnp.zeros((out_c,), dtype)})
+            in_c = out_c
+        else:
+            fan_in = in_c * hw * hw if hw > 1 else in_c
+            w = dense_init(key, (fan_in, out_c), dtype)
+            params.append({"w": w, "b": jnp.zeros((out_c,), dtype)})
+            in_c, hw = out_c, 1
+    return params
+
+
+def layer_fwd(i: int, p, x):
+    """Apply layer i (with its preceding pool, if any)."""
+    kind, out_c, pool = LAYERS[i]
+    if pool and x.ndim == 4:
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    if kind == "conv":
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(x + p["b"])
+    if x.ndim == 4:
+        x = x.reshape(x.shape[0], -1)
+    x = x @ p["w"] + p["b"]
+    return jax.nn.relu(x) if i < len(LAYERS) - 1 else x
+
+
+def forward(params, x, lo: int = 0, hi: int = len(LAYERS)):
+    """Run layers [lo, hi) — the *submodel* abstraction of split learning."""
+    for i in range(lo, hi):
+        x = layer_fwd(i, params[i], x)
+    return x
+
+
+def loss_fn(params, batch):
+    logits = forward(params, batch["images"])
+    return cross_entropy(logits[:, None, :], batch["labels"][:, None])

@@ -1,0 +1,30 @@
+"""VLM backbone (internvl2-1b class): LM transformer + stubbed ViT frontend.
+
+Per the assignment, only the transformer BACKBONE is modeled; the vision
+encoder is a stub whose output — precomputed patch embeddings
+(B, patch_tokens, d_model) — arrives via ``input_specs``.  Patches are
+prepended to the token embeddings; loss is computed on the text positions
+only.  Decode is identical to the plain transformer (patches live at the
+head of the KV cache after prefill).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import ArchConfig
+from . import transformer as tf
+
+
+init_params = tf.init_params
+make_cache = tf.make_cache
+decode_step = tf.decode_step
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    return tf.loss_fn(params, batch, cfg)   # handles batch["patch_embeds"]
+
+
+def prefill(params, tokens, patch_embeds, cfg: ArchConfig, cache_len: int):
+    return tf.prefill(params, tokens, cfg, cache_len,
+                      extra_embeds=patch_embeds)

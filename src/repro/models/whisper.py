@@ -1,0 +1,254 @@
+"""Whisper-style encoder-decoder (audio backbone, conv frontend STUBBED).
+
+Per the assignment, the modality frontend is a stub: ``input_specs`` feeds
+precomputed frame embeddings (B, T_enc, d) where the two conv layers would
+produce them.  The transformer backbone is faithful to Whisper: pre-LN
+LayerNorm (with bias), GELU MLPs, learned positions in the decoder,
+sinusoidal in the encoder, bidirectional encoder self-attention, and a
+decoder with causal self-attention + cross-attention into the encoder.
+
+Decode caches both the self-attention KV (updated per step) and the cross
+KV (computed once from the encoder output).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ArchConfig, cross_entropy, decode_attention, dense_init,
+                     embed_init, full_attention, layer_norm, remat_wrap)
+
+
+MAX_TARGET_POSITIONS = 448
+
+
+def _attn_params(key, cfg, prefix=""):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        prefix + "wq": dense_init(ks[0], (d, d), cfg.param_dtype),
+        prefix + "bq": jnp.zeros((d,), cfg.param_dtype),
+        prefix + "wk": dense_init(ks[1], (d, d), cfg.param_dtype),
+        prefix + "wv": dense_init(ks[2], (d, d), cfg.param_dtype),
+        prefix + "bv": jnp.zeros((d,), cfg.param_dtype),
+        prefix + "wo": dense_init(ks[3], (d, d), cfg.param_dtype),
+        prefix + "bo": jnp.zeros((d,), cfg.param_dtype),
+    }
+
+
+def _mlp_params(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, (d, ff), cfg.param_dtype),
+        "b_up": jnp.zeros((ff,), cfg.param_dtype),
+        "w_down": dense_init(k2, (ff, d), cfg.param_dtype),
+        "b_down": jnp.zeros((d,), cfg.param_dtype),
+    }
+
+
+def _ln_params(cfg, n=1):
+    d = cfg.d_model
+    return {"scale": jnp.ones((d,), cfg.param_dtype),
+            "bias": jnp.zeros((d,), cfg.param_dtype)}
+
+
+def init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _ln_params(cfg), "ln2": _ln_params(cfg),
+            **_attn_params(k1, cfg), **_mlp_params(k2, cfg)}
+
+
+def init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": _ln_params(cfg), "ln_x": _ln_params(cfg),
+            "ln2": _ln_params(cfg),
+            **_attn_params(k1, cfg),
+            **_attn_params(k2, cfg, prefix="x_"),
+            **_mlp_params(k3, cfg)}
+
+
+def init_params(rng, cfg: ArchConfig):
+    ke, kd, kemb, kp = jax.random.split(rng, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "tok_embed": embed_init(kemb, (cfg.vocab, cfg.d_model),
+                                cfg.param_dtype),
+        "dec_pos": embed_init(kp, (MAX_TARGET_POSITIONS, cfg.d_model),
+                              cfg.param_dtype),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "enc_ln": _ln_params(cfg),
+        "dec_ln": _ln_params(cfg),
+    }
+
+
+def _heads(x, cfg):
+    B, S, d = x.shape
+    return x.reshape(B, S, cfg.n_heads, cfg.head_dim)
+
+
+def _mha(p, xq, xkv, cfg, *, causal, prefix=""):
+    from .common import chunked_attention
+    q = _heads(xq @ p[prefix + "wq"].astype(xq.dtype) +
+               p[prefix + "bq"].astype(xq.dtype), cfg)
+    k = _heads(xkv @ p[prefix + "wk"].astype(xq.dtype), cfg)
+    v = _heads(xkv @ p[prefix + "wv"].astype(xq.dtype) +
+               p[prefix + "bv"].astype(xq.dtype), cfg)
+    if xq.shape[1] > cfg.attn_chunk:
+        o = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    else:
+        o = full_attention(q, k, v, causal=causal)
+    B, S = xq.shape[:2]
+    o = o.reshape(B, S, cfg.d_model)
+    return o @ p[prefix + "wo"].astype(xq.dtype) + \
+        p[prefix + "bo"].astype(xq.dtype)
+
+
+def _mlp(p, x, cfg):
+    h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype) + p["b_up"].astype(x.dtype),
+                    approximate=True)
+    return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)
+
+
+def _ln(p, x, cfg):
+    return layer_norm(x, p["scale"], p["bias"], 1e-5)
+
+
+def sinusoids(length: int, channels: int):
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    ang = jnp.arange(length)[:, None].astype(jnp.float32) * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: (B, T_enc, d) stubbed conv-frontend output."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(x, pl):
+        h = _ln(pl["ln1"], x, cfg)
+        x = x + _mha(pl, h, h, cfg, causal=False)
+        h = _ln(pl["ln2"], x, cfg)
+        return x + _mlp(pl, h, cfg)
+
+    body = remat_wrap(body, cfg.remat)
+    x, _ = jax.lax.scan(lambda c, pl: (body(c, pl), None), x,
+                        params["enc_layers"])
+    return _ln(params["enc_ln"], x, cfg)
+
+
+def _dec_embed(params, tokens, cfg, pos0=0):
+    x = params["tok_embed"].astype(cfg.compute_dtype)[tokens]
+    S = tokens.shape[1]
+    pos_ids = (pos0 + jnp.arange(S)) % MAX_TARGET_POSITIONS
+    return x + params["dec_pos"].astype(x.dtype)[pos_ids][None]
+
+
+def decode_train(params, tokens, enc_out, cfg: ArchConfig):
+    x = _dec_embed(params, tokens, cfg)
+
+    def body(x, pl):
+        h = _ln(pl["ln1"], x, cfg)
+        x = x + _mha(pl, h, h, cfg, causal=True)
+        h = _ln(pl["ln_x"], x, cfg)
+        x = x + _mha(pl, h, enc_out, cfg, causal=False, prefix="x_")
+        h = _ln(pl["ln2"], x, cfg)
+        return x + _mlp(pl, h, cfg)
+
+    body = remat_wrap(body, cfg.remat)
+    x, _ = jax.lax.scan(lambda c, pl: (body(c, pl), None), x,
+                        params["dec_layers"])
+    x = _ln(params["dec_ln"], x, cfg)
+    return x @ params["tok_embed"].T.astype(x.dtype)   # tied head
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    logits = decode_train(params, batch["tokens"], enc_out, cfg)
+    return cross_entropy(logits, batch["labels"])
+
+
+def make_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    L = cfg.num_layers
+    shape = (L, batch, cache_len, cfg.n_heads, cfg.head_dim)
+    xshape = (L, batch, cfg.encoder_frames, cfg.n_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.compute_dtype),
+            "v": jnp.zeros(shape, cfg.compute_dtype),
+            "xk": jnp.zeros(xshape, cfg.compute_dtype),
+            "xv": jnp.zeros(xshape, cfg.compute_dtype)}
+
+
+def prefill(params, frames, tokens, cfg: ArchConfig, cache_len: int):
+    """Encoder pass + decoder prompt pass; returns (logits, cache)."""
+    enc_out = encode(params, frames, cfg)
+    x = _dec_embed(params, tokens, cfg)
+    B, S = tokens.shape
+
+    def body(x, pl):
+        from .common import chunked_attention
+        h = _ln(pl["ln1"], x, cfg)
+        q = _heads(h @ pl["wq"].astype(h.dtype) + pl["bq"].astype(h.dtype), cfg)
+        k = _heads(h @ pl["wk"].astype(h.dtype), cfg)
+        v = _heads(h @ pl["wv"].astype(h.dtype) + pl["bv"].astype(h.dtype), cfg)
+        if S > cfg.attn_chunk:
+            o = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        else:
+            o = full_attention(q, k, v, causal=True)
+        o = o.reshape(B, S, cfg.d_model)
+        x = x + o @ pl["wo"].astype(h.dtype) + pl["bo"].astype(h.dtype)
+        h = _ln(pl["ln_x"], x, cfg)
+        xk = _heads(enc_out @ pl["x_wk"].astype(h.dtype), cfg)
+        xv = _heads(enc_out @ pl["x_wv"].astype(h.dtype) +
+                    pl["x_bv"].astype(h.dtype), cfg)
+        x = x + _mha(pl, h, enc_out, cfg, causal=False,
+                     prefix="x_")
+        h = _ln(pl["ln2"], x, cfg)
+        x = x + _mlp(pl, h, cfg)
+        pad = cache_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (k.astype(cfg.compute_dtype), v.astype(cfg.compute_dtype),
+                   xk.astype(cfg.compute_dtype), xv.astype(cfg.compute_dtype))
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(params["dec_ln"], x[:, -1:], cfg)
+    logits = x @ params["tok_embed"].T.astype(x.dtype)
+    return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig):
+    x = _dec_embed(params, token, cfg, pos0=pos)
+    B = token.shape[0]
+
+    def body(x, layer):
+        pl, kc, vc, xk, xv = layer
+        h = _ln(pl["ln1"], x, cfg)
+        q = _heads(h @ pl["wq"].astype(h.dtype) + pl["bq"].astype(h.dtype), cfg)
+        k = _heads(h @ pl["wk"].astype(h.dtype), cfg)
+        v = _heads(h @ pl["wv"].astype(h.dtype) + pl["bv"].astype(h.dtype), cfg)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+        o = decode_attention(q, kc, vc, pos).reshape(B, 1, cfg.d_model)
+        x = x + o @ pl["wo"].astype(h.dtype) + pl["bo"].astype(h.dtype)
+        h = _ln(pl["ln_x"], x, cfg)
+        q = _heads(h @ pl["x_wq"].astype(h.dtype) +
+                   pl["x_bq"].astype(h.dtype), cfg)
+        o = decode_attention(q, xk, xv, xk.shape[1] - 1)
+        o = o.reshape(B, 1, cfg.d_model)
+        x = x + o @ pl["x_wo"].astype(h.dtype) + pl["x_bo"].astype(h.dtype)
+        h = _ln(pl["ln2"], x, cfg)
+        x = x + _mlp(pl, h, cfg)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = _ln(params["dec_ln"], x, cfg)
+    logits = x @ params["tok_embed"].T.astype(x.dtype)
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,13 @@
+"""Optimizers (pure JAX, pytree-based) + the optimizer-state byte model that
+feeds the paper's memory term sigma~_i (Eq. 11).
+
+SGD / Momentum / AdamW / Adafactor.  Adafactor (factored second moment,
+T5X-style) is the default for >= 100B-parameter configs: AdamW's 8 bytes of
+fp32 moments per parameter cannot fit jamba-398b on a 256-chip pod
+(DESIGN.md hardware-adaptation notes)."""
+
+from .optimizers import (Optimizer, sgd, momentum, adamw, adafactor,
+                         optimizer_state_bytes_per_param, get_optimizer)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adamw", "adafactor",
+           "optimizer_state_bytes_per_param", "get_optimizer"]

@@ -1,0 +1,138 @@
+"""Minimal-but-real optimizer suite (no optax in this container)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable            # params -> opt_state
+    update: Callable          # (params, grads, opt_state) -> (params, state)
+    state_bytes_per_param: float
+
+
+def _tree_zeros(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd(lr: float = 1e-2) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(params, grads, state):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, update, 0.0)
+
+
+def momentum(lr: float = 1e-2, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros(params)}
+
+    def update(params, grads, state):
+        m = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype),
+                         state["m"], grads)
+        new = jax.tree.map(lambda p, m: p - lr * m, params, m)
+        return new, {"m": m}
+
+    return Optimizer("momentum", init, update, 4.0)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros(params), "v": _tree_zeros(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            return (p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+                    ).astype(p.dtype)
+
+        return (jax.tree.map(upd, params, m, v),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer("adamw", init, update, 8.0)
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern) — O(n+m) state for
+    an (n, m) matrix instead of AdamW's O(nm).  momentum-free variant."""
+
+    def init(params):
+        def leaf_state(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + (p.shape[-1],),
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf_state, params,
+                                  is_leaf=lambda x: hasattr(x, "ndim")),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        t = state["t"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                       eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p - lr * u).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_f = tdef.unflatten([o[1] for o in outs])
+        return new_p, {"f": new_f, "t": t}
+
+    return Optimizer("adafactor", init, update, 0.1)
+
+
+_FACTORIES = {"sgd": sgd, "momentum": momentum, "adamw": adamw,
+              "adafactor": adafactor}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return _FACTORIES[name](**kw)
+
+
+def optimizer_state_bytes_per_param(name: str) -> float:
+    """sigma~ contribution per parameter (Eq. 11's optimizer-state term)."""
+    return {"sgd": 0.0, "momentum": 4.0, "adamw": 8.0,
+            "adafactor": 0.1}[name]

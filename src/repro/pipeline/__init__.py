@@ -1,0 +1,21 @@
+"""Pipelined execution runtime: schedule analytics, micro-batched executors,
+and the shard_map SPMD stage pipeline (the paper's technique as a
+first-class runtime feature)."""
+
+from .schedule import SimResult, simulate, simulate_from_breakdown
+from .stage import (VGGStage, split_vgg_params, stack_stage_params,
+                    transformer_stage_fn, unstack_stage_params,
+                    vgg_stages_from_cuts)
+from .executor import (LinkHooks, SplitLearningExecutor, microbatch_grads,
+                       split_batch)
+from .spmd import (PipelineConfig, make_pipelined_loss,
+                   make_pipelined_train_step, plan_to_pipeline_config)
+
+__all__ = [
+    "SimResult", "simulate", "simulate_from_breakdown", "VGGStage",
+    "split_vgg_params", "stack_stage_params", "transformer_stage_fn",
+    "unstack_stage_params", "vgg_stages_from_cuts", "LinkHooks",
+    "SplitLearningExecutor", "microbatch_grads", "split_batch",
+    "PipelineConfig", "make_pipelined_loss", "make_pipelined_train_step",
+    "plan_to_pipeline_config",
+]

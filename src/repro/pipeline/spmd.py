@@ -1,0 +1,143 @@
+"""SPMD pipeline parallelism — the paper's pipelined SL on a TPU mesh.
+
+``shard_map`` with a *manual* "stage" axis (data/model stay auto): stage k's
+layer block lives on mesh slice stage=k; activations hop stage->stage+1 via
+``lax.ppermute`` — the TPU-native counterpart of the paper's inter-server
+activation transmissions (Eqs. 5/6), with the reverse (gradient) hops of
+Eqs. (9)/(10) generated automatically by autodiff's ppermute transpose.
+
+Schedule: GPipe-style fill/steady/drain over T = Q + S - 1 ticks (the exact
+timeline the paper's Eq. (14) models: T_f fill + (Q-1) * T_i steady).  The
+stage plan (cuts) and micro-batch count Q come from core.planner — i.e.
+Algorithm 1 + Theorem 1 drive the actual runtime configuration.
+
+Embedding and LM head run *outside* the pipelined region (data-parallel),
+so all pipeline stages are structurally identical transformer-layer blocks;
+loss is accumulated per micro-batch to keep the vocab-sized logits
+transient.  Numerics are validated against the plain (non-pipelined) loss
+in tests/test_pipeline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, cross_entropy, rms_norm
+from repro.models import transformer as tf_lib
+from .stage import stack_stage_params, transformer_stage_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    num_stages: int
+    num_microbatches: int
+    stage_axis: str = "stage"
+
+
+def _make_pipe_region(cfg: ArchConfig, pcfg: PipelineConfig, mesh):
+    """The manual-stage shard_map region: stream (Q, mb, S, d) -> (Q, mb, S, d)."""
+    stage_fn = transformer_stage_fn(cfg)
+    S_axis = pcfg.num_stages
+    Q = pcfg.num_microbatches
+    T = Q + S_axis - 1
+    ax = pcfg.stage_axis
+
+    def pipe(stage_params, stream_f32):
+        # The stream crosses the shard_map boundary in f32: its transpose
+        # cotangent is a psum over the stage axis, and XLA:CPU's
+        # AllReducePromotion pass aborts on bf16 all-reduce (TPU handles
+        # bf16 natively; this costs nothing there since the cast fuses).
+        sid = jax.lax.axis_index(ax)
+        stream = stream_f32.astype(cfg.compute_dtype)
+        mb_shape = stream.shape[1:]
+
+        def tick(carry, t):
+            idx = jnp.minimum(t, Q - 1)
+            x0 = jax.lax.dynamic_index_in_dim(stream, idx, 0, keepdims=False)
+            x = jnp.where(sid == 0, x0, carry)
+            y = stage_fn(jax.tree.map(lambda p: p[0], stage_params), x)
+            shifted = jax.lax.ppermute(
+                y, ax, [(i, i + 1) for i in range(S_axis - 1)])
+            out_t = jnp.where(sid == S_axis - 1, y,
+                              jnp.zeros_like(y))
+            return shifted, out_t
+
+        init = jnp.zeros(mb_shape, stream.dtype)
+        _, outs = jax.lax.scan(tick, init, jnp.arange(T))
+        valid = outs[S_axis - 1:]                      # (Q, mb, seq, d)
+        # combine: only the last stage holds nonzero outputs.  psum in f32 —
+        # XLA:CPU's AllReducePromotion pass miscompiles bf16 all-reduce
+        # (the TPU path all-reduces bf16 natively; see DESIGN.md).
+        out = jax.lax.psum(valid.astype(jnp.float32), ax)
+        return out.astype(stream.dtype)
+
+    return jax.shard_map(
+        pipe, mesh=mesh,
+        in_specs=(P(ax), P()),        # stage params split; stream replicated
+        out_specs=P(),                # identical across stages after psum
+        axis_names={ax}, check_vma=False)
+
+
+def make_pipelined_loss(cfg: ArchConfig, mesh, pcfg: PipelineConfig
+                        ) -> Callable:
+    """Returns loss(params, batch) running layers through the stage pipeline.
+
+    ``params`` is the ordinary transformer param tree (stacked layers);
+    stage stacking/sharding happens inside, so checkpoints are layout-
+    compatible with the non-pipelined trainer.
+    """
+    pipe = _make_pipe_region(cfg, pcfg, mesh)
+    Q = pcfg.num_microbatches
+
+    def loss_fn(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        assert B % Q == 0, (B, Q)
+        from repro.models.common import maybe_constrain
+        x = params["embed"].astype(cfg.compute_dtype)[tokens]
+        stream = x.reshape(Q, B // Q, S, cfg.d_model).astype(jnp.float32)
+        # shard the stream over data (micro-batch rows) AND model (d) on the
+        # auto axes — it is replicated across "stage" by construction, and
+        # leaving d unsharded costs 4x stream memory (§Perf iteration 2)
+        stream = maybe_constrain(
+            stream, P(None, ("pod", "data"), None, "model"))
+        stage_params = stack_stage_params(params["layers"], pcfg.num_stages)
+        ys = pipe(stage_params, stream)
+        labels_mb = labels.reshape(Q, B // Q, S)
+
+        def head_loss(acc, inp):
+            y, lab = inp
+            logits = tf_lib._unembed(params, y, cfg)
+            return acc + cross_entropy(logits, lab), None
+
+        tot, _ = jax.lax.scan(head_loss, jnp.float32(0.0), (ys, labels_mb))
+        return tot / Q
+
+    return loss_fn
+
+
+def make_pipelined_train_step(cfg: ArchConfig, mesh, pcfg: PipelineConfig,
+                              optimizer) -> Callable:
+    loss_fn = make_pipelined_loss(cfg, mesh, pcfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def plan_to_pipeline_config(stage_plan, global_batch: int) -> PipelineConfig:
+    """core.planner.StagePlan -> runtime pipeline config (Q from Thm 1's b)."""
+    q = max(1, min(stage_plan.num_microbatches, global_batch))
+    while global_batch % q:
+        q -= 1
+    return PipelineConfig(num_stages=stage_plan.num_stages,
+                          num_microbatches=q)

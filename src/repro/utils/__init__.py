@@ -1,0 +1,7 @@
+from .hlo import (collective_bytes, op_histogram, shape_bytes,
+                  CollectiveStats, hlo_cost, HloCost)
+from .treemath import tree_add, tree_scale, tree_bytes, global_norm
+
+__all__ = ["collective_bytes", "op_histogram", "shape_bytes",
+           "CollectiveStats", "tree_add", "tree_scale", "tree_bytes",
+           "global_norm"]

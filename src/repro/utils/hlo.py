@@ -1,0 +1,373 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective bytes, so
+we parse the post-partitioning HLO module: build a name -> bytes map from
+every instruction's output shape, then sum *operand* bytes of each
+collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, sync and async -start forms).
+
+The module is the per-partition (per-device) program, so operand sums are
+per-device link traffic; the roofline multiplies by chips for the spec's
+``collective_bytes / (chips * link_bw)`` convention (see launch/roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# e.g.  bf16[128,4096]{1,0}   or  f32[]   or  (f32[2,3], s32[4])
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# instruction line:  %name = <shape> opcode(operands...), attrs
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes inside a shape string (handles
+    tuples by summing every dtype[dims] occurrence)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+    total_bytes: int
+
+    def summary(self) -> str:
+        parts = [f"{k}:{v/1e6:.1f}MB(x{self.count_by_kind[k]})"
+                 for k, v in sorted(self.bytes_by_kind.items())]
+        return " ".join(parts) or "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in a (post-optimization,
+    per-partition) HLO module dump."""
+    # first pass: output bytes of every named instruction
+    name_bytes: dict = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_s, _, _ = m.groups()
+        name_bytes[name] = shape_bytes(shape_s)
+
+    by_kind: dict = defaultdict(int)
+    count: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_s, opcode, rest = m.groups()
+        kind = next((c for c in _COLLECTIVES if opcode.startswith(c)), None)
+        if kind is None or opcode.endswith("-done"):
+            continue
+        # operand bytes: prefer inline operand shapes; else look up names
+        operand_str = rest.split(")", 1)[0]
+        inline = sum(shape_bytes(s) for s in re.findall(
+            r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?", operand_str))
+        if inline == 0:
+            for op_name in re.findall(r"%([\w.\-]+)", operand_str):
+                inline += name_bytes.get(op_name, 0)
+        if inline == 0:
+            inline = shape_bytes(shape_s)  # fall back to output size
+        by_kind[kind] += inline
+        count[kind] += 1
+    return CollectiveStats(bytes_by_kind=dict(by_kind),
+                           count_by_kind=dict(count),
+                           total_bytes=sum(by_kind.values()))
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware FLOP/byte accounting
+#
+# XLA's compiled.cost_analysis() counts while-loop bodies ONCE (verified in
+# tests/test_hlo.py), so any scanned model (layers, micro-batches, chunked
+# attention) is undercounted by the trip count.  We therefore walk the HLO
+# call graph ourselves: parse computations, resolve while-loop trip counts
+# from their condition computations (scan lowers to  iter < constant), and
+# multiply each computation's dot-FLOPs / op traffic by the product of
+# enclosing trip counts.  Traffic counts operand+output bytes of
+# *materializing* top-level ops (fusion boundaries = HBM round-trips).
+# ---------------------------------------------------------------------------
+
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_CALLEE_RE = re.compile(
+    r"(?:condition|body|to_apply|called_computations=\{|calls=)[=%]*%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_DNUMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_MATERIALIZING = (
+    "fusion", "dot", "convolution", "copy", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "all-gather", "all-reduce", "reduce-scatter",
+    "all-to-all", "collective-permute", "sort", "reduce", "transpose",
+    "broadcast", "iota", "concatenate", "slice", "pad", "reshape", "select",
+    "compare", "add", "multiply", "subtract", "divide", "exponential",
+    "convert", "rsqrt", "tanh", "maximum", "minimum", "log", "negate",
+    "custom-call",
+)
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    out_bytes: int
+    out_dims: tuple
+    operand_names: list
+    line: str
+
+
+def _first_shape_dims(shape_str: str) -> tuple:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+def _parse_computations(hlo_text: str) -> dict:
+    """name -> list[_Instr] for every computation in the module."""
+    comps: dict = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line.rstrip().endswith("{") and ("->" in line or
+                                            line.lstrip().startswith("ENTRY")):
+            m2 = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            cur = m2.group(1) if m2 else None
+            if cur is not None:
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_s, opcode, rest = m.groups()
+        operand_str = rest.split(")", 1)[0]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        comps[cur].append(_Instr(name, opcode, shape_bytes(shape_s),
+                                 _first_shape_dims(shape_s), operands, line))
+    return comps
+
+
+def _trip_count(while_line: str, cond_instrs: list) -> int:
+    """Prefer XLA's own backend_config known_trip_count; fall back to the
+    cond computation's  compare(iter, constant(N), LT)  pattern."""
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return max(1, int(m.group(1)))
+    consts = {}
+    for ins in cond_instrs:
+        mc = _CONST_RE.search(ins.line)
+        if mc:
+            consts[ins.name] = int(mc.group(1))
+    for ins in cond_instrs:
+        if "direction=LT" in ins.line or ins.opcode == "compare":
+            for op in ins.operand_names:
+                if op in consts:
+                    return max(1, consts[op])
+    if len(consts) == 1:          # single constant in the condition
+        return max(1, next(iter(consts.values())))
+    return 1
+
+
+def _dot_flops(ins: _Instr, name_dims: dict) -> float:
+    """2 * output_elements * contraction_size.  Operand shapes come from the
+    name -> dims map (HLO prints operands by name only)."""
+    out_elems = 1
+    for d in ins.out_dims:
+        out_elems *= d
+    m = _DOT_DNUMS_RE.search(ins.line)
+    lhs_dims = name_dims.get(ins.operand_names[0], ()) \
+        if ins.operand_names else ()
+    if not m or not lhs_dims:
+        return 2.0 * out_elems          # conservative fallback
+    contract = 1
+    for i in (int(x) for x in m.group(1).split(",") if x):
+        if i < len(lhs_dims):
+            contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    traffic_bytes: float
+    collective_bytes: float
+    collective_by_kind: dict
+    while_trip_counts: list
+    unresolved_loops: int
+
+
+def hlo_cost(hlo_text: str) -> HloCost:
+    """Trip-count-aware FLOPs + HBM-traffic + collective-traffic estimate."""
+    comps = _parse_computations(hlo_text)
+
+    def while_sites(instrs):
+        out = []
+        for ins in instrs:
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                if mb and mc:
+                    out.append((ins, mb.group(1), mc.group(1)))
+        return out
+
+    # per-computation local cost (dots + traffic + collectives); fusions
+    # resolved inline (their internals are not HBM traffic)
+    def local_cost(name, seen):
+        instrs = comps.get(name, [])
+        flops, traffic = 0.0, 0.0
+        coll: dict = defaultdict(float)
+        name_out = {i.name: i.out_bytes for i in instrs}
+        name_dims = {i.name: i.out_dims for i in instrs}
+        for ins in instrs:
+            kind = next((c for c in _COLLECTIVES
+                         if ins.opcode.startswith(c)), None)
+            if kind is not None and not ins.opcode.endswith("-done"):
+                opb = sum(name_out.get(o, 0) for o in ins.operand_names)
+                coll[kind] += opb or ins.out_bytes
+            if ins.opcode == "dot":
+                flops += _dot_flops(ins, name_dims)
+            elif ins.opcode == "fusion":
+                m2 = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                callee = m2.group(1) if m2 else None
+                if callee and callee in comps and callee not in seen:
+                    f, _, _ = local_cost(callee, seen | {callee})
+                    flops += f
+                traffic += ins.out_bytes + sum(
+                    name_out.get(o, 0) for o in ins.operand_names)
+                continue
+            elif ins.opcode in ("call", "conditional"):
+                for cal in re.findall(r"(?:to_apply|calls)=%?([\w.\-]+)",
+                                      ins.line):
+                    if cal in comps and cal not in seen:
+                        f, t, c = local_cost(cal, seen | {cal})
+                        flops += f
+                        traffic += t
+                        for k, v in c.items():
+                            coll[k] += v
+            if ins.opcode in _MATERIALIZING and ins.opcode != "fusion":
+                traffic += ins.out_bytes + sum(
+                    name_out.get(o, 0) for o in ins.operand_names)
+        return flops, traffic, coll
+
+    total_flops = 0.0
+    total_traffic = 0.0
+    total_coll: dict = defaultdict(float)
+    trips: list = []
+    unresolved = 0
+
+    def walk(name, mult, seen):
+        nonlocal total_flops, total_traffic, unresolved
+        if name not in comps or name in seen:
+            return
+        f, t, c = local_cost(name, {name})
+        total_flops += mult * f
+        total_traffic += mult * t
+        for k, v in c.items():
+            total_coll[k] += mult * v
+        for ins, body, cond in while_sites(comps[name]):
+            tc = _trip_count(ins.line, comps.get(cond, []))
+            if tc == 1:
+                unresolved += 1
+            trips.append(tc)
+            walk(body, mult * tc, seen | {name})
+
+    entry = next((n for n in comps if n.startswith("main")), None)
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n])) if comps else None
+    if entry is not None:
+        walk(entry, 1.0, set())
+    return HloCost(flops=total_flops, traffic_bytes=total_traffic,
+                   collective_bytes=float(sum(total_coll.values())),
+                   collective_by_kind=dict(total_coll),
+                   while_trip_counts=trips, unresolved_loops=unresolved)
+
+
+def cpu_f32_promotion_bytes(hlo_text: str) -> int:
+    """Bytes of f32 buffers that exist ONLY because XLA:CPU promotes bf16
+    dot operands to f32 (convert-fusions fed by all-gathers / parameters of
+    bf16 weights).  A TPU lowering of the same module keeps these in bf16,
+    so memory fit checks subtract half of these bytes (the f32 copy is 2x
+    the bf16 original that would exist instead).
+
+    Criterion: top-level f32-output fusions named *convert*/*copy*, with
+    >= 64 MiB output, that satisfy EITHER
+      - the operand is an all-gather (the FSDP weight-gather upcast), OR
+      - a bf16 instruction of the *same dims* exists in the module (the
+        f32 buffer shadows a bf16 original, e.g. the remat activation
+        stash upcast before a dot).
+    Activation math that legitimately runs in f32 (mamba scans, softmax
+    statistics) has no bf16 twin and is never subtracted.
+    """
+    comps = _parse_computations(hlo_text)
+    bf16_dims = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            if " bf16[" in ins.line.split("=", 1)[-1][:60]:
+                bf16_dims.add(ins.out_dims)
+    total = 0
+    for name, instrs in comps.items():
+        opcode_of = {i.name: i.opcode for i in instrs}
+        for ins in instrs:
+            if not (ins.opcode == "fusion"
+                    and ("convert" in ins.name or "copy" in ins.name)
+                    and " f32[" in ins.line
+                    and ins.out_bytes >= 64 * 2**20):
+                continue
+            from_ag = any(opcode_of.get(o, "").startswith("all-gather")
+                          or o.startswith("all-gather")
+                          for o in ins.operand_names)
+            has_twin = ins.out_dims in bf16_dims
+            if from_ag or has_twin:
+                total += ins.out_bytes // 2   # bf16 would be half
+        for ins in instrs:
+            # f32 collective buffers of bf16-twinned data: TPU all-gathers /
+            # all-reduces bf16 natively, halving the buffer
+            if (ins.opcode.startswith(("all-gather", "all-reduce"))
+                    and " f32[" in ins.line
+                    and ins.out_bytes >= 64 * 2**20
+                    and ins.out_dims in bf16_dims):
+                total += ins.out_bytes // 2
+    return total
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> list:
+    """(opcode, count) histogram — handy for spotting remat/layout waste."""
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            counts[m.group(3)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

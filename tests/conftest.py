@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — tests see 1 CPU
+device; multi-device tests spawn subprocesses (see tests/test_spmd.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_edge_network, vgg16_profile, random_profile
+
+
+@pytest.fixture
+def vgg_profile():
+    return vgg16_profile(work_units="bytes")
+
+
+@pytest.fixture
+def paper_network():
+    """Table-II-style 6-server network (kappa = 1/32 to match byte units)."""
+    return make_edge_network(num_servers=6, num_clients=4, seed=1,
+                             kappa=1 / 32.0)
+
+
+def small_instance(seed: int, num_layers: int = 6, num_servers: int = 3,
+                   num_clients: int = 2):
+    rng = np.random.default_rng(seed)
+    prof = random_profile(rng, num_layers)
+    net = make_edge_network(num_servers=num_servers,
+                            num_clients=num_clients, seed=seed)
+    return prof, net

@@ -1,0 +1,73 @@
+"""Checkpoint/restart: roundtrip, latest-step discovery, async commit,
+restore-into-different-sharding (single-device here; multi-device reshard
+covered in test_spmd.py's subprocess)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointStore, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    rng = jax.random.PRNGKey(seed)
+    return {"layers": {"w": jax.random.normal(rng, (4, 8)),
+                       "b": jnp.arange(8, dtype=jnp.float32)},
+            "step_scale": jnp.float32(0.5)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t, meta={"note": "x"})
+    assert latest_step(str(tmp_path)) == 7
+    restored, meta = restore_checkpoint(str(tmp_path), 7, jax.eval_shape(
+        lambda: t))
+    assert meta["step"] == 7 and meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_gc(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, _tree(s), blocking=False)
+    store.wait()
+    store._gc()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+    restored, meta = store.restore_latest(jax.eval_shape(lambda: _tree()))
+    assert meta["step"] == 4
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, _tree())
+    bad = jax.eval_shape(lambda: {"layers": {"w": jnp.zeros((3, 3)),
+                                             "b": jnp.zeros((8,))},
+                                  "step_scale": jnp.float32(0)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 0, bad)
+
+
+def test_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"a": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), 0, jax.eval_shape(
+            lambda: {"a": jnp.zeros((2,)), "extra": jnp.zeros((1,))}))
+
+
+def test_trainer_restart_resumes(tmp_path):
+    """End-to-end: train 6 steps with checkpoints, kill, resume -> the
+    second run continues from the saved step."""
+    from repro.launch.train import train
+    losses1 = train("qwen3-0.6b", reduced=True, steps=6, batch=8, seq=16,
+                    microbatches=2, ckpt_dir=str(tmp_path), ckpt_every=2,
+                    log_every=100)
+    assert latest_step(str(tmp_path)) == 5
+    losses2 = train("qwen3-0.6b", reduced=True, steps=8, batch=8, seq=16,
+                    microbatches=2, ckpt_dir=str(tmp_path), ckpt_every=2,
+                    log_every=100)
+    assert len(losses2) == 2          # only steps 6..7 ran

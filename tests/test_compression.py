@@ -1,0 +1,68 @@
+"""Codec properties: int8 bounds, top-k support, error feedback, byte model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression import (ErrorFeedback, compressed_bytes,
+                               int8_dequantize, int8_quantize, topk_densify,
+                               topk_sparsify)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(0.01, 100.0))
+def test_int8_roundtrip_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    q, s = int8_quantize(x)
+    y = int8_dequantize(q, s)
+    amax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(y - x))) <= amax / 127.0 + 1e-6
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.3, 2.0, -0.2, 4.0])
+    vals, idx = topk_sparsify(x, 3)
+    dense = topk_densify(vals, idx, x.shape)
+    np.testing.assert_allclose(
+        np.asarray(dense), [0, -5.0, 0, 2.0, 0, 4.0], atol=1e-7)
+
+
+def test_error_feedback_accumulates_residual():
+    """With EF, the long-run average of decoded outputs tracks the input:
+    sum of decoded over rounds -> sum of inputs (residual stays bounded)."""
+    ef = ErrorFeedback()
+    x = jnp.asarray([0.3, -0.7, 0.05, 0.9])
+    fwd = lambda v: topk_sparsify(v, 1)
+    bwd = lambda payload: topk_densify(*payload, x.shape)
+    total_dec = jnp.zeros_like(x)
+    for _ in range(40):
+        total_dec = total_dec + ef.compress(x, fwd, bwd)
+    avg = total_dec / 40
+    np.testing.assert_allclose(np.asarray(avg), np.asarray(x), atol=0.05)
+
+
+def test_compressed_bytes_model():
+    assert compressed_bytes(1000.0, "none") == 1000.0
+    assert compressed_bytes(1000.0, "int8") == 250.0
+    assert compressed_bytes(1000.0, "topk", topk_ratio=0.05) == 100.0
+    with pytest.raises(ValueError):
+        compressed_bytes(1.0, "nope")
+
+
+def test_compression_shifts_planner_bottleneck():
+    """Planner integration: compressing links reduces D_k in the latency
+    model — total latency with compressed traffic <= uncompressed."""
+    import dataclasses
+    from repro.core import make_edge_network, vgg16_profile, ours
+    prof = vgg16_profile(work_units="bytes")
+    comp_prof = dataclasses.replace(
+        prof,
+        act_bytes=prof.act_bytes / 4.0,     # int8 links
+        grad_bytes=prof.grad_bytes / 4.0)
+    net = make_edge_network(num_servers=4, seed=2, kappa=1 / 32.0,
+                            bw_range_hz=(10e6, 20e6))
+    p0 = ours(prof, net, B=256)
+    p1 = ours(comp_prof, net, B=256)
+    assert p1.L_t <= p0.L_t * (1 + 1e-9)

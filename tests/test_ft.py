@@ -1,0 +1,76 @@
+"""Fault tolerance: failure -> replan feasibility, straggler mitigation via
+Theorem 1, rate-change replanning."""
+
+import math
+
+import pytest
+
+from repro.core import total_latency, validate_solution
+from repro.ft import Coordinator, NodeFailure, RateChange, Straggler
+from conftest import small_instance
+
+
+@pytest.fixture
+def coord():
+    prof, net = small_instance(5, num_layers=6, num_servers=4)
+    return Coordinator(prof, net, B=128), prof
+
+
+def test_node_failure_replans_feasible(coord):
+    c, prof = coord
+    assert c.plan.feasible
+    failed_server = c.plan.solution.placement[-1]
+    out = c.apply(NodeFailure(server=failed_server))
+    assert out.action == "replan"
+    assert c.plan.feasible
+    validate_solution(c.plan.solution, prof, c.net)
+    # the failed node is gone from the new placement universe
+    assert all(p < len(c.net.nodes) for p in c.plan.solution.placement)
+
+
+def test_straggler_cheap_path_keeps_placement(coord):
+    c, prof = coord
+    sol_before = c.plan.solution
+    node = c.plan.solution.placement[-1]
+    out = c.apply(Straggler(node=node, slowdown=1.5))
+    assert out.action in ("microbatch", "replan")
+    if out.action == "microbatch":
+        assert c.plan.solution == sol_before      # no weight movement
+    # latency under the new (slower) conditions is finite + consistent
+    assert math.isfinite(c.plan.L_t)
+    assert c.plan.L_t == pytest.approx(
+        total_latency(prof, c.net, c.plan.solution, c.plan.b, c.plan.B),
+        rel=1e-9)
+
+
+def test_severe_straggler_forces_replan(coord):
+    c, prof = coord
+    node = c.plan.solution.placement[-1]
+    out = c.apply(Straggler(node=node, slowdown=50.0))
+    # a 50x-slower node should be routed around (or at minimum replanned)
+    assert out.action == "replan" or node not in c.plan.solution.placement \
+        or c.plan.feasible
+
+
+def test_rate_change_replans(coord):
+    c, _ = coord
+    L_before = c.plan.L_t
+    out = c.apply(RateChange(n_from=1, n_to=2, factor=0.05))
+    assert out.action == "replan"
+    assert c.plan.feasible
+
+
+def test_replan_latency_not_worse_than_fresh(coord):
+    """Replanning after an event matches a from-scratch BCD solve."""
+    from repro.core import bcd_solve
+    c, prof = coord
+    c.apply(NodeFailure(server=1))
+    fresh = bcd_solve(prof, c.net, 128)
+    assert c.plan.L_t <= fresh.L_t * 1.05 + 1e-9
+
+
+def test_event_log(coord):
+    c, _ = coord
+    c.apply(Straggler(node=1, slowdown=2.0))
+    c.apply(RateChange(1, 2, 0.5))
+    assert len(c.events) == 2

@@ -1,0 +1,138 @@
+"""Unit + property tests for the Eq. (1)-(14) latency model."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EdgeNetwork, Node, SplitSolution, breakdown,
+                        client_shares, fill_latency, memory_feasible,
+                        no_pipeline_latency, num_fills, pipeline_interval,
+                        total_latency, uniform_profile, validate_solution,
+                        vgg16_profile, make_edge_network, shannon_rate)
+from conftest import small_instance
+
+
+def _tiny_net():
+    """Deterministic 2-server network for hand-computed checks."""
+    nodes = [
+        Node("clients", f=1e9, kappa=1.0, mem=1e12, t0=0.0, t1=0.0, b_th=0,
+             is_client=True),
+        Node("s1", f=2e9, kappa=1.0, mem=1e12, t0=0.0, t1=0.0, b_th=0),
+        Node("s2", f=4e9, kappa=1.0, mem=1e12, t0=0.0, t1=0.0, b_th=0),
+    ]
+    rate = np.array([[0, 1e6, 1e6], [1e6, 0, 2e6], [1e6, 2e6, 0.0]])
+    return EdgeNetwork(nodes=nodes, rate=rate, num_clients=1)
+
+
+def test_client_shares_eq1():
+    # Eq. (1): floor split, remainder to the last client
+    shares = client_shares(10, 4)
+    assert list(shares) == [2, 2, 2, 4]
+    assert shares.sum() == 10
+    assert list(client_shares(8, 4)) == [2, 2, 2, 2]
+
+
+def test_hand_computed_fill_latency():
+    prof = uniform_profile(4, fp=1e6, bp=2e6, act=1e3, param=0.0)
+    net = _tiny_net()
+    sol = SplitSolution(cuts=(2, 4), placement=(0, 1))
+    validate_solution(sol, prof, net)
+    b = 8
+    # client FP: 8 * 2e6 / 1e9 ; client BP: 8 * 4e6 / 1e9
+    # comm fwd: 8 * 1e3 / 1e6 ; comm bwd same
+    # server FP: 8 * 2e6 / 2e9 ; BP: 8 * 4e6 / 2e9
+    expect = (8 * 2e6 / 1e9 + 8 * 4e6 / 1e9 + 8 * 1e3 / 1e6 * 2
+              + 8 * 2e6 / 2e9 + 8 * 4e6 / 2e9)
+    assert fill_latency(prof, net, sol, b) == pytest.approx(expect)
+    # T_i: max individual component = client BP = 0.032
+    assert pipeline_interval(prof, net, sol, b) == pytest.approx(0.032)
+    # Eq. 14
+    B = 64
+    assert total_latency(prof, net, sol, b, B) == pytest.approx(
+        expect + math.ceil((B - b) / b) * 0.032)
+
+
+def test_colocation_sums_in_interval():
+    """C9/C13: submodels sharing a node SUM into that node's T_i term."""
+    prof = uniform_profile(6, fp=1e6, bp=1e6, act=1e2, param=0.0)
+    net = _tiny_net()
+    sol = SplitSolution(cuts=(2, 4, 6), placement=(0, 1, 2))
+    sol_reuse = SplitSolution(cuts=(1, 2, 4, 6), placement=(0, 1, 2, 1))
+    t_plain = pipeline_interval(prof, net, sol, 8)
+    bd = breakdown(prof, net, sol_reuse, 8)
+    sums = bd.node_fp_sums()
+    assert sums[1] == pytest.approx(bd.stage_fp[1] + bd.stage_fp[3])
+
+
+def test_no_pipeline_is_fill_at_B():
+    prof, net = small_instance(0)
+    sol = SplitSolution(cuts=(3, 6), placement=(0, 1))
+    assert no_pipeline_latency(prof, net, sol, 128) == pytest.approx(
+        fill_latency(prof, net, sol, 128))
+
+
+def test_shannon_rate_monotonic():
+    r1 = shannon_rate(10e6, 0.3, 100.0)
+    assert r1 > shannon_rate(10e6, 0.3, 200.0)      # farther -> slower
+    assert shannon_rate(20e6, 0.3, 100.0) > r1      # more BW -> faster
+    assert r1 > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 100), b=st.integers(1, 64))
+def test_interval_is_max_of_components(seed, b):
+    prof, net = small_instance(seed)
+    sol = SplitSolution(cuts=(2, 4, 6), placement=(0, 1, 2))
+    bd = breakdown(prof, net, sol, b)
+    t = pipeline_interval(prof, net, sol, b)
+    comps = (list(bd.node_fp_sums().values())
+             + list(bd.node_bp_sums().values())
+             + list(bd.pair_fwd_sums().values())
+             + list(bd.pair_bwd_sums().values()))
+    assert t == pytest.approx(max(comps))
+    assert all(t >= c - 1e-12 for c in comps)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 100), b=st.integers(1, 32))
+def test_total_latency_bounds(seed, b):
+    """T_f <= L_t and L_t <= ceil(B/b) * T_f (pipeline can't be worse than
+    fully sequential micro-batches)."""
+    prof, net = small_instance(seed)
+    sol = SplitSolution(cuts=(3, 6), placement=(0, 2))
+    B = 64
+    L = total_latency(prof, net, sol, b, B)
+    T_f = fill_latency(prof, net, sol, b)
+    assert L >= T_f - 1e-12
+    assert L <= math.ceil(B / b) * T_f + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_memory_monotone_in_b(seed):
+    prof, net = small_instance(seed)
+    sol = SplitSolution(cuts=(3, 6), placement=(0, 1))
+    feas = [memory_feasible(prof, net, sol, b) for b in (1, 8, 64, 512)]
+    # once infeasible, stays infeasible
+    for a, c in zip(feas, feas[1:]):
+        assert a or not c
+
+
+def test_validate_rejects_bad_solutions():
+    prof, net = small_instance(0)
+    with pytest.raises(ValueError):
+        validate_solution(SplitSolution((6,), (1,)), prof, net)  # not client
+    with pytest.raises(ValueError):
+        validate_solution(SplitSolution((4, 2, 6), (0, 1, 2)), prof, net)
+    with pytest.raises(ValueError):  # consecutive same node
+        validate_solution(SplitSolution((2, 4, 6), (0, 1, 1)), prof, net)
+    with pytest.raises(ValueError):  # last cut != I
+        validate_solution(SplitSolution((2, 5), (0, 1)), prof, net)
+
+
+def test_num_fills_eq14():
+    assert num_fills(512, 512) == 0
+    assert num_fills(512, 20) == math.ceil(492 / 20)
+    assert num_fills(512, 256) == 1

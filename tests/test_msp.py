@@ -1,0 +1,121 @@
+"""Algorithm 1 (bottleneck-aware shortest path) — optimality + properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (brute_force_msp, build_graph, graph_stats,
+                        make_edge_network, random_profile, solve_msp,
+                        total_latency, validate_solution)
+from repro.core.shortest_path import path_cost, _path_bottleneck
+from conftest import small_instance
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 200), b=st.sampled_from([4, 8, 16]),
+       B=st.sampled_from([32, 64]))
+def test_alg1_matches_brute_force_paper_objective(seed, b, B):
+    """Theorem 2: Algorithm 1 is optimal for the MSP objective."""
+    prof, net = small_instance(seed, num_layers=5, num_servers=3)
+    res = solve_msp(prof, net, b, B, K=3)
+    bf, bf_sol = brute_force_msp(prof, net, b, B, K=3, objective="paper")
+    if not res.feasible:
+        assert bf == math.inf
+    else:
+        assert res.objective == pytest.approx(bf, rel=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_alg1_solution_is_valid(seed):
+    prof, net = small_instance(seed, num_layers=6, num_servers=4)
+    res = solve_msp(prof, net, 8, 64, K=4)
+    if res.feasible:
+        validate_solution(res.solution, prof, net)
+        # reported L_t is the true Eq.14 value of the returned solution
+        assert res.L_t == pytest.approx(
+            total_latency(prof, net, res.solution, 8, 64), rel=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_paper_gap_to_true_objective_is_bounded(seed):
+    """Paper-mode search vs the TRUE objective (co-location sums, joint
+    memory): the found solution evaluates within 25% of the true optimum on
+    small instances (usually exact; DESIGN.md §6 discusses why not always)."""
+    prof, net = small_instance(seed, num_layers=5, num_servers=3)
+    res = solve_msp(prof, net, 8, 64, K=3)
+    bf, bf_sol = brute_force_msp(prof, net, 8, 64, K=3, objective="true")
+    if res.feasible and bf_sol is not None:
+        assert res.L_t <= bf * 1.25 + 1e-9
+
+
+def test_path_cost_equals_fill_latency(vgg_profile, paper_network):
+    from repro.core import fill_latency
+    res = solve_msp(vgg_profile, paper_network, 16, 512)
+    g = build_graph(vgg_profile, paper_network, 16)
+    path = list(zip(res.solution.placement, res.solution.cuts))
+    assert path_cost(g, path) == pytest.approx(
+        fill_latency(vgg_profile, paper_network, res.solution, 16), rel=1e-9)
+
+
+def test_restricted_cuts_respected(vgg_profile, paper_network):
+    cuts = (4, 10, 16)
+    res = solve_msp(vgg_profile, paper_network, 16, 512,
+                    restrict_cuts=cuts, K=len(cuts))
+    assert res.feasible
+    assert res.solution.cuts == cuts
+
+
+def test_restricted_placement_respected(vgg_profile, paper_network):
+    placement = (0, 2, 1)
+    res = solve_msp(vgg_profile, paper_network, 16, 512,
+                    restrict_placement=placement, K=3)
+    if res.feasible:
+        assert tuple(res.solution.placement) == \
+            placement[:len(res.solution.placement)]
+
+
+def test_no_pipeline_solves_pure_min_sum(vgg_profile):
+    """b = B => xi = 0: Algorithm 1 degenerates to plain shortest path.
+    (Needs roomy nodes: the paper's Eq. 11 scales the WHOLE footprint by b,
+    so b = 512 on 2-16 GB nodes is memory-infeasible — that infeasibility
+    is itself one of the paper's arguments for micro-batching.)"""
+    net = make_edge_network(num_servers=6, num_clients=4, seed=1,
+                            kappa=1 / 32.0, mem_range=(1e15, 1e15),
+                            client_mem=1e15)
+    res = solve_msp(vgg_profile, net, 512, 512)
+    assert res.feasible
+    assert res.thresholds_scanned == 1
+    # objective must equal T_f exactly (no bottleneck contribution)
+    assert res.objective == pytest.approx(res.T_f, rel=1e-9)
+
+
+def test_bottleneck_consistency(vgg_profile, paper_network):
+    res = solve_msp(vgg_profile, paper_network, 16, 512)
+    g = build_graph(vgg_profile, paper_network, 16)
+    path = list(zip(res.solution.placement, res.solution.cuts))
+    assert _path_bottleneck(g, path) == pytest.approx(res.T_1, rel=1e-9)
+
+
+def test_graph_stats_reports_paper_scale(vgg_profile, paper_network):
+    g = build_graph(vgg_profile, paper_network, 16)
+    s = graph_stats(g)
+    assert s["paper_vertices"] > 0
+    assert s["paper_edges_upper"] > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_more_servers_never_hurt(seed):
+    """Fig. 5(a): latency is non-increasing in N (the planner can ignore
+    extra servers)."""
+    rng = np.random.default_rng(seed)
+    prof = random_profile(rng, 6)
+    net_small = make_edge_network(num_servers=3, seed=seed)
+    net_big = make_edge_network(num_servers=3, seed=seed)  # same base
+    r1 = solve_msp(prof, net_small, 8, 64)
+    r2 = solve_msp(prof, net_big, 8, 64)
+    assert r2.objective <= r1.objective * (1 + 1e-9)

@@ -1,0 +1,57 @@
+"""Discrete-event pipeline sim vs the analytical Eq. (14) (schedule.py)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SplitSolution, breakdown, num_fills, total_latency
+from repro.pipeline import simulate, simulate_from_breakdown
+from conftest import small_instance
+
+pos = st.floats(0.01, 5.0, allow_nan=False)
+
+
+@settings(max_examples=40, deadline=None)
+@given(fp=st.lists(pos, min_size=2, max_size=5),
+       q=st.integers(1, 30), data=st.data())
+def test_sim_equals_analytic_separate_engines(fp, q, data):
+    """Identical jobs through a linear chain of FIFO resources: makespan
+    == T_f + (Q-1) * max resource time — the paper's Eq. (14) exactly."""
+    k = len(fp)
+    bp = data.draw(st.lists(pos, min_size=k, max_size=k))
+    fwd = data.draw(st.lists(pos, min_size=k - 1, max_size=k - 1))
+    bwd = data.draw(st.lists(pos, min_size=k - 1, max_size=k - 1))
+    r = simulate(fp, bp, fwd, bwd, q)
+    assert r.makespan == pytest.approx(r.analytic, rel=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(fp=st.lists(pos, min_size=2, max_size=4), q=st.integers(2, 20),
+       data=st.data())
+def test_shared_engine_never_faster(fp, q, data):
+    """A node whose FP and BP share one engine can only be slower than the
+    paper's separate-resource model (quantifies the model's optimism)."""
+    k = len(fp)
+    bp = data.draw(st.lists(pos, min_size=k, max_size=k))
+    fwd = data.draw(st.lists(pos, min_size=k - 1, max_size=k - 1))
+    bwd = data.draw(st.lists(pos, min_size=k - 1, max_size=k - 1))
+    sep = simulate(fp, bp, fwd, bwd, q)
+    shared = simulate(fp, bp, fwd, bwd, q, shared_engine=True)
+    assert shared.makespan >= sep.makespan - 1e-12
+
+
+def test_sim_validates_eq14_on_real_instance():
+    prof, net = small_instance(3)
+    sol = SplitSolution(cuts=(2, 4, 6), placement=(0, 1, 2))
+    b, B = 8, 64
+    q = num_fills(B, b) + 1
+    r = simulate_from_breakdown(breakdown(prof, net, sol, b), q)
+    # with no co-located submodels, Eq. (14) == event-sim makespan
+    assert r.makespan == pytest.approx(
+        total_latency(prof, net, sol, b, B), rel=1e-9)
+
+
+def test_memory_factors():
+    r = simulate([1, 1, 1], [1, 1, 1], [0.1, 0.1], [0.1, 0.1], 12)
+    assert r.memory_factor["gpipe"][0] == 12
+    assert r.memory_factor["1f1b"][0] == 3       # K - k in-flight
+    assert r.memory_factor["1f1b"][2] == 1
