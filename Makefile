@@ -1,0 +1,42 @@
+# Tier-1 verification + dev conveniences.
+# `make verify` is the full tier-1 suite (includes known seed-debt
+# failures); CI runs `make verify-ci`, which deselects them (see
+# .github/workflows/ci.yml).
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify verify-ci test dev-deps sim-check bench-fig6b example-sim
+
+verify:
+	$(PYTHON) -m pytest -x -q
+
+# pre-existing jax failures present since the seed (see ROADMAP.md "Seed
+# debt"); CI deselects them so it signals on *new* breakage, while the
+# tier-1 `verify` target keeps the debt visible locally
+KNOWN_FAILURES := \
+  --deselect tests/test_hlo.py::test_xla_counts_loop_bodies_once \
+  --deselect tests/test_hlo.py::test_collective_parser_on_sharded_module \
+  --deselect tests/test_spmd.py::test_pipeline_loss_and_grads_match_plain \
+  --deselect tests/test_spmd.py::test_checkpoint_reshards_across_meshes \
+  --deselect tests/test_spmd.py::test_small_mesh_train_step_lowers_with_production_rules \
+  --deselect tests/test_system.py::test_end_to_end_sl_training_converges
+
+verify-ci:
+	$(PYTHON) -m pytest -x -q $(KNOWN_FAILURES)
+
+test:
+	$(PYTHON) -m pytest -q
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+# fast standalone consistency check: event engine vs Eqs. (12)-(14)
+sim-check:
+	$(PYTHON) -m pytest -q tests/test_sim.py
+
+bench-fig6b:
+	$(PYTHON) -m benchmarks.fig6b_traces
+
+example-sim:
+	$(PYTHON) examples/simulate_pipeline.py

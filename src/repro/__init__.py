@@ -1,0 +1,35 @@
+"""repro — pipelined split learning in multi-hop edge networks.
+
+Subpackages are imported lazily so that lightweight users (``repro.core``,
+``repro.sim`` need only numpy) never pay for the jax-backed runtime
+(``repro.pipeline``, ``repro.models``, ``repro.kernels``, ...).
+"""
+
+import importlib
+
+_SUBMODULES = frozenset({
+    "checkpoint", "compression", "configs", "core", "data", "ft", "kernels",
+    "launch", "models", "optim", "pipeline", "sim", "utils",
+})
+
+# convenience re-exports: the simulation subsystem's public API
+_SIM_EXPORTS = frozenset({
+    "PipelineSimulator", "SimReport", "simulate_plan", "build_tasks",
+    "simulate_with_replanning", "ReplanSimReport", "SegmentReport",
+    "NetworkScenario", "PiecewiseTrace", "ReplanTrigger",
+    "piecewise_cv_scenario", "gauss_markov_scenario",
+    "CrossCheck", "cross_validate", "cross_validate_many",
+    "write_chrome_trace",
+})
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"{__name__}.{name}")
+    if name in _SIM_EXPORTS:
+        return getattr(importlib.import_module(f"{__name__}.sim"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _SUBMODULES | _SIM_EXPORTS)

@@ -1,10 +1,17 @@
 """Resource-fluctuation robustness (Fig. 6).
 
 Edge resources fluctuate during training; the plan is computed on *measured*
-conditions but executes under *actual* conditions.  We model actuals as the
-measured network perturbed by Gaussian multiplicative noise with a given
-coefficient of variation (CV) on both data rates and compute capabilities,
-then evaluate the fixed plan's true latency under each draw.
+conditions but executes under *actual* conditions.  Two evaluation modes:
+
+``mode="iid"`` (default, the original Fig. 6 model): each draw perturbs the
+whole network once by Gaussian multiplicative noise with a given coefficient
+of variation (CV) and evaluates the fixed plan's *analytical* latency.
+
+``mode="trace"``: each draw builds a time-varying capacity scenario
+(piecewise-constant i.i.d. resampling or Gauss-Markov drift, per
+``trace_model``) and *executes* the plan in the discrete-event simulator
+(``repro.sim``), so conditions drift during the pipeline and early
+micro-batches can see different capacity than late ones.
 """
 
 from __future__ import annotations
@@ -35,16 +42,54 @@ class FluctuationReport:
 
 def evaluate_under_fluctuation(profile: ModelProfile, net: EdgeNetwork,
                                plan: Plan, cv: float, *, draws: int = 32,
-                               seed: int = 0) -> FluctuationReport:
+                               seed: int = 0, mode: str = "iid",
+                               trace_model: str = "piecewise",
+                               dt: float | None = None,
+                               horizon: float | None = None,
+                               corr: float = 0.9) -> FluctuationReport:
     rng = np.random.default_rng(seed)
     lats = []
-    for _ in range(draws):
-        noisy = net.with_fluctuation(rng, cv)
-        lats.append(L.total_latency(profile, noisy, plan.solution, plan.b,
-                                    plan.B))
+    baseline = plan.L_t
+    if mode == "iid":
+        for _ in range(draws):
+            noisy = net.with_fluctuation(rng, cv)
+            lats.append(L.total_latency(profile, noisy, plan.solution,
+                                        plan.b, plan.B))
+    elif mode == "trace":
+        # local import: sim depends on core, so core must not import sim
+        # at module scope
+        from repro.sim import (simulate_plan, piecewise_cv_scenario,
+                               gauss_markov_scenario)
+        planned = plan.L_t if np.isfinite(plan.L_t) and plan.L_t > 0 else 1.0
+        if dt is None:
+            dt = max(planned / 32.0, 1e-9)         # ~32 epochs per run
+        if horizon is None:
+            horizon = 4.0 * planned                # slack for degraded runs
+        if dt <= 0 or horizon <= 0:
+            raise ValueError("dt and horizon must be positive")
+        # degradation baseline: the *simulated* deterministic run, so plans
+        # with co-located submodels (where FIFO execution deviates from the
+        # idealized Eq. 14) don't report spurious degradation at cv = 0
+        baseline = simulate_plan(profile, net, plan.solution, plan.b,
+                                 B=plan.B).L_t
+        for d in range(draws):
+            r = np.random.default_rng((seed, d))
+            if trace_model == "piecewise":
+                scen = piecewise_cv_scenario(net, cv, r, dt=dt,
+                                             horizon=horizon)
+            elif trace_model == "gauss_markov":
+                scen = gauss_markov_scenario(net, cv, r, dt=dt,
+                                             horizon=horizon, corr=corr)
+            else:
+                raise ValueError(f"unknown trace_model {trace_model!r}")
+            rep = simulate_plan(profile, net, plan.solution, plan.b,
+                                B=plan.B, scenario=scen)
+            lats.append(rep.L_t)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
     lats = np.asarray(lats)
     return FluctuationReport(
         cv=cv, mean_latency=float(lats.mean()), std_latency=float(lats.std()),
         p95_latency=float(np.percentile(lats, 95)),
-        planned_latency=plan.L_t,
-        degradation=float(lats.mean() / plan.L_t) if plan.L_t > 0 else 1.0)
+        planned_latency=float(baseline),
+        degradation=float(lats.mean() / baseline) if baseline > 0 else 1.0)

@@ -106,6 +106,28 @@ def client_max_share(b: int, M: int) -> int:
 # Eqs. (2)-(11): per-stage / per-link components
 # ---------------------------------------------------------------------------
 
+def fp_work(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
+            node: int, b: int) -> float:
+    """Eq. (2)'s rate-scaled work term: eff_b * kappa_n * delta^F_k.
+
+    Served at f_n it yields the FP latency (minus the t0 constant); the
+    event simulator serves the same term against time-varying capacity.
+    """
+    n = net.nodes[node]
+    eff_b = client_max_share(b, net.num_clients) if node == 0 else b
+    return eff_b * n.kappa * profile.seg_fp(lo, hi)
+
+
+def bp_work(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
+            node: int, b: int) -> float:
+    """Eq. (7)'s rate-scaled work term (0 below the b_th threshold)."""
+    n = net.nodes[node]
+    eff_b = client_max_share(b, net.num_clients) if node == 0 else b
+    if eff_b <= n.b_th:
+        return 0.0
+    return (eff_b - n.b_th) * n.kappa * profile.seg_bp(lo, hi)
+
+
 def fp_latency(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
                node: int, b: int) -> float:
     """Eq. (2): FP latency of submodel (lo, hi] on ``node`` for b samples.
@@ -114,18 +136,17 @@ def fp_latency(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
     the *slowest* (largest-share) client defines the latency.
     """
     n = net.nodes[node]
-    eff_b = client_max_share(b, net.num_clients) if node == 0 else b
-    return eff_b * n.kappa * profile.seg_fp(lo, hi) / n.f + (n.t0)
+    return fp_work(profile, net, lo, hi, node, b) / n.f + (n.t0)
 
 
 def bp_latency(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
                node: int, b: int) -> float:
     """Eq. (7): piecewise BP latency with threshold b_th."""
     n = net.nodes[node]
-    eff_b = client_max_share(b, net.num_clients) if node == 0 else b
-    if eff_b <= n.b_th:
+    w = bp_work(profile, net, lo, hi, node, b)
+    if w == 0.0:
         return float(n.t1)
-    return (eff_b - n.b_th) * n.kappa * profile.seg_bp(lo, hi) / n.f + n.t1
+    return w / n.f + n.t1
 
 
 def fwd_bytes(profile: ModelProfile, net: EdgeNetwork, cut: int, b: int,

@@ -1,0 +1,32 @@
+"""Discrete-event simulation of pipelined split learning (the execution
+counterpart of the Eq. (1)-(14) analytical model).
+
+``engine`` executes a split/placement solution as discrete events — per
+micro-batch FP/BP compute on each node and activation/gradient transfers on
+each hop, with FIFO resource occupancy (a node engine or link serves one unit
+at a time, matching the co-location sums of C9-C16).  ``scenario`` supplies
+time-varying capacity traces (piecewise-constant, Gauss-Markov), straggler
+windows, link outages, and replan triggers.  ``validate`` cross-checks the
+simulated ``T_f``/``T_i``/``L_t`` against ``core.latency`` on deterministic
+networks — exact to numerical tolerance, a standing consistency test.
+"""
+
+from .events import Task, TraceRecord, write_chrome_trace
+from .scenario import (PiecewiseTrace, constant, piecewise, gauss_markov,
+                       iid_piecewise, NetworkScenario, ReplanTrigger,
+                       piecewise_cv_scenario, gauss_markov_scenario)
+from .engine import (PipelineSimulator, SimReport, build_tasks, simulate_plan,
+                     SegmentReport, ReplanSimReport, simulate_with_replanning)
+from .validate import (CrossCheck, cross_validate, cross_validate_many,
+                       random_chain_solution, random_instance)
+
+__all__ = [
+    "Task", "TraceRecord", "write_chrome_trace",
+    "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
+    "iid_piecewise", "NetworkScenario", "ReplanTrigger",
+    "piecewise_cv_scenario", "gauss_markov_scenario",
+    "PipelineSimulator", "SimReport", "build_tasks", "simulate_plan",
+    "SegmentReport", "ReplanSimReport", "simulate_with_replanning",
+    "CrossCheck", "cross_validate", "cross_validate_many",
+    "random_chain_solution", "random_instance",
+]

@@ -1,0 +1,388 @@
+"""Event-driven executor for a pipelined-SL plan.
+
+Each micro-batch is a chain of tasks — client FP, per-hop activation
+transfers, per-stage server FP, then BP and act-gradient transfers back —
+and each task occupies one FIFO resource (node FP engine, node BP engine, or
+a directed link; see ``events``).  The engine maintains a priority queue of
+(time, seq) events; a resource serves one task at a time and tasks queue in
+arrival order, so co-located submodels *contend* exactly as the per-node
+sums of Eq. (13)/C9-C16 assume.
+
+Consistency guarantee (the standing ``sim.validate`` cross-check): on a
+deterministic network whose plan places every submodel on a distinct node,
+each resource is visited exactly once per micro-batch — a permutation flow
+shop with identical jobs — and the simulated makespan equals the analytical
+
+    L_t = T_f + ceil((B - b)/b) * T_i                            (Eq. 14)
+
+to float precision, with the simulated fill time equal to Eq. (12)'s T_f and
+the steady-state completion interval equal to Eq. (13)'s bottleneck T_i.
+Following the paper's accounting, every pipeline slot is charged a *full*
+micro-batch of size b (the trailing remainder micro-batch is padded).
+
+With a ``NetworkScenario``, task durations integrate the piecewise-constant
+capacity traces from their start time (transfers stall through outages,
+compute stretches through straggler windows), and ``simulate_with_replanning``
+drives an ``ft.Coordinator`` from *simulated* time: at each trigger the
+completed micro-batches are banked, the coordinator replans on the mutated
+network, and the remainder of the mini-batch resumes under the new plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import deque
+
+import numpy as np
+
+from repro.core.latency import (SplitSolution, bp_work, bwd_bytes, fp_work,
+                                fwd_bytes, num_fills)
+from repro.core.network import EdgeNetwork
+from repro.core.profiles import ModelProfile
+from .events import Task, TraceRecord
+from .scenario import NetworkScenario, PiecewiseTrace, constant
+
+
+# ---------------------------------------------------------------------------
+# Task construction: one chain per micro-batch
+# ---------------------------------------------------------------------------
+
+def build_tasks(profile: ModelProfile, net: EdgeNetwork, sol: SplitSolution,
+                b: int, num_microbatches: int) -> list:
+    """The task DAG (here: disjoint chains) for ``num_microbatches``
+    micro-batches of size ``b`` through ``sol``'s stage/placement chain.
+
+    Work terms mirror Eqs. (2)/(5)/(7)/(9) exactly: compute work is
+    ``eff_b * kappa_n * delta`` served at f_n, transfer work is the
+    activation/act-gradient byte volume served at the link rate; the t0/t1
+    constants ride along as rate-independent ``fixed`` seconds.
+    """
+    segs = list(sol.segments())
+    if not segs:
+        raise ValueError("solution has no non-empty submodels")
+    tasks: list = []
+    tid = 0
+    for m in range(num_microbatches):
+        prev = None
+        # forward sweep: FP_k, then the k -> k+1 activation transfer
+        for j, (k, lo, hi, node) in enumerate(segs):
+            n = net.nodes[node]
+            tasks.append(Task(tid, m, k, "fp", ("fp", node),
+                              work=fp_work(profile, net, lo, hi, node, b),
+                              fixed=n.t0, dep=prev))
+            prev = tid
+            tid += 1
+            if j + 1 < len(segs):
+                nxt = segs[j + 1][3]
+                tasks.append(Task(tid, m, k, "fwd", ("fwd", node, nxt),
+                                  work=fwd_bytes(profile, net, hi, b,
+                                                 from_client=(node == 0)),
+                                  dep=prev))
+                prev = tid
+                tid += 1
+        # backward sweep: BP_k, then the k -> k-1 act-gradient transfer
+        for j in range(len(segs) - 1, -1, -1):
+            k, lo, hi, node = segs[j]
+            n = net.nodes[node]
+            tasks.append(Task(tid, m, k, "bp", ("bp", node),
+                              work=bp_work(profile, net, lo, hi, node, b),
+                              fixed=n.t1, dep=prev))
+            prev = tid
+            tid += 1
+            if j > 0:
+                _, _, hi_prev, below = segs[j - 1]
+                # grads crossing cut hi_prev flow node -> below (Eq. 9/10)
+                tasks.append(Task(tid, m, k, "bwd", ("bwd", node, below),
+                                  work=bwd_bytes(profile, net, hi_prev, b,
+                                                 to_client=(below == 0)),
+                                  dep=prev))
+                prev = tid
+                tid += 1
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class _Resource:
+    __slots__ = ("busy", "queue", "busy_time")
+
+    def __init__(self):
+        self.busy = False
+        self.queue = deque()
+        self.busy_time = 0.0
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Outcome of one simulation run."""
+    records: list                # TraceRecord, in completion order
+    mb_complete: np.ndarray      # absolute completion time per micro-batch
+    t_start: float
+    b: int
+    num_microbatches: int
+    resource_busy: dict          # resource -> busy fraction of the run
+
+    @property
+    def makespan(self) -> float:
+        """Absolute time the last micro-batch drains."""
+        return float(self.mb_complete[-1]) if len(self.mb_complete) else self.t_start
+
+    @property
+    def T_f(self) -> float:
+        """Simulated fill latency — first micro-batch end-to-end (Eq. 12)."""
+        return float(self.mb_complete[0] - self.t_start)
+
+    @property
+    def T_i(self) -> float:
+        """Simulated steady-state interval — trailing completion gap
+        (Eq. 13's bottleneck on deterministic networks)."""
+        if len(self.mb_complete) < 2:
+            return 0.0
+        return float(self.mb_complete[-1] - self.mb_complete[-2])
+
+    @property
+    def L_t(self) -> float:
+        """Simulated total latency (Eq. 14's counterpart)."""
+        return self.makespan - self.t_start
+
+    def intervals(self) -> np.ndarray:
+        return np.diff(self.mb_complete)
+
+
+class PipelineSimulator:
+    """FIFO discrete-event simulator over a task set.
+
+    Events are ordered by (time, insertion seq); ties therefore resolve
+    causally and deterministically.  Task durations are computed at service
+    start by integrating the resource's capacity trace — exact for the
+    piecewise-constant scenarios (no preemption is needed because traces are
+    exogenous).
+    """
+
+    def __init__(self, net: EdgeNetwork, tasks, *, b: int = 0,
+                 scenario: NetworkScenario | None = None, t_start: float = 0.0):
+        self.net = net
+        self.tasks = {t.tid: t for t in tasks}
+        self.b = b                   # micro-batch size, echoed in the report
+        self.scenario = scenario
+        self.t_start = t_start
+        self._traces: dict = {}
+
+    # -- capacity ------------------------------------------------------------
+    def _trace(self, resource: tuple) -> PiecewiseTrace:
+        tr = self._traces.get(resource)
+        if tr is None:
+            kind = resource[0]
+            if kind in ("fp", "bp"):
+                if self.scenario is not None:
+                    tr = self.scenario.node_trace(self.net, resource[1])
+                else:
+                    tr = constant(self.net.nodes[resource[1]].f)
+            else:
+                a, c = resource[1], resource[2]
+                if self.scenario is not None:
+                    tr = self.scenario.link_trace(self.net, a, c)
+                else:
+                    tr = constant(self.net.rate[a, c])
+            self._traces[resource] = tr
+        return tr
+
+    def _duration(self, task: Task, t: float) -> float:
+        if task.work <= 0.0:
+            return task.fixed
+        tr = self._trace(task.resource)
+        if len(tr.times) == 1:                 # constant capacity fast path
+            v = tr.values[0]
+            return task.fixed + (task.work / v if v > 0 else math.inf)
+        return task.fixed + tr.time_to_complete(t + task.fixed, task.work)
+
+    # -- event loop ----------------------------------------------------------
+    def run(self) -> SimReport:
+        succs: dict = {}
+        indeg = {tid: 0 for tid in self.tasks}
+        for t in self.tasks.values():
+            if t.dep is not None:
+                succs.setdefault(t.dep, []).append(t.tid)
+                indeg[t.tid] += 1
+        resources: dict = {}
+        for t in self.tasks.values():
+            resources.setdefault(t.resource, _Resource())
+
+        heap: list = []
+        seq = 0
+
+        def push(time, kind, tid):
+            nonlocal seq
+            heapq.heappush(heap, (time, seq, kind, tid))
+            seq += 1
+
+        # roots become ready at t_start, in tid (= micro-batch) order
+        for tid in sorted(t.tid for t in self.tasks.values() if indeg[t.tid] == 0):
+            push(self.t_start, "ready", tid)
+
+        records: list = []
+        mb_done: dict = {}
+        started: dict = {}
+
+        def start(task: Task, now: float):
+            res = resources[task.resource]
+            res.busy = True
+            started[task.tid] = now
+            dur = self._duration(task, now)
+            push(now + dur, "end", task.tid)
+
+        while heap:
+            now, _, kind, tid = heapq.heappop(heap)
+            task = self.tasks[tid]
+            res = resources[task.resource]
+            if kind == "ready":
+                if res.busy:
+                    res.queue.append(task)
+                else:
+                    start(task, now)
+            else:  # "end"
+                t0 = started.pop(tid)
+                records.append(TraceRecord(task.microbatch, task.stage,
+                                           task.kind, task.resource, t0, now))
+                res.busy = False
+                res.busy_time += now - t0
+                if res.queue:
+                    start(res.queue.popleft(), now)
+                for s in succs.get(tid, ()):
+                    indeg[s] -= 1
+                    if indeg[s] == 0:
+                        push(now, "ready", s)
+                prev = mb_done.get(task.microbatch, -math.inf)
+                mb_done[task.microbatch] = max(prev, now)
+
+        n_mb = 1 + max(mb_done) if mb_done else 0
+        mb_complete = np.array([mb_done[m] for m in range(n_mb)])
+        span = (float(mb_complete[-1]) - self.t_start) if n_mb else 0.0
+        busy = {r: (res.busy_time / span if span > 0 else 0.0)
+                for r, res in resources.items()}
+        return SimReport(records=records, mb_complete=mb_complete,
+                         t_start=self.t_start, b=self.b,
+                         num_microbatches=n_mb, resource_busy=busy)
+
+
+def simulate_plan(profile: ModelProfile, net: EdgeNetwork,
+                  sol: SplitSolution, b: int, *, B: int | None = None,
+                  num_microbatches: int | None = None,
+                  scenario: NetworkScenario | None = None,
+                  t_start: float = 0.0) -> SimReport:
+    """Simulate ``sol`` end to end and report the timeline.
+
+    Give either ``B`` (mini-batch size: ``1 + ceil((B-b)/b)`` full-size
+    micro-batches, the paper's Eq. (14) accounting) or an explicit
+    ``num_microbatches``.
+    """
+    if num_microbatches is None:
+        if B is None:
+            raise ValueError("pass B or num_microbatches")
+        num_microbatches = 1 + num_fills(B, b)
+    tasks = build_tasks(profile, net, sol, b, num_microbatches)
+    return PipelineSimulator(net, tasks, b=b, scenario=scenario,
+                             t_start=t_start).run()
+
+
+# ---------------------------------------------------------------------------
+# Replanning driver: ft.Coordinator on simulated time
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SegmentReport:
+    """One inter-trigger stretch of the replanned run."""
+    plan: object                 # the core.Plan in force during the segment
+    report: SimReport            # full hypothetical run of the segment
+    completed: int               # micro-batches banked before the cutoff
+    cutoff: float                # absolute time the segment ended
+    trigger: object | None       # ReplanTrigger that ended it (None = drain)
+    outcome: object | None       # ft.ReplanOutcome for that trigger
+
+
+@dataclasses.dataclass
+class ReplanSimReport:
+    makespan: float              # absolute time the mini-batch drains
+    segments: list               # SegmentReport
+    coordinator: object          # the driven ft.Coordinator (holds outcomes)
+
+    @property
+    def num_replans(self) -> int:
+        return sum(1 for s in self.segments if s.trigger is not None)
+
+
+def simulate_with_replanning(profile: ModelProfile, net: EdgeNetwork, B: int,
+                             triggers=(), *, coordinator=None,
+                             scenario: NetworkScenario | None = None,
+                             remap_penalty: float = 0.0,
+                             **coordinator_kwargs) -> ReplanSimReport:
+    """Execute a mini-batch of ``B`` samples while ``ReplanTrigger``s fire
+    at simulated times.  Triggers come from the ``triggers`` argument and/or
+    ``scenario.replan_triggers`` (composed via ``with_replan``); both are
+    merged and fired in time order.
+
+    At each trigger: micro-batches fully drained by then are banked,
+    in-flight ones are discarded (they re-run after the remap), the event is
+    applied to the coordinator — mutating its network and replanning per the
+    paper's BCD — and the remaining samples resume at
+    ``trigger.time + remap_penalty`` under the new plan.  The physical
+    effect of each event (slower node, changed rate, lost server) takes hold
+    from its trigger time via the coordinator's mutated network.
+
+    ``scenario`` capacity traces are keyed by node/link index; a
+    ``NodeFailure`` renumbers the network's indices, so combining the two
+    would silently apply traces to the wrong nodes — that combination is
+    rejected.
+    """
+    from repro.ft.coordinator import Coordinator, NodeFailure  # local: avoid hard dep
+
+    coord = coordinator or Coordinator(profile, net, B, **coordinator_kwargs)
+    all_triggers = tuple(triggers)
+    if scenario is not None:
+        all_triggers += tuple(scenario.replan_triggers)
+        if any(isinstance(tr.event, NodeFailure) for tr in all_triggers):
+            raise ValueError(
+                "NodeFailure triggers cannot be combined with a capacity "
+                "scenario: degraded() renumbers node indices, so the "
+                "scenario's index-keyed traces would land on the wrong "
+                "nodes/links")
+    segments: list = []
+    t = 0.0
+    samples_left = B
+    for trig in sorted(all_triggers, key=lambda tr: tr.time):
+        if samples_left <= 0:
+            break
+        plan = coord.plan
+        if not plan.feasible or plan.b <= 0:
+            break
+        m = max(1, math.ceil(samples_left / plan.b))
+        rep = simulate_plan(profile, coord.net, plan.solution, plan.b,
+                            num_microbatches=m, scenario=scenario, t_start=t)
+        if rep.makespan <= trig.time:
+            # drained before the event fired — the run is simply over
+            segments.append(SegmentReport(plan, rep, m, rep.makespan,
+                                          None, None))
+            return ReplanSimReport(rep.makespan, segments, coord)
+        done = int(np.searchsorted(rep.mb_complete, trig.time, side="right"))
+        samples_left = max(0, samples_left - done * plan.b)
+        outcome = coord.apply(trig.event)
+        segments.append(SegmentReport(plan, rep, done, trig.time, trig,
+                                      outcome))
+        t = trig.time + remap_penalty
+    if samples_left > 0:
+        plan = coord.plan
+        if plan.feasible and plan.b > 0:
+            m = max(1, math.ceil(samples_left / plan.b))
+            rep = simulate_plan(profile, coord.net, plan.solution, plan.b,
+                                num_microbatches=m, scenario=scenario,
+                                t_start=t)
+            segments.append(SegmentReport(plan, rep, m, rep.makespan,
+                                          None, None))
+            t = rep.makespan
+        else:
+            t = math.inf
+    return ReplanSimReport(t, segments, coord)

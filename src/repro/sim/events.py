@@ -1,0 +1,103 @@
+"""Event and trace records for the pipeline simulator.
+
+A simulation run is a set of ``Task``s (one unit of work for one micro-batch
+on one resource) connected by precedence edges; executing them produces
+``TraceRecord``s — the full timeline, exportable as a Chrome-trace JSON
+(`chrome://tracing` / Perfetto) for visual inspection of the schedule.
+
+Resource keys mirror the aggregation of Eq. (13) / C9-C16:
+
+  ("fp",  node)        the node's forward engine
+  ("bp",  node)        the node's backward engine (separate resource, C13)
+  ("fwd", n, n')       the directed n->n' transfer resource (activations)
+  ("bwd", n', n)       the directed n'->n transfer resource (act-gradients)
+
+Co-located submodels map to the *same* key, so their per-micro-batch work
+serializes — exactly the per-node sums of the analytical bottleneck.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+
+#: task kinds, in the order they appear along one micro-batch's chain
+KINDS = ("fp", "fwd", "bp", "bwd")
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One unit of simulated work.
+
+    ``work`` is in capacity units (kappa-scaled workload for compute, bytes
+    for transfers) and is served at the resource's — possibly time-varying —
+    capacity; ``fixed`` is a rate-independent latency constant (the paper's
+    t0/t1 terms) paid up front.
+    """
+    tid: int
+    microbatch: int
+    stage: int                   # submodel index k (link tasks: upstream k)
+    kind: str                    # "fp" | "bp" | "fwd" | "bwd"
+    resource: tuple              # see module docstring
+    work: float
+    fixed: float = 0.0
+    dep: int | None = None       # tid that must finish first (chain edge)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown task kind {self.kind!r}")
+        if self.work < 0 or self.fixed < 0:
+            raise ValueError("work/fixed must be non-negative")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRecord:
+    """One executed task: [start, end) occupancy of ``resource``."""
+    microbatch: int
+    stage: int
+    kind: str
+    resource: tuple
+    start: float
+    end: float
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+def resource_label(resource: tuple) -> str:
+    if resource[0] in ("fp", "bp"):
+        return f"node{resource[1]}:{resource[0]}"
+    return f"link{resource[1]}->{resource[2]}:{resource[0]}"
+
+
+def write_chrome_trace(records, path: str, *, time_scale: float = 1e6) -> str:
+    """Write the timeline as a Chrome-trace JSON (ts/dur in microseconds).
+
+    One "thread" per resource; each record becomes a complete ("X") event.
+    Load the file at chrome://tracing or https://ui.perfetto.dev.
+    """
+    resources = sorted({r.resource for r in records},
+                       key=lambda res: (KINDS.index(res[0]), res[1:]))
+    tid_of = {res: i for i, res in enumerate(resources)}
+    events = [{"ph": "M", "name": "thread_name", "pid": 0, "tid": tid,
+               "args": {"name": resource_label(res)}}
+              for res, tid in tid_of.items()]
+    for r in records:
+        events.append({
+            "name": f"mb{r.microbatch} k{r.stage} {r.kind}",
+            "ph": "X", "pid": 0, "tid": tid_of[r.resource],
+            "ts": r.start * time_scale,
+            "dur": max(r.end - r.start, 0.0) * time_scale,
+            "args": {"microbatch": r.microbatch, "stage": r.stage,
+                     "kind": r.kind},
+        })
+    out = {"traceEvents": events, "displayTimeUnit": "ms"}
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f)
+    return path

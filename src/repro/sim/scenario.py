@@ -1,0 +1,235 @@
+"""Time-varying network scenarios for the simulator.
+
+Capacities (node FLOP/s, link bytes/s) evolve as *piecewise-constant* step
+functions of simulated time — rich enough to express every dynamic the
+surrounding papers study (sampled Gauss-Markov channels, straggler windows,
+link outages) while keeping task-completion times exactly integrable: a task
+of ``work`` units started at ``t0`` finishes when the integral of the
+capacity trace reaches ``work``.
+
+This supersedes the i.i.d. per-draw perturbations of
+``core.fluctuation.evaluate_under_fluctuation`` (its ``mode="trace"`` path
+routes through these scenarios): instead of one multiplicative draw per
+evaluation, conditions drift *during* the pipeline, so early micro-batches
+can see different capacity than late ones.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.network import EdgeNetwork
+
+
+# ---------------------------------------------------------------------------
+# Piecewise-constant traces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PiecewiseTrace:
+    """value(t) = values[i] on [times[i], times[i+1]); last value holds
+    forever.  ``times`` is strictly increasing with ``times[0] == 0.0``."""
+    times: tuple
+    values: tuple
+
+    def __post_init__(self):
+        if len(self.times) != len(self.values) or not self.times:
+            raise ValueError("times/values must be non-empty, equal length")
+        if self.times[0] != 0.0:
+            raise ValueError("trace must start at t = 0")
+        if any(b <= a for a, b in zip(self.times, self.times[1:])):
+            raise ValueError("times must be strictly increasing")
+        if any(v < 0 for v in self.values):
+            raise ValueError("capacities must be non-negative")
+
+    def value_at(self, t: float) -> float:
+        i = bisect.bisect_right(self.times, t) - 1
+        return self.values[max(i, 0)]
+
+    def scale(self, factor: float) -> "PiecewiseTrace":
+        return PiecewiseTrace(self.times,
+                              tuple(v * factor for v in self.values))
+
+    def __mul__(self, other: "PiecewiseTrace") -> "PiecewiseTrace":
+        """Pointwise product (merged breakpoints)."""
+        times = sorted(set(self.times) | set(other.times))
+        values = tuple(self.value_at(t) * other.value_at(t) for t in times)
+        return PiecewiseTrace(tuple(times), values)
+
+    def is_constant(self) -> bool:
+        return len(set(self.values)) == 1
+
+    def time_to_complete(self, t0: float, work: float) -> float:
+        """Seconds after ``t0`` until the integral of the trace covers
+        ``work``; ``inf`` if capacity stays zero before the work drains."""
+        if work <= 0.0:
+            return 0.0
+        i = max(bisect.bisect_right(self.times, t0) - 1, 0)
+        t, remaining = t0, work
+        while True:
+            v = self.values[i]
+            seg_end = self.times[i + 1] if i + 1 < len(self.times) else math.inf
+            if v > 0.0:
+                need = remaining / v
+                if t + need <= seg_end:
+                    return t + need - t0
+                remaining -= v * (seg_end - t)
+            elif seg_end == math.inf:
+                return math.inf
+            t = seg_end
+            i += 1
+
+
+def constant(value: float) -> PiecewiseTrace:
+    return PiecewiseTrace((0.0,), (float(value),))
+
+
+def piecewise(times, values) -> PiecewiseTrace:
+    return PiecewiseTrace(tuple(float(t) for t in times),
+                          tuple(float(v) for v in values))
+
+
+def _window(start: float, end: float, inside: float) -> PiecewiseTrace:
+    """Multiplier trace: ``inside`` on [start, end), 1 elsewhere."""
+    if not 0.0 <= start < end:
+        raise ValueError("need 0 <= start < end")
+    if start == 0.0:
+        return piecewise((0.0, end), (inside, 1.0))
+    return piecewise((0.0, start, end), (1.0, inside, 1.0))
+
+
+def iid_piecewise(rng: np.random.Generator, cv: float, *, dt: float,
+                  horizon: float, mean: float = 1.0,
+                  floor: float = 0.05) -> PiecewiseTrace:
+    """Independent ``max(N(mean, cv*mean), floor)`` draws every ``dt`` —
+    the trace analogue of ``EdgeNetwork.with_fluctuation``'s marginals."""
+    if cv <= 0:
+        return constant(mean)
+    n = max(int(math.ceil(horizon / dt)), 1) + 1
+    vals = np.maximum(rng.normal(mean, cv * mean, n), floor)
+    return piecewise(tuple(i * dt for i in range(n)), tuple(vals))
+
+
+def gauss_markov(rng: np.random.Generator, cv: float, *, dt: float,
+                 horizon: float, mean: float = 1.0, corr: float = 0.9,
+                 floor: float = 0.05) -> PiecewiseTrace:
+    """Sampled stationary AR(1) (Gauss-Markov) multiplier trace:
+
+        x[j+1] = mean + corr * (x[j] - mean) + sigma * sqrt(1-corr^2) * eps
+
+    with stationary std ``sigma = cv * mean`` — temporally *correlated*
+    fluctuation, the standard mobility/channel drift model.
+    """
+    if cv <= 0:
+        return constant(mean)
+    n = max(int(math.ceil(horizon / dt)), 1) + 1
+    sigma = cv * mean
+    x = mean + sigma * float(rng.standard_normal())
+    vals = []
+    innov = sigma * math.sqrt(max(1.0 - corr * corr, 0.0))
+    for _ in range(n):
+        vals.append(max(x, floor))
+        x = mean + corr * (x - mean) + innov * float(rng.standard_normal())
+    return piecewise(tuple(i * dt for i in range(n)), tuple(vals))
+
+
+# ---------------------------------------------------------------------------
+# Network scenario: per-node / per-link multipliers + replan triggers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplanTrigger:
+    """At simulated ``time``, feed ``event`` (an ``repro.ft`` event —
+    Straggler/RateChange/NodeFailure) to the coordinator and resume the
+    remaining micro-batches under its new plan."""
+    time: float
+    event: object
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkScenario:
+    """Multiplier traces over a base ``EdgeNetwork``.
+
+    ``node_mult[n]`` scales node n's compute capability f_n over time;
+    ``link_mult[(n, n')]`` scales the directed effective rate.  Absent keys
+    mean "constant 1".  Scenarios are immutable; ``with_*`` helpers compose
+    extra windows multiplicatively.
+    """
+    node_mult: dict = dataclasses.field(default_factory=dict)
+    link_mult: dict = dataclasses.field(default_factory=dict)
+    replan_triggers: tuple = ()
+
+    # -- capacity traces ----------------------------------------------------
+    def node_trace(self, net: EdgeNetwork, node: int) -> PiecewiseTrace:
+        base = constant(net.nodes[node].f)
+        m = self.node_mult.get(node)
+        return base * m if m is not None else base
+
+    def link_trace(self, net: EdgeNetwork, a: int, c: int) -> PiecewiseTrace:
+        base = constant(net.rate[a, c])
+        m = self.link_mult.get((a, c))
+        return base * m if m is not None else base
+
+    # -- composition --------------------------------------------------------
+    def _compose(self, table: dict, key, trace: PiecewiseTrace) -> dict:
+        out = dict(table)
+        out[key] = out[key] * trace if key in out else trace
+        return out
+
+    def with_straggler(self, node: int, start: float, end: float,
+                       slowdown: float) -> "NetworkScenario":
+        """Node ``node`` computes ``slowdown``x slower on [start, end)."""
+        return dataclasses.replace(self, node_mult=self._compose(
+            self.node_mult, node, _window(start, end, 1.0 / slowdown)))
+
+    def with_outage(self, a: int, c: int, start: float, end: float,
+                    both_directions: bool = True) -> "NetworkScenario":
+        """Link (a, c) carries zero bytes on [start, end) — transfers in
+        flight stall and resume when the outage lifts."""
+        lm = self._compose(self.link_mult, (a, c), _window(start, end, 0.0))
+        s = dataclasses.replace(self, link_mult=lm)
+        if both_directions:
+            lm = s._compose(s.link_mult, (c, a), _window(start, end, 0.0))
+            s = dataclasses.replace(s, link_mult=lm)
+        return s
+
+    def with_replan(self, time: float, event) -> "NetworkScenario":
+        trig = ReplanTrigger(time, event)
+        return dataclasses.replace(
+            self, replan_triggers=tuple(sorted(
+                self.replan_triggers + (trig,), key=lambda t: t.time)))
+
+
+def _scenario_from_sampler(net: EdgeNetwork, sampler) -> NetworkScenario:
+    node_mult = {i: sampler() for i in range(len(net.nodes))}
+    link_mult = {}
+    for a in range(len(net.nodes)):
+        for c in range(len(net.nodes)):
+            if a != c and net.rate[a, c] > 0:
+                link_mult[(a, c)] = sampler()
+    return NetworkScenario(node_mult=node_mult, link_mult=link_mult)
+
+
+def piecewise_cv_scenario(net: EdgeNetwork, cv: float,
+                          rng: np.random.Generator, *, dt: float,
+                          horizon: float, floor: float = 0.05
+                          ) -> NetworkScenario:
+    """Every node/link gets an independent i.i.d.-resampled piecewise trace
+    with coefficient-of-variation ``cv`` (Fig. 6's noise, unfolded in time)."""
+    return _scenario_from_sampler(
+        net, lambda: iid_piecewise(rng, cv, dt=dt, horizon=horizon,
+                                   floor=floor))
+
+
+def gauss_markov_scenario(net: EdgeNetwork, cv: float,
+                          rng: np.random.Generator, *, dt: float,
+                          horizon: float, corr: float = 0.9,
+                          floor: float = 0.05) -> NetworkScenario:
+    """Every node/link gets an independent Gauss-Markov (AR(1)) trace."""
+    return _scenario_from_sampler(
+        net, lambda: gauss_markov(rng, cv, dt=dt, horizon=horizon, corr=corr,
+                                  floor=floor))

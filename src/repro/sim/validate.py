@@ -1,0 +1,115 @@
+"""Cross-validation of the simulator against the analytical latency model.
+
+On a deterministic network whose plan places every submodel on a distinct
+node, each resource is visited exactly once per micro-batch, so the FIFO
+pipeline is a permutation flow shop with identical jobs and the analytical
+Eqs. (12)-(14) are *exact*: simulated T_f, T_i and L_t must agree with
+``core.latency.fill_latency`` / ``pipeline_interval`` / ``total_latency`` to
+numerical tolerance.  ``cross_validate_many`` runs this over randomized
+(profile, network, plan) triples — the standing consistency test that keeps
+the closed-form model and the event engine honest against each other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import latency as L
+from repro.core.latency import SplitSolution, validate_solution
+from repro.core.network import EdgeNetwork, make_edge_network
+from repro.core.profiles import ModelProfile, random_profile
+from .engine import simulate_plan
+
+#: topologies cycled through by ``random_instance``
+TOPOLOGIES = ("mesh", "line", "star", "tree")
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossCheck:
+    """Simulated vs analytical latencies for one (profile, net, plan, b, B)."""
+    T_f_sim: float
+    T_f_ana: float
+    T_i_sim: float
+    T_i_ana: float
+    L_t_sim: float
+    L_t_ana: float
+    b: int
+    B: int
+    cuts: tuple
+    placement: tuple
+    rtol: float
+
+    def _rel(self, a: float, c: float) -> float:
+        return abs(a - c) / max(abs(c), 1e-30)
+
+    @property
+    def max_rel_err(self) -> float:
+        errs = [self._rel(self.T_f_sim, self.T_f_ana),
+                self._rel(self.L_t_sim, self.L_t_ana)]
+        if self.B > self.b:          # T_i only observable with >= 2 slots
+            errs.append(self._rel(self.T_i_sim, self.T_i_ana))
+        return max(errs)
+
+    @property
+    def ok(self) -> bool:
+        return np.isfinite(self.L_t_ana) and self.max_rel_err <= self.rtol
+
+
+def random_chain_solution(rng: np.random.Generator, profile: ModelProfile,
+                          net: EdgeNetwork,
+                          max_stages: int | None = None) -> SplitSolution:
+    """A random feasible solution with *distinct* placements (no co-located
+    submodels — the regime where Eq. (14) is exact; see module docstring)."""
+    I = profile.num_layers
+    cap = min(max_stages or I, net.num_servers + 1, I)
+    K = int(rng.integers(2, cap + 1)) if cap >= 2 else 1
+    if K == 1:
+        sol = SplitSolution((I,), (0,))
+    else:
+        inner = np.sort(rng.choice(np.arange(1, I), size=K - 1, replace=False))
+        cuts = tuple(int(c) for c in inner) + (I,)
+        servers = rng.choice(np.arange(1, len(net.nodes)), size=K - 1,
+                             replace=False)
+        sol = SplitSolution(cuts, (0,) + tuple(int(s) for s in servers))
+    validate_solution(sol, profile, net)
+    return sol
+
+
+def random_instance(seed: int):
+    """One randomized (profile, network, solution, b, B) validation triple."""
+    rng = np.random.default_rng(seed)
+    num_layers = int(rng.integers(4, 12))
+    num_servers = int(rng.integers(2, 6))
+    topology = TOPOLOGIES[seed % len(TOPOLOGIES)]
+    profile = random_profile(rng, num_layers)
+    net = make_edge_network(num_servers=num_servers,
+                            num_clients=int(rng.integers(1, 5)),
+                            topology=topology, seed=seed)
+    sol = random_chain_solution(rng, profile, net)
+    b = int(rng.integers(1, 17))
+    B = b * int(rng.integers(2, 9)) + int(rng.integers(0, b))
+    return profile, net, sol, b, B
+
+
+def cross_validate(profile: ModelProfile, net: EdgeNetwork,
+                   sol: SplitSolution, b: int, B: int, *,
+                   rtol: float = 1e-6) -> CrossCheck:
+    """Simulate and compare against Eqs. (12)-(14) for one instance."""
+    rep = simulate_plan(profile, net, sol, b, B=B)
+    return CrossCheck(
+        T_f_sim=rep.T_f,
+        T_f_ana=L.fill_latency(profile, net, sol, b),
+        T_i_sim=rep.T_i,
+        T_i_ana=L.pipeline_interval(profile, net, sol, b),
+        L_t_sim=rep.L_t,
+        L_t_ana=L.total_latency(profile, net, sol, b, B),
+        b=b, B=B, cuts=sol.cuts, placement=sol.placement, rtol=rtol)
+
+
+def cross_validate_many(trials: int = 20, *, seed: int = 0,
+                        rtol: float = 1e-6) -> list:
+    """The standing cross-check over ``trials`` randomized triples."""
+    return [cross_validate(*random_instance(seed * 1000 + i), rtol=rtol)
+            for i in range(trials)]

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: skip module, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.compression import (ErrorFeedback, compressed_bytes,

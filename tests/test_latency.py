@@ -4,6 +4,8 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: skip module, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (EdgeNetwork, Node, SplitSolution, breakdown,

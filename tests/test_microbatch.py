@@ -3,6 +3,8 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: skip module, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (exhaustive_microbatch, feasibility_box,

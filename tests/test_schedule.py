@@ -1,6 +1,8 @@
 """Discrete-event pipeline sim vs the analytical Eq. (14) (schedule.py)."""
 
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: skip module, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SplitSolution, breakdown, num_fills, total_latency

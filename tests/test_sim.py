@@ -1,0 +1,324 @@
+"""Discrete-event engine (repro.sim) — cross-validation vs Eqs. (12)-(14),
+event/FIFO semantics, capacity traces, scenarios, and the replanning driver."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (SplitSolution, evaluate_under_fluctuation,
+                        fill_latency, make_edge_network, ours,
+                        pipeline_interval, total_latency, uniform_profile,
+                        vgg16_profile)
+from repro.ft import RateChange, Straggler
+from repro.sim import (NetworkScenario, PiecewiseTrace, ReplanTrigger,
+                       build_tasks, constant, cross_validate,
+                       cross_validate_many, gauss_markov,
+                       gauss_markov_scenario, iid_piecewise, piecewise,
+                       piecewise_cv_scenario, random_instance, simulate_plan,
+                       simulate_with_replanning, write_chrome_trace)
+
+
+@pytest.fixture(scope="module")
+def paper_plan():
+    prof = vgg16_profile(work_units="bytes")
+    net = make_edge_network(num_servers=4, num_clients=4, seed=1,
+                            kappa=1 / 32.0)
+    plan = ours(prof, net, B=64, b0=8)
+    return prof, net, plan
+
+
+# ---------------------------------------------------------------------------
+# The standing cross-validation: sim == analytic on deterministic networks
+# ---------------------------------------------------------------------------
+
+def test_cross_validation_randomized_triples():
+    """>= 20 randomized (profile, network, plan) triples: simulated T_f, T_i
+    and L_t match Eqs. (12)-(14) within 1e-6 relative tolerance."""
+    checks = cross_validate_many(trials=24, seed=11, rtol=1e-6)
+    assert len(checks) == 24
+    for c in checks:
+        assert c.ok, (c.max_rel_err, c.cuts, c.placement, c.b, c.B)
+    assert max(c.max_rel_err for c in checks) < 1e-9
+
+
+def test_cross_validation_on_planner_output(paper_plan):
+    prof, net, plan = paper_plan
+    c = cross_validate(prof, net, plan.solution, plan.b, plan.B)
+    assert c.ok
+    assert c.L_t_ana == pytest.approx(plan.L_t, rel=1e-9)
+
+
+def test_single_microbatch_degenerates_to_fill():
+    prof, net, sol, b, _ = random_instance(3)
+    rep = simulate_plan(prof, net, sol, b, B=b)   # one slot: L_t == T_f
+    assert rep.num_microbatches == 1
+    assert rep.T_i == 0.0
+    assert rep.L_t == pytest.approx(fill_latency(prof, net, sol, b), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Event ordering + resource-contention semantics
+# ---------------------------------------------------------------------------
+
+def _per_resource(records):
+    by_res = {}
+    for r in records:
+        by_res.setdefault(r.resource, []).append(r)
+    return by_res
+
+
+def test_event_ordering_and_fifo():
+    prof, net, sol, b, B = random_instance(5)
+    rep = simulate_plan(prof, net, sol, b, B=B)
+    for recs in _per_resource(rep.records).values():
+        recs = sorted(recs, key=lambda r: r.start)
+        # one-at-a-time service: intervals never overlap
+        for a, c in zip(recs, recs[1:]):
+            assert c.start >= a.end - 1e-12
+        # FIFO: a linear pipeline visits each resource in micro-batch order
+        assert [r.microbatch for r in recs] == sorted(
+            r.microbatch for r in recs)
+    # chain precedence: within a micro-batch, records appear in chain order
+    for m in range(rep.num_microbatches):
+        chain = [r for r in rep.records if r.microbatch == m]
+        chain.sort(key=lambda r: (r.start, r.end))
+        for a, c in zip(chain, chain[1:]):
+            assert c.start >= a.end - 1e-12
+
+
+def test_colocated_stages_contend():
+    """Two submodels on one node serialize on its FP/BP engines (the C9-C16
+    co-location sums), and the fill latency still equals Eq. (12)."""
+    prof = uniform_profile(8, fp=1.0, bp=2.0, act=1.0)
+    net = make_edge_network(num_servers=3, num_clients=1, seed=0)
+    sol = SplitSolution(cuts=(2, 4, 6, 8), placement=(0, 1, 2, 1))
+    b, B = 4, 32
+    # a solo micro-batch sees no contention: fill == Eq. (12) exactly
+    solo = simulate_plan(prof, net, sol, b, num_microbatches=1)
+    assert solo.L_t == pytest.approx(fill_latency(prof, net, sol, b),
+                                     rel=1e-9)
+    rep = simulate_plan(prof, net, sol, b, B=B)
+    # under pipelining, trailing micro-batches occupy the shared engine
+    # before mb0 returns to it — observed fill can only inflate
+    assert rep.T_f >= solo.L_t - 1e-12
+    by_res = _per_resource(rep.records)
+    # node 1 hosts stages 1 and 3: its fp engine serves both, serialized
+    fp1 = sorted(by_res[("fp", 1)], key=lambda r: r.start)
+    assert {r.stage for r in fp1} == {1, 3}
+    for a, c in zip(fp1, fp1[1:]):
+        assert c.start >= a.end - 1e-12
+    # work conservation: makespan >= the busiest resource's total work
+    for recs in by_res.values():
+        assert rep.L_t >= sum(r.duration for r in recs) - 1e-9
+    # Eq. (14) assumes a perfectly interleaved cyclic schedule on the shared
+    # engine; greedy FIFO on a reentrant line deviates from it in either
+    # direction, but only by bounded idle time — a gross engine bug (e.g.
+    # lost serialization, double service) would blow well past this
+    ana = total_latency(prof, net, sol, b, B)
+    assert rep.L_t == pytest.approx(ana, rel=0.25)
+
+
+# ---------------------------------------------------------------------------
+# Piecewise traces: integration, outage stalls, Gauss-Markov statistics
+# ---------------------------------------------------------------------------
+
+def test_trace_integration_across_breakpoints():
+    tr = piecewise((0.0, 1.0, 3.0), (2.0, 0.5, 4.0))
+    assert tr.time_to_complete(0.0, 1.0) == pytest.approx(0.5)
+    # 2.0 work: [0,1) serves 2.0 exactly
+    assert tr.time_to_complete(0.0, 2.0) == pytest.approx(1.0)
+    # 2.5 work: 2.0 in [0,1), 0.5 more at rate 0.5 -> t=2.0
+    assert tr.time_to_complete(0.0, 2.5) == pytest.approx(2.0)
+    # starting mid-segment
+    assert tr.time_to_complete(0.5, 1.0) == pytest.approx(0.5)
+    assert tr.value_at(2.9) == 0.5 and tr.value_at(3.0) == 4.0
+
+
+def test_trace_zero_segment_stalls_and_trailing_zero_is_inf():
+    tr = piecewise((0.0, 1.0, 2.0), (1.0, 0.0, 1.0))
+    # 1.5 work from t=0: 1.0 by t=1, stall on [1,2), finish 0.5 at t=2.5
+    assert tr.time_to_complete(0.0, 1.5) == pytest.approx(2.5)
+    dead = piecewise((0.0, 1.0), (1.0, 0.0))
+    assert math.isinf(dead.time_to_complete(0.5, 1.0))
+
+
+def test_trace_product_merges_breakpoints():
+    a = piecewise((0.0, 2.0), (1.0, 3.0))
+    b = piecewise((0.0, 1.0), (2.0, 0.5))
+    p = a * b
+    for t in (0.0, 0.5, 1.0, 1.5, 2.0, 5.0):
+        assert p.value_at(t) == pytest.approx(a.value_at(t) * b.value_at(t))
+
+
+def test_gauss_markov_stationary_stats():
+    rng = np.random.default_rng(0)
+    tr = gauss_markov(rng, cv=0.2, dt=1.0, horizon=20000.0, corr=0.9)
+    vals = np.asarray(tr.values)
+    assert vals.mean() == pytest.approx(1.0, abs=0.03)
+    assert vals.std() == pytest.approx(0.2, abs=0.03)
+    # correlated: lag-1 autocorrelation near corr
+    v = vals - vals.mean()
+    rho = (v[:-1] * v[1:]).mean() / (v.var() + 1e-12)
+    assert rho == pytest.approx(0.9, abs=0.05)
+
+
+def test_cv_zero_scenarios_are_constant():
+    rng = np.random.default_rng(0)
+    assert iid_piecewise(rng, 0.0, dt=1.0, horizon=10.0).is_constant()
+    assert gauss_markov(rng, 0.0, dt=1.0, horizon=10.0).is_constant()
+
+
+# ---------------------------------------------------------------------------
+# Scenario injection: stragglers, outages, time-varying capacity
+# ---------------------------------------------------------------------------
+
+def test_straggler_window_slows_pipeline(paper_plan):
+    prof, net, plan = paper_plan
+    base = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B)
+    node = plan.solution.placement[1]
+    scen = NetworkScenario().with_straggler(node, 0.0, base.L_t, 8.0)
+    slow = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B,
+                         scenario=scen)
+    assert slow.L_t > base.L_t
+
+
+def test_outage_stalls_transfer(paper_plan):
+    prof, net, plan = paper_plan
+    base = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B)
+    a, c = plan.solution.placement[0], plan.solution.placement[1]
+    t_out = 5.0 * base.L_t
+    scen = NetworkScenario().with_outage(a, c, 0.0, t_out)
+    rep = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B,
+                        scenario=scen)
+    # the first activation transfer cannot complete before the outage lifts
+    assert rep.T_f >= t_out
+
+
+def test_time_varying_scenarios_run(paper_plan):
+    prof, net, plan = paper_plan
+    base = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B)
+    rng = np.random.default_rng(1)
+    for make in (piecewise_cv_scenario, gauss_markov_scenario):
+        scen = make(net, 0.3, rng, dt=base.L_t / 16, horizon=4 * base.L_t)
+        rep = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B,
+                            scenario=scen)
+        assert np.isfinite(rep.L_t) and rep.L_t > 0
+        assert np.all(np.diff(rep.mb_complete) > -1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven fluctuation evaluation (Fig. 6b path)
+# ---------------------------------------------------------------------------
+
+def test_fluctuation_trace_mode(paper_plan):
+    prof, net, plan = paper_plan
+    r0 = evaluate_under_fluctuation(prof, net, plan, 0.0, draws=2, seed=0,
+                                    mode="trace")
+    assert r0.degradation == pytest.approx(1.0, rel=1e-9)
+    for model in ("piecewise", "gauss_markov"):
+        r = evaluate_under_fluctuation(prof, net, plan, 0.25, draws=4,
+                                       seed=0, mode="trace",
+                                       trace_model=model)
+        assert np.isfinite(r.mean_latency) and r.mean_latency > 0
+        assert r.p95_latency >= r.mean_latency - 1e-12
+
+
+def test_fluctuation_iid_mode_unchanged(paper_plan):
+    """The default path must keep producing the original i.i.d. numbers."""
+    import repro.core.latency as L
+    prof, net, plan = paper_plan
+    r = evaluate_under_fluctuation(prof, net, plan, 0.1, draws=8, seed=3)
+    rng = np.random.default_rng(3)
+    expect = [L.total_latency(prof, net.with_fluctuation(rng, 0.1),
+                              plan.solution, plan.b, plan.B)
+              for _ in range(8)]
+    assert r.mean_latency == pytest.approx(float(np.mean(expect)), rel=1e-12)
+
+
+def test_fluctuation_rejects_unknown_mode(paper_plan):
+    prof, net, plan = paper_plan
+    with pytest.raises(ValueError):
+        evaluate_under_fluctuation(prof, net, plan, 0.1, mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# Replanning driven by simulated time
+# ---------------------------------------------------------------------------
+
+def test_replanning_driver(paper_plan):
+    prof, net, plan = paper_plan
+    base = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B)
+    node = plan.solution.placement[1]
+    trig = [ReplanTrigger(0.4 * base.L_t, Straggler(node, 6.0)),
+            ReplanTrigger(0.9 * base.L_t, RateChange(0, node, 0.5))]
+    rep = simulate_with_replanning(prof, net, plan.B, trig)
+    assert rep.num_replans == 2
+    assert np.isfinite(rep.makespan)
+    # a straggler + rate drop can only hurt vs the undisturbed run
+    assert rep.makespan >= base.L_t - 1e-9
+    # every sample is accounted for across segments
+    samples = sum(s.completed * s.plan.b for s in rep.segments)
+    assert samples >= plan.B
+    assert all(s.outcome.action in ("replan", "microbatch")
+               for s in rep.segments if s.outcome is not None)
+
+
+def test_replanning_consumes_scenario_triggers(paper_plan):
+    """Triggers composed onto the scenario via with_replan fire too."""
+    prof, net, plan = paper_plan
+    base = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B)
+    node = plan.solution.placement[1]
+    scen = NetworkScenario().with_replan(0.5 * base.L_t, Straggler(node, 6.0))
+    rep = simulate_with_replanning(prof, net, plan.B, scenario=scen)
+    assert rep.num_replans == 1
+
+
+def test_replanning_rejects_node_failure_with_scenario(paper_plan):
+    """NodeFailure renumbers indices; index-keyed scenario traces would
+    silently land on the wrong nodes — must be rejected."""
+    from repro.ft import NodeFailure
+    prof, net, plan = paper_plan
+    scen = NetworkScenario().with_straggler(1, 0.0, 1.0, 2.0)
+    with pytest.raises(ValueError, match="NodeFailure"):
+        simulate_with_replanning(prof, net, plan.B,
+                                 [ReplanTrigger(0.01, NodeFailure(2))],
+                                 scenario=scen)
+
+
+def test_replanning_no_triggers_matches_plain_sim(paper_plan):
+    prof, net, plan = paper_plan
+    rep = simulate_with_replanning(prof, net, plan.B, [])
+    plain = simulate_plan(prof, net, rep.coordinator.plan.solution,
+                          rep.coordinator.plan.b, B=plan.B)
+    assert rep.makespan == pytest.approx(plain.L_t, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_export(tmp_path, paper_plan):
+    prof, net, plan = paper_plan
+    rep = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B)
+    path = write_chrome_trace(rep.records, str(tmp_path / "trace.json"))
+    with open(path) as f:
+        data = json.load(f)
+    evs = [e for e in data["traceEvents"] if e["ph"] == "X"]
+    assert len(evs) == len(rep.records)
+    assert all({"name", "ts", "dur", "pid", "tid"} <= set(e) for e in evs)
+    names = [e["args"]["name"] for e in data["traceEvents"]
+             if e["ph"] == "M"]
+    assert any(n.startswith("node0:fp") for n in names)
+
+
+def test_build_tasks_chain_shape():
+    prof, net, sol, b, _ = random_instance(9)
+    m = 3
+    tasks = build_tasks(prof, net, sol, b, m)
+    K = len(list(sol.segments()))
+    assert len(tasks) == m * (2 * K + 2 * (K - 1))
+    roots = [t for t in tasks if t.dep is None]
+    assert len(roots) == m                       # one chain per micro-batch
+    assert all(t.resource == ("fp", 0) for t in roots)
