@@ -1,0 +1,140 @@
+"""Topology x fluctuation x admission-policy sweep grids (vectorized engine).
+
+Two grids, both emitted as CSV under ``results/bench/`` with wall-clock
+timings per cell:
+
+* ``run_grid`` — the *scenario* grid: for every (topology, fluctuation CV,
+  admission policy) cell, plan the paper's Table-II setup with Algorithm 2,
+  then execute the plan in the simulator (``engine="auto"``: the vectorized
+  engine on deterministic cells, the heap engine once capacity traces
+  actually vary) and record simulated T_f / T_i / L_t plus the wall seconds
+  the simulation itself took.  This is the sweep regime of *Communication-
+  Computation Pipeline Parallel Split Learning over Wireless Edge Networks*
+  (topology x noise) crossed with the memory-aware schedules of
+  *Resource-efficient Parallel Split Learning* (FIFO vs 1F1B).
+
+* ``run_scale`` — the *engine-scaling* grid: deterministic chains of
+  ``num_nodes`` stages x ``num_microbatches`` identical micro-batches,
+  timed under both admission policies.  The 10k-micro-batch x 100-node cell
+  is the repo's standing engine-speed budget (< 1 s, asserted loosely in
+  ``tests/test_sweep_grid.py``) — roughly 4M task executions, far past
+  where the PR 1 heap engine was practical.
+
+Run everything:     python -m benchmarks.sweep_grid
+Quick smoke:        python -m benchmarks.sweep_grid --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import (EdgeNetwork, Node, SplitSolution, fill_latency,
+                        make_edge_network, ours, pipeline_interval,
+                        uniform_profile)
+from repro.sim import gauss_markov_scenario, simulate_plan
+
+from .common import Timer, emit, paper_profile
+
+TOPOLOGIES = ("mesh", "line", "star", "tree")
+POLICIES = ("fifo", "1f1b")
+
+
+# ---------------------------------------------------------------------------
+# Scenario grid: topology x fluctuation x admission policy
+# ---------------------------------------------------------------------------
+
+def run_grid(topologies=TOPOLOGIES, cvs=(0.0, 0.1, 0.3), policies=POLICIES,
+             *, B=256, b0=20, num_servers=6, seed=0, corr=0.9):
+    prof = paper_profile()
+    rows = []
+    for topo in topologies:
+        net = make_edge_network(num_servers=num_servers, num_clients=4,
+                                topology=topo, seed=seed, kappa=1 / 32.0)
+        plan = ours(prof, net, B=B, b0=b0)
+        if not plan.feasible:
+            continue
+        for cv in cvs:
+            scen = None
+            if cv > 0:
+                rng = np.random.default_rng(seed)
+                scen = gauss_markov_scenario(net, cv, rng, corr=corr,
+                                             dt=plan.L_t / 16,
+                                             horizon=8 * plan.L_t)
+            for pol in policies:
+                with Timer() as t:
+                    rep = simulate_plan(prof, net, plan.solution, plan.b,
+                                        B=plan.B, scenario=scen, policy=pol,
+                                        engine="auto")
+                rows.append([topo, cv, pol, rep.engine, plan.b,
+                             rep.num_microbatches,
+                             round(rep.T_f, 5), round(rep.T_i, 5),
+                             round(rep.L_t, 5),
+                             round(rep.L_t / plan.L_t, 4),
+                             round(t.seconds, 5)])
+    emit("sweep_grid", rows,
+         ["topology", "cv", "policy", "engine", "b", "num_microbatches",
+          "T_f_s", "T_i_s", "L_t_s", "vs_planned", "wall_s"])
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Engine-scaling grid: deterministic chains, both engines' speed envelope
+# ---------------------------------------------------------------------------
+
+def scale_instance(num_nodes: int = 100, num_microbatches: int = 10_000,
+                   b: int = 4):
+    """A deterministic ``num_nodes``-stage chain, one stage per node —
+    the engine-scaling acceptance scenario (identical homogeneous stages,
+    fast links, no time variation)."""
+    S = num_nodes
+    prof = uniform_profile(S, fp=1.0, bp=1.0, act=1.0)
+    nodes = [Node("clients", f=100.0, t0=0.0, t1=0.0, b_th=0,
+                  is_client=True)]
+    nodes += [Node(f"s{i}", f=100.0, t0=0.0, t1=0.0, b_th=0)
+              for i in range(1, S)]
+    rate = np.full((S, S), 1e4)
+    np.fill_diagonal(rate, 0.0)
+    net = EdgeNetwork(nodes=nodes, rate=rate, num_clients=1)
+    sol = SplitSolution(cuts=tuple(range(1, S + 1)),
+                        placement=tuple(range(S)))
+    return prof, net, sol, b, num_microbatches
+
+
+def run_scale(cells=((20, 1_000), (100, 10_000)), policies=POLICIES,
+              *, repeats: int = 2):
+    rows = []
+    for num_nodes, Q in cells:
+        prof, net, sol, b, _ = scale_instance(num_nodes, Q)
+        n_tasks = Q * (4 * num_nodes - 2)
+        for pol in policies:
+            best, rep = np.inf, None
+            for _ in range(max(repeats, 1)):
+                with Timer() as t:
+                    rep = simulate_plan(prof, net, sol, b,
+                                        num_microbatches=Q, policy=pol,
+                                        engine="vectorized")
+                best = min(best, t.seconds)
+            ana = (fill_latency(prof, net, sol, b)
+                   + (Q - 1) * pipeline_interval(prof, net, sol, b))
+            rows.append([num_nodes, Q, pol, n_tasks, round(rep.L_t, 4),
+                         round(float(ana), 4), round(best, 4),
+                         int(n_tasks / best)])
+    emit("sweep_grid_scale", rows,
+         ["num_nodes", "num_microbatches", "policy", "tasks", "L_t_s",
+          "eq14_fifo_s", "wall_s", "tasks_per_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI smoke testing")
+    args = ap.parse_args()
+    if args.smoke:
+        run_grid(topologies=("mesh",), cvs=(0.0, 0.2), B=64, b0=8)
+        run_scale(cells=((10, 200),), repeats=1)
+    else:
+        run_grid()
+        run_scale()

@@ -4,9 +4,11 @@
 
 1. plan the paper's Table-II setup with Algorithm 2 (BCD)
 2. execute the plan in the event engine; check Eqs. (12)-(14) hold exactly
-3. re-run under a straggler window and a link outage
-4. drive the elastic ft.Coordinator from *simulated* time (mid-run replan)
-5. write the deterministic timeline as results/sim/pipeline_trace.json
+3. re-run with the vectorized engine and under 1F1B admission (memory
+   high-water marks vs the GPipe-like FIFO default)
+4. re-run under a straggler window and a link outage
+5. drive the elastic ft.Coordinator from *simulated* time (mid-run replan)
+6. write the deterministic timeline as results/sim/pipeline_trace.json
    (load it at chrome://tracing or https://ui.perfetto.dev)
 """
 
@@ -15,7 +17,8 @@ import os
 from repro.core import make_edge_network, ours, vgg16_profile
 from repro.ft import Straggler
 from repro.sim import (NetworkScenario, ReplanTrigger, simulate_plan,
-                       simulate_with_replanning, write_chrome_trace)
+                       simulate_with_replanning,
+                       stage_activation_highwater, write_chrome_trace)
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results", "sim")
 
@@ -38,7 +41,20 @@ bottleneck = max(rep.resource_busy.items(), key=lambda kv: kv[1])
 print(f"bottleneck resource: {bottleneck[0]} "
       f"({100 * bottleneck[1]:.1f}% busy)")
 
-# 3. dynamic conditions -------------------------------------------------------
+# 3. vectorized engine + admission policies -----------------------------------
+vec = simulate_plan(profile, net, plan.solution, plan.b, B=plan.B,
+                    engine="auto")
+gap_v = abs(vec.L_t - rep.L_t) / rep.L_t
+print(f"\nvectorized engine ({vec.engine}): L_t={vec.L_t:.5f}s "
+      f"(gap vs event engine {gap_v:.2e})")
+one = simulate_plan(profile, net, plan.solution, plan.b, B=plan.B,
+                    engine="auto", policy="1f1b")
+hw_fifo = stage_activation_highwater(rep.records)
+hw_1f1b = stage_activation_highwater(one.records)
+print(f"1F1B: L_t={one.L_t:.5f}s (+{100 * (one.L_t / rep.L_t - 1):.1f}%)  "
+      f"activation high-water per stage: fifo={hw_fifo} -> 1f1b={hw_1f1b}")
+
+# 4. dynamic conditions -------------------------------------------------------
 victim = plan.solution.placement[1]
 slow = None
 for slowdown in (6.0, 60.0):
@@ -59,7 +75,7 @@ out = simulate_plan(profile, net, plan.solution, plan.b, B=plan.B,
 print(f"outage (link {a}->{c} dark for 2*T_f): T_f={out.T_f:.5f}s "
       f"L_t={out.L_t:.5f}s")
 
-# 4. mid-run replanning driven by simulated time ------------------------------
+# 5. mid-run replanning driven by simulated time ------------------------------
 rr = simulate_with_replanning(
     profile, net, plan.B,
     [ReplanTrigger(0.4 * rep.L_t, Straggler(victim, 6.0))])
@@ -68,7 +84,7 @@ print(f"\nreplan: straggler fires at t={seg.cutoff:.5f}s after "
       f"{seg.completed} micro-batches; coordinator action="
       f"{seg.outcome.action!r}; total makespan={rr.makespan:.5f}s")
 
-# 5. Chrome trace -------------------------------------------------------------
+# 6. Chrome trace -------------------------------------------------------------
 path = write_chrome_trace(rep.records, os.path.join(OUT,
                                                     "pipeline_trace.json"))
 print(f"\nChrome trace -> {os.path.abspath(path)}")

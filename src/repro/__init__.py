@@ -12,15 +12,24 @@ _SUBMODULES = frozenset({
     "launch", "models", "optim", "pipeline", "sim", "utils",
 })
 
-# convenience re-exports: the simulation subsystem's public API
+# convenience re-exports: the simulation subsystem's full public API.
+# Must mirror ``repro.sim.__all__`` exactly — tests/test_exports.py asserts
+# the two stay in sync and that every name below actually resolves.
 _SIM_EXPORTS = frozenset({
-    "PipelineSimulator", "SimReport", "simulate_plan", "build_tasks",
-    "simulate_with_replanning", "ReplanSimReport", "SegmentReport",
-    "NetworkScenario", "PiecewiseTrace", "ReplanTrigger",
+    "Task", "Timeline", "TraceRecord", "VisitTable", "write_chrome_trace",
+    "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
+    "iid_piecewise", "NetworkScenario", "ReplanTrigger",
     "piecewise_cv_scenario", "gauss_markov_scenario",
-    "CrossCheck", "cross_validate", "cross_validate_many",
-    "write_chrome_trace",
+    "AdmissionPolicy", "FIFO", "OneFOneB", "resolve_policy",
+    "activation_occupancy", "stage_activation_highwater",
+    "PipelineSimulator", "SimReport", "build_tasks", "build_visit_table",
+    "simulate_plan", "vectorizable",
+    "SegmentReport", "ReplanSimReport", "simulate_with_replanning",
+    "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
+    "random_chain_solution", "random_instance",
 })
+
+__all__ = sorted(_SUBMODULES | _SIM_EXPORTS)
 
 
 def __getattr__(name):

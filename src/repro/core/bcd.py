@@ -8,6 +8,22 @@
 Each block is solved optimally, so L_t is non-increasing across iterations
 (asserted in tests) and the loop converges in a few iterations (Fig. 7 shows
 the fixed point is near the joint optimum).
+
+The returned ``Plan`` is what the rest of the repo consumes: the simulator
+executes it (``repro.sim.simulate_plan``), the jax runtime maps it to stage
+functions, and the elastic coordinator replans it on failures.
+
+>>> import math
+>>> from repro.core import make_edge_network, vgg16_profile
+>>> prof = vgg16_profile(work_units="bytes")
+>>> net = make_edge_network(num_servers=4, num_clients=4, seed=1,
+...                         kappa=1 / 32.0)
+>>> plan = bcd_solve(prof, net, B=64, b0=8)
+>>> plan.feasible, 1 <= plan.b <= 64
+(True, True)
+>>> bool(plan.L_t ==
+...      plan.T_f + math.ceil((plan.B - plan.b) / plan.b) * plan.T_i)
+True
 """
 
 from __future__ import annotations

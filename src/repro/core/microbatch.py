@@ -21,6 +21,16 @@ exactly by binary search on the monotone predicate
 candidate (plus the box corners), which is precisely the case analysis of
 Eq. (18).  ``exhaustive_microbatch`` scans every b in [1, B] — the "optimal
 scheme" of Fig. 7 and the oracle our tests compare the closed form against.
+
+>>> from repro.core import (make_edge_network, pipeline_interval,
+...                         uniform_profile, SplitSolution)
+>>> prof = uniform_profile(6, fp=1.0, bp=2.0, act=1.0)
+>>> net = make_edge_network(num_servers=2, num_clients=2, seed=0)
+>>> sol = SplitSolution(cuts=(3, 6), placement=(0, 1))
+>>> T_1 = pipeline_interval(prof, net, sol, 8)
+>>> res = optimal_microbatch(prof, net, sol, B=64, T_1=T_1)
+>>> res.b == exhaustive_microbatch(prof, net, sol, B=64, T_1=T_1)[0]
+True
 """
 
 from __future__ import annotations

@@ -2,7 +2,8 @@
 and the shard_map SPMD stage pipeline (the paper's technique as a
 first-class runtime feature)."""
 
-from .schedule import SimResult, simulate, simulate_from_breakdown
+from .schedule import (SimResult, memory_highwater, simulate,
+                       simulate_from_breakdown)
 from .stage import (VGGStage, split_vgg_params, stack_stage_params,
                     transformer_stage_fn, unstack_stage_params,
                     vgg_stages_from_cuts)
@@ -12,7 +13,8 @@ from .spmd import (PipelineConfig, make_pipelined_loss,
                    make_pipelined_train_step, plan_to_pipeline_config)
 
 __all__ = [
-    "SimResult", "simulate", "simulate_from_breakdown", "VGGStage",
+    "SimResult", "memory_highwater", "simulate", "simulate_from_breakdown",
+    "VGGStage",
     "split_vgg_params", "stack_stage_params", "transformer_stage_fn",
     "unstack_stage_params", "vgg_stages_from_cuts", "LinkHooks",
     "SplitLearningExecutor", "microbatch_grads", "split_batch",

@@ -15,8 +15,14 @@ The simulator also supports ``shared_engine=True`` (FP and BP of a node
 contend for one engine — a physical single-accelerator node), quantifying
 the optimism of the paper's assumption; and reports per-schedule activation
 memory high-water marks (GPipe holds Q micro-batches in flight, 1F1B at
-most K - k + 1 at stage k), which is why the runtime defaults to 1F1B-depth
-microbatching when memory-bound.
+most K - k at 0-based stage k), which is why the runtime defaults to
+1F1B-depth microbatching when memory-bound.
+
+The closed-form high-water claims come from ``repro.sim.policies`` — the
+same :class:`~repro.sim.policies.AdmissionPolicy` objects the discrete-event
+engine executes — so ``memory_highwater`` here and the engine's *measured*
+per-stage occupancy share one source of truth; ``tests/test_sim.py``
+cross-validates them event by event.
 """
 
 from __future__ import annotations
@@ -25,6 +31,23 @@ import dataclasses
 from typing import Sequence
 
 from repro.core.latency import LatencyBreakdown
+from repro.sim.policies import resolve_policy
+
+
+def memory_highwater(num_stages: int, num_microbatches: int,
+                     policy="1f1b") -> dict:
+    """Closed-form activation high-water claim per 0-based stage position.
+
+    ``policy`` is an admission-policy name ("fifo"/"gpipe"/"1f1b") or an
+    ``AdmissionPolicy`` instance; the claim is the most activations the
+    schedule ever holds live at each stage.
+
+    >>> memory_highwater(3, 12, "1f1b")
+    {0: 3, 1: 2, 2: 1}
+    >>> memory_highwater(3, 12, "gpipe")
+    {0: 12, 1: 12, 2: 12}
+    """
+    return resolve_policy(policy).stage_capacity(num_stages, num_microbatches)
 
 
 @dataclasses.dataclass
@@ -86,8 +109,8 @@ def simulate(stage_fp: Sequence[float], stage_bp: Sequence[float],
         T_i = max(per_res.values())
     analytic = T_f + (Q - 1) * T_i
     mem = {
-        "gpipe": {k: Q for k in range(K)},
-        "1f1b": {k: min(Q, K - k) for k in range(K)},
+        "gpipe": memory_highwater(K, Q, "gpipe"),
+        "1f1b": memory_highwater(K, Q, "1f1b"),
     }
     return SimResult(
         makespan=makespan, analytic=analytic,

@@ -1,32 +1,46 @@
 """Discrete-event simulation of pipelined split learning (the execution
 counterpart of the Eq. (1)-(14) analytical model).
 
-``engine`` executes a split/placement solution as discrete events — per
-micro-batch FP/BP compute on each node and activation/gradient transfers on
-each hop, with FIFO resource occupancy (a node engine or link serves one unit
-at a time, matching the co-location sums of C9-C16).  ``scenario`` supplies
-time-varying capacity traces (piecewise-constant, Gauss-Markov), straggler
-windows, link outages, and replan triggers.  ``validate`` cross-checks the
-simulated ``T_f``/``T_i``/``L_t`` against ``core.latency`` on deterministic
-networks — exact to numerical tolerance, a standing consistency test.
+``engine`` executes a split/placement solution — per micro-batch FP/BP
+compute on each node and activation/gradient transfers on each hop, with
+FIFO resource occupancy (a node engine or link serves one unit at a time,
+matching the co-location sums of C9-C16) — via either the exact heap-based
+event loop or the vectorized batched-advancement engine (``engine="auto"``
+picks whichever is exact and fastest).  ``policies`` supplies pluggable
+micro-batch admission: GPipe-like ``FIFO`` and memory-bounded ``OneFOneB``
+(1F1B), whose closed-form activation high-water claims the engine validates
+event by event.  ``scenario`` supplies time-varying capacity traces
+(piecewise-constant, Gauss-Markov), straggler windows, link outages, and
+replan triggers.  ``validate`` cross-checks the simulated ``T_f``/``T_i``/
+``L_t`` against ``core.latency`` on deterministic networks — exact to
+numerical tolerance, a standing consistency test — and the two engines
+against each other.
 """
 
-from .events import Task, TraceRecord, write_chrome_trace
+from .events import (Task, Timeline, TraceRecord, VisitTable,
+                     write_chrome_trace)
 from .scenario import (PiecewiseTrace, constant, piecewise, gauss_markov,
                        iid_piecewise, NetworkScenario, ReplanTrigger,
                        piecewise_cv_scenario, gauss_markov_scenario)
-from .engine import (PipelineSimulator, SimReport, build_tasks, simulate_plan,
+from .policies import (AdmissionPolicy, FIFO, OneFOneB, resolve_policy,
+                       activation_occupancy, stage_activation_highwater)
+from .engine import (PipelineSimulator, SimReport, build_tasks,
+                     build_visit_table, simulate_plan, vectorizable,
                      SegmentReport, ReplanSimReport, simulate_with_replanning)
 from .validate import (CrossCheck, cross_validate, cross_validate_many,
-                       random_chain_solution, random_instance)
+                       compare_engines, random_chain_solution,
+                       random_instance)
 
 __all__ = [
-    "Task", "TraceRecord", "write_chrome_trace",
+    "Task", "Timeline", "TraceRecord", "VisitTable", "write_chrome_trace",
     "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
     "iid_piecewise", "NetworkScenario", "ReplanTrigger",
     "piecewise_cv_scenario", "gauss_markov_scenario",
-    "PipelineSimulator", "SimReport", "build_tasks", "simulate_plan",
+    "AdmissionPolicy", "FIFO", "OneFOneB", "resolve_policy",
+    "activation_occupancy", "stage_activation_highwater",
+    "PipelineSimulator", "SimReport", "build_tasks", "build_visit_table",
+    "simulate_plan", "vectorizable",
     "SegmentReport", "ReplanSimReport", "simulate_with_replanning",
-    "CrossCheck", "cross_validate", "cross_validate_many",
+    "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
     "random_chain_solution", "random_instance",
 ]

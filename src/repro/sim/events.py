@@ -1,9 +1,19 @@
-"""Event and trace records for the pipeline simulator.
+"""Event, task-table, and trace records for the pipeline simulator.
 
-A simulation run is a set of ``Task``s (one unit of work for one micro-batch
-on one resource) connected by precedence edges; executing them produces
-``TraceRecord``s — the full timeline, exportable as a Chrome-trace JSON
-(`chrome://tracing` / Perfetto) for visual inspection of the schedule.
+A simulation run executes one unit of work per (micro-batch, resource) pair
+connected by precedence edges.  Two representations exist:
+
+* ``Task`` — one explicit unit for the heap-based event loop; a run is a
+  list of tasks plus chain edges (``dep``) and any policy edges.
+* ``VisitTable`` — the structure-of-arrays task table for the vectorized
+  engine: because micro-batches are identical jobs, one row per *visit*
+  (position in the per-micro-batch chain) describes all ``Q`` micro-batches
+  at once and the micro-batch axis stays implicit until execution.
+
+Executing either produces a timeline — eager ``TraceRecord`` lists from the
+heap engine, a dense ``Timeline`` (start/end arrays) from the vectorized
+engine — exportable as a Chrome-trace JSON (`chrome://tracing` / Perfetto)
+for visual inspection of the schedule.
 
 Resource keys mirror the aggregation of Eq. (13) / C9-C16:
 
@@ -21,6 +31,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+
+import numpy as np
 
 
 #: task kinds, in the order they appear along one micro-batch's chain
@@ -50,6 +62,63 @@ class Task:
             raise ValueError(f"unknown task kind {self.kind!r}")
         if self.work < 0 or self.fixed < 0:
             raise ValueError("work/fixed must be non-negative")
+
+
+@dataclasses.dataclass(frozen=True)
+class VisitTable:
+    """Structure-of-arrays task table for one micro-batch's visit chain.
+
+    Micro-batches are identical jobs, so the per-visit arrays describe every
+    micro-batch; the engine broadcasts over the micro-batch axis instead of
+    materializing ``Q * len(self)`` Task objects.  Visit order is chain
+    order: FP/fwd sweep up the stages, then BP/bwd back down — the same
+    order ``engine.build_tasks`` emits explicit tasks in.
+    """
+    kinds: tuple        # per visit: "fp" | "fwd" | "bp" | "bwd"
+    stages: tuple       # per visit: submodel index k (links: upstream k)
+    resources: tuple    # per visit: resource key (see module docstring)
+    work: np.ndarray    # per visit: capacity-units of work
+    fixed: np.ndarray   # per visit: rate-independent seconds
+    fp_visit: np.ndarray  # stage position j -> visit index of its FP
+    bp_visit: np.ndarray  # stage position j -> visit index of its BP
+
+    def __len__(self) -> int:
+        return len(self.kinds)
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.fp_visit)
+
+    def is_reentrant(self) -> bool:
+        """True when some resource appears at two visits (co-located
+        submodels) — FIFO service order then interleaves micro-batches and
+        only the heap engine is exact."""
+        return len(set(self.resources)) != len(self.resources)
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """Dense (Q, R) start/end times from the vectorized engine — the SoA
+    counterpart of a ``TraceRecord`` list."""
+    table: VisitTable
+    starts: np.ndarray   # (num_microbatches, len(table))
+    ends: np.ndarray
+
+    @property
+    def num_microbatches(self) -> int:
+        return self.starts.shape[0]
+
+    def to_records(self) -> list:
+        """Materialize explicit ``TraceRecord``s (completion order)."""
+        t = self.table
+        recs = [
+            TraceRecord(m, t.stages[v], t.kinds[v], t.resources[v],
+                        float(self.starts[m, v]), float(self.ends[m, v]))
+            for m in range(self.starts.shape[0])
+            for v in range(len(t))
+        ]
+        recs.sort(key=lambda r: (r.end, r.start, r.microbatch))
+        return recs
 
 
 @dataclasses.dataclass(frozen=True)

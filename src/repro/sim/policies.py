@@ -1,0 +1,189 @@
+"""Pluggable micro-batch admission policies for the pipeline simulator.
+
+PR 1's engine admitted every micro-batch at ``t_start`` — GPipe-like FIFO:
+the client injects as fast as its forward engine drains, so a stage can hold
+up to ``Q`` activations at once.  An :class:`AdmissionPolicy` generalizes
+this: it assigns each pipeline stage an *admission window* — the number of
+micro-batches allowed past that stage's forward pass before the stage's own
+backward pass reclaims an activation.  Windows become precedence edges
+
+    BP_j(m - window(j))  -->  FP_j(m)
+
+added on top of the per-micro-batch chains, so both the heap engine and the
+vectorized engine execute any policy without special cases.
+
+Two concrete policies ship:
+
+* :class:`FIFO` — unbounded windows; byte-for-byte the PR 1 behavior (no
+  extra edges are generated, the event loop is untouched).  Activation
+  high-water claim: ``Q`` per stage (GPipe).
+* :class:`OneFOneB` — window ``S - j`` at stage ``j`` of an ``S``-stage
+  pipeline (1F1B): once warm, each stage alternates one forward with one
+  backward, holding at most ``S - j`` live activations.  Claim:
+  ``min(Q, S - j)``.
+
+The closed-form claims (:meth:`AdmissionPolicy.stage_capacity`) are the
+single source of truth shared with ``repro.pipeline.schedule``'s
+``memory_highwater`` and are cross-validated *event by event* against the
+engine's measured occupancy (:func:`activation_occupancy`) in
+``tests/test_sim.py``.
+
+>>> OneFOneB().stage_capacity(4, 8)
+{0: 4, 1: 3, 2: 2, 3: 1}
+>>> FIFO().stage_capacity(3, 8)
+{0: 8, 1: 8, 2: 8}
+"""
+
+from __future__ import annotations
+
+
+class AdmissionPolicy:
+    """Strategy deciding when a micro-batch may enter each pipeline stage.
+
+    Subclasses implement :meth:`window`.  A window of ``w`` at stage ``j``
+    means micro-batch ``m``'s forward pass at ``j`` must wait for micro-batch
+    ``m - w``'s backward pass at ``j`` — which bounds stage ``j``'s live
+    activations by ``w``.  ``None`` means unbounded (no edge).  Stages are
+    numbered by *position* ``j`` in the chain of non-empty submodels
+    (``0 .. S-1``), not by raw submodel index.
+    """
+
+    name = "abstract"
+
+    def window(self, num_stages: int, stage: int) -> int | None:
+        raise NotImplementedError
+
+    # -- closed-form memory claim -------------------------------------------
+    def stage_capacity(self, num_stages: int, num_microbatches: int) -> dict:
+        """Claimed activation high-water mark per stage position.
+
+        ``Q`` micro-batches can never exceed ``Q`` live activations, so every
+        claim is clipped by ``num_microbatches``.
+        """
+        out = {}
+        for j in range(num_stages):
+            w = self.window(num_stages, j)
+            out[j] = (num_microbatches if w is None
+                      else min(num_microbatches, w))
+        return out
+
+    # -- edge generation for the heap engine --------------------------------
+    def extra_dependencies(self, tasks) -> list:
+        """``(src_tid, dst_tid)`` precedence edges encoding the windows.
+
+        ``tasks`` is the chain task list from ``engine.build_tasks`` (any
+        iterable of ``events.Task``); tid order within one micro-batch is
+        chain order, so the j-th "fp" task of a micro-batch is stage position
+        j and the "bp" tasks appear in reverse position order.
+        """
+        fp_by_mb: dict = {}
+        bp_by_mb: dict = {}
+        for t in sorted(tasks, key=lambda t: t.tid):
+            if t.kind == "fp":
+                fp_by_mb.setdefault(t.microbatch, []).append(t.tid)
+            elif t.kind == "bp":
+                bp_by_mb.setdefault(t.microbatch, []).append(t.tid)
+        if not fp_by_mb:
+            return []
+        S = len(fp_by_mb[min(fp_by_mb)])
+        windows = [self.window(S, j) for j in range(S)]
+        edges = []
+        for m, fps in fp_by_mb.items():
+            for j, w in enumerate(windows):
+                if w is None or m - w < 0:
+                    continue
+                # bp tasks run positions S-1 .. 0, so position j is entry
+                # S-1-j of the earlier micro-batch's bp list
+                src = bp_by_mb[m - w][S - 1 - j]
+                edges.append((src, fps[j]))
+        return edges
+
+
+class FIFO(AdmissionPolicy):
+    """GPipe-like admission (PR 1 behavior): every micro-batch is admitted
+    immediately; stages buffer up to ``Q`` activations."""
+
+    name = "fifo"
+
+    def window(self, num_stages: int, stage: int) -> int | None:
+        return None
+
+
+class OneFOneB(AdmissionPolicy):
+    """1F1B admission: stage ``j`` of ``S`` holds at most ``S - j``
+    activations — the memory-aware schedule of PipeDream/1F1B, matching the
+    claim reported by ``repro.pipeline.schedule``."""
+
+    name = "1f1b"
+
+    def window(self, num_stages: int, stage: int) -> int | None:
+        return num_stages - stage
+
+
+_POLICIES = {"fifo": FIFO, "gpipe": FIFO, "1f1b": OneFOneB}
+
+
+def resolve_policy(policy) -> AdmissionPolicy:
+    """Accept a policy instance or one of the registered names
+    (``"fifo"``/``"gpipe"``/``"1f1b"``)."""
+    if isinstance(policy, AdmissionPolicy):
+        return policy
+    try:
+        return _POLICIES[str(policy).lower()]()
+    except KeyError:
+        raise ValueError(
+            f"unknown admission policy {policy!r}; expected one of "
+            f"{sorted(_POLICIES)} or an AdmissionPolicy instance") from None
+
+
+# ---------------------------------------------------------------------------
+# Measured activation occupancy (the engine side of the cross-validation)
+# ---------------------------------------------------------------------------
+
+def activation_occupancy(records) -> dict:
+    """Per-stage time series of live activations, from a simulated timeline.
+
+    A micro-batch's activation at stage position ``j`` is *live* from the
+    start of its forward pass at ``j`` to the end of its backward pass at
+    ``j``.  Returns ``{position: [(time, occupancy_after_event), ...]}`` with
+    events in time order; releases are processed before acquisitions at equal
+    times (the window edges allow a forward to start the instant the paired
+    backward frees its slot).
+    """
+    fp_start: dict = {}
+    bp_end: dict = {}
+    stages = set()
+    for r in records:
+        if r.kind == "fp":
+            fp_start[(r.stage, r.microbatch)] = r.start
+            stages.add(r.stage)
+        elif r.kind == "bp":
+            bp_end[(r.stage, r.microbatch)] = r.end
+    out = {}
+    for j, stage in enumerate(sorted(stages)):
+        events = []
+        for (s, m), t in fp_start.items():
+            if s == stage:
+                events.append((t, 1, +1))
+                events.append((bp_end[(s, m)], 0, -1))
+        events.sort()
+        series, occ = [], 0
+        for t, _, delta in events:
+            occ += delta
+            series.append((t, occ))
+        out[j] = series
+    return out
+
+
+def stage_activation_highwater(records) -> dict:
+    """Measured activation high-water mark per stage position — the quantity
+    the closed-form :meth:`AdmissionPolicy.stage_capacity` claims bound.
+
+    >>> from repro.sim.events import TraceRecord
+    >>> recs = [TraceRecord(m, 0, "fp", ("fp", 0), m, m + 1) for m in (0, 1)]
+    >>> recs += [TraceRecord(m, 0, "bp", ("bp", 0), 3 + m, 4 + m) for m in (0, 1)]
+    >>> stage_activation_highwater(recs)
+    {0: 2}
+    """
+    return {j: max((occ for _, occ in series), default=0)
+            for j, series in activation_occupancy(records).items()}

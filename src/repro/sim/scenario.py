@@ -12,6 +12,14 @@ This supersedes the i.i.d. per-draw perturbations of
 routes through these scenarios): instead of one multiplicative draw per
 evaluation, conditions drift *during* the pipeline, so early micro-batches
 can see different capacity than late ones.
+
+>>> tr = piecewise((0.0, 1.0), (2.0, 0.5))      # 2 units/s, then 0.5
+>>> tr.time_to_complete(0.0, 3.0)               # 2.0 by t=1, then 1.0 at 0.5
+3.0
+>>> scen = NetworkScenario().with_straggler(1, start=1.0, end=3.0,
+...                                         slowdown=4.0)
+>>> scen.node_mult[1].value_at(2.0)             # 4x slower inside the window
+0.25
 """
 
 from __future__ import annotations
@@ -89,14 +97,42 @@ def constant(value: float) -> PiecewiseTrace:
 
 
 def piecewise(times, values) -> PiecewiseTrace:
-    return PiecewiseTrace(tuple(float(t) for t in times),
-                          tuple(float(v) for v in values))
+    """Build a trace, coalescing zero-length segments.
+
+    ``PiecewiseTrace`` itself is strict (strictly increasing breakpoints);
+    this constructor additionally accepts *duplicate* consecutive times —
+    zero-length segments, as produced e.g. by composing windows that share a
+    boundary — and keeps the **last** value given for each time, matching
+    the right-continuous ``value(t) = values[i] on [times[i], times[i+1])``
+    semantics under which a zero-length segment covers no time at all.
+
+    >>> piecewise((0.0, 1.0, 1.0, 2.0), (1.0, 99.0, 2.0, 3.0))
+    PiecewiseTrace(times=(0.0, 1.0, 2.0), values=(1.0, 2.0, 3.0))
+    """
+    ts = [float(t) for t in times]
+    vs = [float(v) for v in values]
+    if len(ts) != len(vs):
+        raise ValueError("times/values must have equal length")
+    out_t: list = []
+    out_v: list = []
+    for t, v in zip(ts, vs):
+        if out_t and t == out_t[-1]:
+            out_v[-1] = v            # zero-length segment: last value wins
+        else:
+            out_t.append(t)
+            out_v.append(v)
+    return PiecewiseTrace(tuple(out_t), tuple(out_v))
 
 
 def _window(start: float, end: float, inside: float) -> PiecewiseTrace:
-    """Multiplier trace: ``inside`` on [start, end), 1 elsewhere."""
-    if not 0.0 <= start < end:
-        raise ValueError("need 0 <= start < end")
+    """Multiplier trace: ``inside`` on [start, end), 1 elsewhere.
+
+    A zero-length window (``start == end``) covers no time and degenerates
+    to the identity multiplier."""
+    if not 0.0 <= start <= end:
+        raise ValueError("need 0 <= start <= end")
+    if start == end:
+        return constant(1.0)
     if start == 0.0:
         return piecewise((0.0, end), (inside, 1.0))
     return piecewise((0.0, start, end), (1.0, inside, 1.0))

@@ -7,7 +7,22 @@ Eqs. (12)-(14) are *exact*: simulated T_f, T_i and L_t must agree with
 ``core.latency.fill_latency`` / ``pipeline_interval`` / ``total_latency`` to
 numerical tolerance.  ``cross_validate_many`` runs this over randomized
 (profile, network, plan) triples — the standing consistency test that keeps
-the closed-form model and the event engine honest against each other.
+the closed-form model and the event engine honest against each other —
+and ``compare_engines`` holds the heap engine and the vectorized engine to
+the same timelines under every admission policy.
+
+>>> import numpy as np
+>>> from repro.core import uniform_profile, EdgeNetwork, Node, SplitSolution
+>>> prof = uniform_profile(4, fp=1.0, bp=1.0, act=1.0)
+>>> nodes = [Node("c", f=1.0, t0=0.0, t1=0.0, b_th=0, is_client=True),
+...          Node("s", f=1.0, t0=0.0, t1=0.0, b_th=0)]
+>>> net = EdgeNetwork(nodes=nodes, rate=np.array([[0., 10.], [10., 0.]]),
+...                   num_clients=1)
+>>> sol = SplitSolution(cuts=(2, 4), placement=(0, 1))
+>>> cross_validate(prof, net, sol, b=1, B=3).ok
+True
+>>> compare_engines(prof, net, sol, 1, 3, policy="1f1b") < 1e-12
+True
 """
 
 from __future__ import annotations
@@ -54,7 +69,7 @@ class CrossCheck:
 
     @property
     def ok(self) -> bool:
-        return np.isfinite(self.L_t_ana) and self.max_rel_err <= self.rtol
+        return bool(np.isfinite(self.L_t_ana) and self.max_rel_err <= self.rtol)
 
 
 def random_chain_solution(rng: np.random.Generator, profile: ModelProfile,
@@ -113,3 +128,19 @@ def cross_validate_many(trials: int = 20, *, seed: int = 0,
     """The standing cross-check over ``trials`` randomized triples."""
     return [cross_validate(*random_instance(seed * 1000 + i), rtol=rtol)
             for i in range(trials)]
+
+
+def compare_engines(profile: ModelProfile, net: EdgeNetwork,
+                    sol: SplitSolution, b: int, num_microbatches: int, *,
+                    policy="fifo") -> float:
+    """Max relative gap between heap-engine and vectorized-engine micro-batch
+    completion times for one instance — the standing engine-equivalence
+    check (must be ulp-level wherever the vectorized engine is eligible)."""
+    ev = simulate_plan(profile, net, sol, b,
+                       num_microbatches=num_microbatches, policy=policy,
+                       engine="event")
+    vec = simulate_plan(profile, net, sol, b,
+                        num_microbatches=num_microbatches, policy=policy,
+                        engine="vectorized")
+    denom = np.maximum(np.abs(ev.mb_complete), 1e-30)
+    return float(np.max(np.abs(ev.mb_complete - vec.mb_complete) / denom))

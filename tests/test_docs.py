@@ -1,0 +1,73 @@
+"""docs/ hygiene: every ``path.py::symbol`` anchor and every relative
+markdown link in docs/*.md must resolve against the working tree, so the
+paper-to-code map cannot rot silently (ISSUE 2 satellite; also run by the
+CI docs job)."""
+
+import os
+import re
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DOCS = os.path.join(REPO, "docs")
+
+#: `path/to/file.py::symbol` or bare `path/to/file.py` / `file.md` anchors
+ANCHOR = re.compile(
+    r"`(?P<path>[\w./-]+\.(?:py|md))(?:::(?P<symbol>[A-Za-z_]\w*))?`")
+#: [text](relative-target) markdown links; external schemes are skipped
+MDLINK = re.compile(r"\[[^\]]+\]\(([^)#\s]+)\)")
+
+
+def _doc_files():
+    return sorted(f for f in os.listdir(DOCS) if f.endswith(".md"))
+
+
+def test_docs_tree_exists():
+    assert {"paper_map.md", "sim_guide.md"} <= set(_doc_files())
+
+
+def _symbol_defined(path: str, symbol: str) -> bool:
+    with open(path) as f:
+        src = f.read()
+    pattern = re.compile(
+        rf"^\s*(?:def|class)\s+{re.escape(symbol)}\b"
+        rf"|^{re.escape(symbol)}\s*(?::[^=\n]+)?=",
+        re.MULTILINE)
+    return bool(pattern.search(src))
+
+
+@pytest.mark.parametrize("doc", _doc_files())
+def test_code_anchors_resolve(doc):
+    text = open(os.path.join(DOCS, doc)).read()
+    anchors = list(ANCHOR.finditer(text))
+    assert anchors, f"{doc} has no verifiable code anchors"
+    missing = []
+    for m in anchors:
+        path = os.path.join(REPO, m.group("path"))
+        if not os.path.isfile(path):
+            missing.append(f"{doc}: no such file {m.group('path')}")
+            continue
+        sym = m.group("symbol")
+        if sym and not _symbol_defined(path, sym):
+            missing.append(
+                f"{doc}: {m.group('path')} does not define {sym!r}")
+    assert not missing, "\n".join(missing)
+
+
+@pytest.mark.parametrize("doc", _doc_files())
+def test_markdown_links_resolve(doc):
+    text = open(os.path.join(DOCS, doc)).read()
+    bad = []
+    for target in MDLINK.findall(text):
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        if not os.path.exists(os.path.join(DOCS, target)):
+            bad.append(f"{doc}: broken link {target}")
+    assert not bad, "\n".join(bad)
+
+
+def test_readme_links_docs_tree():
+    """README's architecture map must point at the docs tree."""
+    readme = open(os.path.join(REPO, "README.md")).read()
+    assert "docs/paper_map.md" in readme
+    assert "docs/sim_guide.md" in readme

@@ -1,0 +1,39 @@
+"""Lazy-export hygiene: every name the top-level ``repro`` package promises
+must resolve, and its sim re-export set must mirror ``repro.sim.__all__``
+exactly (the ISSUE 2 sync fix — PR 1 had drifted)."""
+
+import importlib
+
+import pytest
+
+import repro
+
+
+def test_every_top_level_export_resolves():
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+
+
+def test_sim_reexports_mirror_sim_all():
+    import repro.sim
+    assert set(repro._SIM_EXPORTS) == set(repro.sim.__all__)
+
+
+def test_all_is_sorted_union_of_submodules_and_sim_exports():
+    assert repro.__all__ == sorted(repro._SUBMODULES | repro._SIM_EXPORTS)
+
+
+def test_unknown_attribute_raises():
+    with pytest.raises(AttributeError):
+        repro.definitely_not_a_thing
+
+
+def test_dir_covers_all():
+    assert set(repro.__all__) <= set(dir(repro))
+
+
+@pytest.mark.parametrize("mod", ["core", "sim", "pipeline", "ft"])
+def test_submodule_all_names_resolve(mod):
+    m = importlib.import_module(f"repro.{mod}")
+    for name in getattr(m, "__all__", ()):
+        assert getattr(m, name) is not None, f"repro.{mod}.{name}"

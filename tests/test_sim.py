@@ -1,5 +1,7 @@
 """Discrete-event engine (repro.sim) — cross-validation vs Eqs. (12)-(14),
-event/FIFO semantics, capacity traces, scenarios, and the replanning driver."""
+event/FIFO semantics, admission policies (FIFO vs 1F1B memory claims),
+vectorized-vs-heap engine equivalence, capacity traces, scenarios, and the
+replanning driver."""
 
 import json
 import math
@@ -7,17 +9,21 @@ import math
 import numpy as np
 import pytest
 
-from repro.core import (SplitSolution, evaluate_under_fluctuation,
-                        fill_latency, make_edge_network, ours,
-                        pipeline_interval, total_latency, uniform_profile,
-                        vgg16_profile)
+from repro.core import (EdgeNetwork, Node, SplitSolution,
+                        evaluate_under_fluctuation, fill_latency,
+                        make_edge_network, ours, pipeline_interval,
+                        total_latency, uniform_profile, vgg16_profile)
+from repro.core.profiles import ModelProfile
 from repro.ft import RateChange, Straggler
-from repro.sim import (NetworkScenario, PiecewiseTrace, ReplanTrigger,
-                       build_tasks, constant, cross_validate,
+from repro.sim import (FIFO, NetworkScenario, OneFOneB, PiecewiseTrace,
+                       ReplanTrigger, activation_occupancy, build_tasks,
+                       compare_engines, constant, cross_validate,
                        cross_validate_many, gauss_markov,
                        gauss_markov_scenario, iid_piecewise, piecewise,
-                       piecewise_cv_scenario, random_instance, simulate_plan,
-                       simulate_with_replanning, write_chrome_trace)
+                       piecewise_cv_scenario, random_instance, resolve_policy,
+                       simulate_plan, simulate_with_replanning,
+                       stage_activation_highwater, vectorizable,
+                       write_chrome_trace)
 
 
 @pytest.fixture(scope="module")
@@ -322,3 +328,237 @@ def test_build_tasks_chain_shape():
     roots = [t for t in tasks if t.dep is None]
     assert len(roots) == m                       # one chain per micro-batch
     assert all(t.resource == ("fp", 0) for t in roots)
+
+
+# ---------------------------------------------------------------------------
+# Admission policies: FIFO bit-identity, 1F1B windows, memory claims
+# ---------------------------------------------------------------------------
+
+def _saturating_instance(S=4, Q=12):
+    """Distinct-placement chain whose *final* BP dominates everything: every
+    earlier resource drains instantly, so each stage buffers as many live
+    activations as its admission policy permits — the claims are achieved
+    exactly, not just bounded."""
+    fp = np.full(S, 1e-3)
+    bp = np.full(S, 1e-3)
+    bp[-1] = 10.0
+    prof = ModelProfile(name="sat", fp_work=fp, bp_work=bp,
+                        act_bytes=np.full(S, 1.0),
+                        grad_bytes=np.full(S, 1.0),
+                        param_bytes=np.zeros(S), opt_bytes=np.zeros(S))
+    nodes = [Node("c", f=1.0, t0=0.0, t1=0.0, b_th=0, is_client=True)]
+    nodes += [Node(f"s{i}", f=1.0, t0=0.0, t1=0.0, b_th=0)
+              for i in range(1, S)]
+    rate = np.full((S, S), 1e6)
+    np.fill_diagonal(rate, 0.0)
+    net = EdgeNetwork(nodes=nodes, rate=rate, num_clients=1)
+    sol = SplitSolution(cuts=tuple(range(1, S + 1)),
+                        placement=tuple(range(S)))
+    return prof, net, sol, Q
+
+
+def _record_tuple(rec):
+    return (rec.microbatch, rec.stage, rec.kind, rec.resource, rec.start,
+            rec.end)
+
+
+def test_fifo_policy_is_the_pr1_engine():
+    """FIFO must reproduce PR 1 timelines bit-identically: it contributes
+    zero extra edges, so the default heap event loop is untouched."""
+    prof, net, sol, b, B = random_instance(7)
+    tasks = build_tasks(prof, net, sol, b, 4)
+    assert FIFO().extra_dependencies(tasks) == []
+    rep = simulate_plan(prof, net, sol, b, B=B)        # defaults
+    assert rep.engine == "event" and rep.policy == "fifo"
+    explicit = simulate_plan(prof, net, sol, b, B=B, policy="fifo",
+                             engine="event")
+    assert [_record_tuple(r) for r in rep.records] == \
+           [_record_tuple(r) for r in explicit.records]
+
+
+def test_policy_resolution_and_windows():
+    assert resolve_policy("gpipe").name == "fifo"
+    assert resolve_policy(OneFOneB()).name == "1f1b"
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        resolve_policy("round-robin")
+    one = OneFOneB()
+    assert [one.window(4, j) for j in range(4)] == [4, 3, 2, 1]
+    assert FIFO().window(4, 0) is None
+
+
+def test_engines_agree_under_both_policies():
+    """Heap engine vs vectorized engine: identical micro-batch completion
+    times (to float noise) wherever the vectorized engine is eligible."""
+    hits = 0
+    for seed in range(12):
+        prof, net, sol, b, B = random_instance(31 * seed + 2)
+        if not vectorizable(prof, net, sol, b):
+            continue
+        hits += 1
+        Q = 1 + math.ceil((B - b) / b)
+        for pol in ("fifo", "1f1b"):
+            assert compare_engines(prof, net, sol, b, Q, policy=pol) < 1e-9
+    assert hits >= 8        # the generator yields distinct placements
+
+
+def test_vectorized_engine_preconditions():
+    prof = uniform_profile(8, fp=1.0, bp=2.0, act=1.0)
+    net = make_edge_network(num_servers=3, num_clients=1, seed=0)
+    colocated = SplitSolution(cuts=(2, 4, 6, 8), placement=(0, 1, 2, 1))
+    assert not vectorizable(prof, net, colocated, 4)
+    with pytest.raises(ValueError, match="vectorized engine requires"):
+        simulate_plan(prof, net, colocated, 4, B=16, engine="vectorized")
+    # auto falls back to the heap engine and still matches Eq. (12) solo
+    rep = simulate_plan(prof, net, colocated, 4, num_microbatches=1,
+                        engine="auto")
+    assert rep.engine == "event"
+    assert rep.L_t == pytest.approx(fill_latency(prof, net, colocated, 4),
+                                    rel=1e-9)
+    # a time-varying scenario also forces the heap path under "auto"
+    distinct = SplitSolution(cuts=(2, 4, 8), placement=(0, 1, 2))
+    scen = NetworkScenario().with_straggler(1, 0.0, 1.0, 2.0)
+    rep = simulate_plan(prof, net, distinct, 4, num_microbatches=2,
+                        scenario=scen, engine="auto")
+    assert rep.engine == "event"
+    # ... but an all-constant scenario does not
+    rep = simulate_plan(prof, net, distinct, 4, num_microbatches=2,
+                        scenario=NetworkScenario(), engine="auto")
+    assert rep.engine == "vectorized"
+
+
+def test_highwater_never_exceeds_schedule_claims():
+    """Event-by-event: measured per-stage activation occupancy stays within
+    the closed-form claims of pipeline.schedule for every random instance,
+    under both policies and both engines."""
+    from repro.pipeline.schedule import memory_highwater
+    for seed in (1, 5, 9):
+        prof, net, sol, b, B = random_instance(seed)
+        Q = 1 + math.ceil((B - b) / b)
+        S = len(list(sol.segments()))
+        for pol in ("fifo", "1f1b"):
+            claims = memory_highwater(S, Q, pol)
+            for eng in ("event", "auto"):
+                rep = simulate_plan(prof, net, sol, b, num_microbatches=Q,
+                                    policy=pol, engine=eng)
+                occ = activation_occupancy(rep.records)
+                assert set(occ) == set(claims)
+                for j, series in occ.items():
+                    for _, level in series:       # every event, every stage
+                        assert level <= claims[j]
+
+
+def test_1f1b_highwater_matches_schedule_claims_exactly():
+    """On a pipeline whose claims are achievable, the engine's measured
+    high-water marks equal pipeline.schedule's closed form — stage by
+    stage, for both the GPipe and the 1F1B claim."""
+    from repro.pipeline.schedule import memory_highwater
+    prof, net, sol, Q = _saturating_instance(S=4, Q=12)
+    for pol in ("fifo", "1f1b"):
+        rep = simulate_plan(prof, net, sol, 1, num_microbatches=Q,
+                            policy=pol, engine="event")
+        assert stage_activation_highwater(rep.records) == \
+            memory_highwater(4, Q, pol)
+    # and with fewer micro-batches than stages the claims clip at Q
+    small = simulate_plan(prof, net, sol, 1, num_microbatches=2,
+                          policy="1f1b", engine="event")
+    assert stage_activation_highwater(small.records) == \
+        memory_highwater(4, 2, "1f1b")
+
+
+def test_1f1b_trades_latency_for_memory():
+    prof, net, sol, Q = _saturating_instance(S=4, Q=12)
+    fifo = simulate_plan(prof, net, sol, 1, num_microbatches=Q,
+                         policy="fifo")
+    one = simulate_plan(prof, net, sol, 1, num_microbatches=Q,
+                        policy="1f1b")
+    assert one.L_t >= fifo.L_t - 1e-9          # admission can only delay
+    hw_f = stage_activation_highwater(fifo.records)
+    hw_1 = stage_activation_highwater(one.records)
+    assert all(hw_1[j] <= hw_f[j] for j in hw_f)
+    assert hw_1[0] < hw_f[0]                   # strictly fewer live buffers
+
+
+def test_zero_microbatches_empty_report_on_both_engines():
+    prof, net, sol, b, _ = random_instance(3)
+    for pol in ("fifo", "1f1b"):
+        for eng in ("event", "vectorized"):
+            rep = simulate_plan(prof, net, sol, b, num_microbatches=0,
+                                policy=pol, engine=eng)
+            assert rep.num_microbatches == 0
+            assert len(rep.mb_complete) == 0 and rep.records == []
+            assert rep.L_t == 0.0 and rep.resource_busy == {}
+
+
+def test_single_microbatch_identical_across_policies_and_engines():
+    prof, net, sol, b, _ = random_instance(3)
+    want = fill_latency(prof, net, sol, b)
+    for pol in ("fifo", "1f1b"):
+        for eng in ("event", "auto"):
+            rep = simulate_plan(prof, net, sol, b, B=b, policy=pol,
+                                engine=eng)
+            assert rep.num_microbatches == 1
+            assert rep.T_i == 0.0
+            assert rep.L_t == pytest.approx(want, rel=1e-9)
+
+
+def test_vectorized_report_timeline_and_lazy_records():
+    prof, net, sol, b, B = random_instance(5)
+    rep = simulate_plan(prof, net, sol, b, B=B, engine="vectorized")
+    assert rep.engine == "vectorized" and rep.timeline is not None
+    Q, R = rep.timeline.starts.shape
+    assert Q == rep.num_microbatches
+    assert len(rep.records) == Q * R             # materialized on demand
+    assert rep.records is rep.records            # and cached
+    # the dense timeline respects chain order and non-negative service
+    assert np.all(rep.timeline.ends >= rep.timeline.starts - 1e-12)
+    assert np.all(np.diff(rep.timeline.ends, axis=1) >= -1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Scenario edge cases: zero-length segments/windows, overlapping windows
+# ---------------------------------------------------------------------------
+
+def test_piecewise_coalesces_zero_length_segments():
+    tr = piecewise((0.0, 1.0, 1.0, 2.0), (1.0, 99.0, 2.0, 3.0))
+    assert tr.times == (0.0, 1.0, 2.0)
+    assert tr.values == (1.0, 2.0, 3.0)          # last value wins at t=1
+    # the strict dataclass keeps rejecting non-increasing breakpoints
+    with pytest.raises(ValueError, match="strictly increasing"):
+        PiecewiseTrace((0.0, 1.0, 1.0), (1.0, 2.0, 3.0))
+
+
+def test_zero_length_windows_are_identity(paper_plan):
+    prof, net, plan = paper_plan
+    base = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B)
+    node = plan.solution.placement[1]
+    scen = NetworkScenario().with_straggler(node, 2.0, 2.0, 8.0)
+    scen = scen.with_outage(plan.solution.placement[0], node, 1.0, 1.0)
+    same = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B,
+                         scenario=scen)
+    assert same.L_t == pytest.approx(base.L_t, rel=1e-12)
+
+
+def test_outage_overlapping_straggler_compounds(paper_plan):
+    """An outage window overlapping a straggler window on the same span:
+    the run stays finite, and the combination is at least as slow as either
+    perturbation alone (slower resources cannot speed a FIFO pipeline)."""
+    prof, net, plan = paper_plan
+    base = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B)
+    node = plan.solution.placement[1]
+    a = plan.solution.placement[0]
+    t_mid = 0.5 * base.L_t
+    strag = NetworkScenario().with_straggler(node, 0.0, t_mid, 6.0)
+    outage = NetworkScenario().with_outage(a, node, 0.25 * base.L_t, t_mid)
+    both = strag.with_outage(a, node, 0.25 * base.L_t, t_mid)
+    r_s = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B,
+                        scenario=strag)
+    r_o = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B,
+                        scenario=outage)
+    r_b = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B,
+                        scenario=both)
+    assert np.isfinite(r_b.L_t)
+    assert r_b.L_t >= max(r_s.L_t, r_o.L_t) - 1e-9
+    # ... under 1F1B admission too
+    r_b1 = simulate_plan(prof, net, plan.solution, plan.b, B=plan.B,
+                         scenario=both, policy="1f1b")
+    assert np.isfinite(r_b1.L_t) and r_b1.L_t >= r_b.L_t - 1e-9
