@@ -1,30 +1,19 @@
 # Tier-1 verification + dev conveniences.
-# `make verify` is the full tier-1 suite (includes known seed-debt
-# failures); CI runs `make verify-ci`, which deselects them (see
-# .github/workflows/ci.yml).
+# The 6 pre-existing jax-0.4.37 seed-debt failures (test_hlo / test_spmd /
+# test_system) are annotated in-place as xfail(strict=False) with root-cause
+# notes (ISSUE 3 satellite), so `make verify` is green while the debt stays
+# visible as `x` in the report — no deselect list needed anymore.
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-ci verify-docs test dev-deps sim-check bench-fig6b \
-        bench-sweep example-sim
+.PHONY: verify verify-ci verify-docs test dev-deps sim-check bench \
+        bench-planner bench-fig6b bench-sweep example-sim
 
 verify:
 	$(PYTHON) -m pytest -x -q
 
-# pre-existing jax failures present since the seed (see ROADMAP.md "Seed
-# debt"); CI deselects them so it signals on *new* breakage, while the
-# tier-1 `verify` target keeps the debt visible locally
-KNOWN_FAILURES := \
-  --deselect tests/test_hlo.py::test_xla_counts_loop_bodies_once \
-  --deselect tests/test_hlo.py::test_collective_parser_on_sharded_module \
-  --deselect tests/test_spmd.py::test_pipeline_loss_and_grads_match_plain \
-  --deselect tests/test_spmd.py::test_checkpoint_reshards_across_meshes \
-  --deselect tests/test_spmd.py::test_small_mesh_train_step_lowers_with_production_rules \
-  --deselect tests/test_system.py::test_end_to_end_sl_training_converges
-
-verify-ci:
-	$(PYTHON) -m pytest -x -q $(KNOWN_FAILURES)
+verify-ci: verify
 
 # modules whose docstrings carry runnable >>> examples (the ISSUE 2
 # docstring pass); --doctest-modules is the package-aware `python -m
@@ -36,10 +25,9 @@ DOCTEST_MODULES := \
   src/repro/pipeline/schedule.py
 
 # docs job: doctests over the documented APIs + the docs/*.md anchor/link
-# check + export hygiene; reuses the tier-1 deselect list above so it
-# signals on the same breakage set as verify-ci
+# check + export hygiene
 verify-docs:
-	$(PYTHON) -m pytest -q $(KNOWN_FAILURES) --doctest-modules \
+	$(PYTHON) -m pytest -q --doctest-modules \
 	  $(DOCTEST_MODULES) tests/test_docs.py tests/test_exports.py
 
 test:
@@ -51,6 +39,13 @@ dev-deps:
 # fast standalone consistency check: event engine vs Eqs. (12)-(14)
 sim-check:
 	$(PYTHON) -m pytest -q tests/test_sim.py
+
+# planner scaling grid + the ISSUE-3 acceptance instance; rewrites the
+# repo-root BENCH_planner.json perf-trajectory file
+bench-planner:
+	$(PYTHON) -m benchmarks.bench_planner
+
+bench: bench-planner bench-fig6b bench-sweep
 
 bench-fig6b:
 	$(PYTHON) -m benchmarks.fig6b_traces

@@ -1,0 +1,119 @@
+"""Planner scaling benchmark (ISSUE 3): nodes x layers x B grid for
+``solve_msp`` / ``bcd_solve`` / ``exhaustive_joint``, threshold-batched vs
+the legacy scan, with wall-clocks and DP sweep counts.
+
+Outputs:
+  results/bench/bench_planner.csv   the full grid
+  BENCH_planner.json (repo root)    summary incl. the acceptance instance
+                                    (24 servers x 30 layers x B = 64) —
+                                    the perf trajectory tracked across PRs
+
+``--smoke`` shrinks the grid for the CI invocation (a few seconds).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core import (bcd_solve, exhaustive_joint, make_edge_network,
+                        solve_msp, transformer_profile)
+from .common import Timer, emit
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_planner.json")
+
+
+def bench_instance(servers: int, blocks: int, *, seed: int = 1):
+    """A transformer-profile edge instance; total layers I = blocks + 2."""
+    prof = transformer_profile(
+        f"bench{blocks + 2}", num_layers=blocks, d_model=512, n_heads=8,
+        n_kv=8, d_ff=2048, vocab=32000, seq_len=128)
+    net = make_edge_network(num_servers=servers, num_clients=4, seed=seed,
+                            kappa=1 / 32.0, f_range=(1e12, 10e12),
+                            mem_range=(4 * 2**30, 32 * 2**30))
+    return prof, net
+
+
+def acceptance_instance():
+    """The ISSUE-3 acceptance point: 24 servers x 30 layers."""
+    return bench_instance(24, 28)
+
+
+def _grid_cell(servers, blocks, B, rows):
+    prof, net = bench_instance(servers, blocks)
+    b = max(1, B // 8)
+    with Timer() as t_bat:
+        r_bat = solve_msp(prof, net, b, B, solver="batched")
+    with Timer() as t_scan:
+        r_scan = solve_msp(prof, net, b, B, solver="scan")
+    with Timer() as t_bcd:
+        bcd_solve(prof, net, B)
+    with Timer() as t_ex:
+        exhaustive_joint(prof, net, B, solver="batched")
+    rows.append([servers, blocks + 2, B,
+                 round(t_bat.seconds, 4), r_bat.thresholds_scanned,
+                 round(t_scan.seconds, 4), r_scan.thresholds_scanned,
+                 round(t_bcd.seconds, 4), round(t_ex.seconds, 4)])
+    return rows
+
+
+def acceptance_run(b_step: int = 1):
+    """exhaustive_joint, batched vs legacy scan, on the acceptance instance."""
+    prof, net = acceptance_instance()
+    B = 64
+    with Timer() as t_bat:
+        p_bat = exhaustive_joint(prof, net, B, b_step=b_step, solver="batched")
+    with Timer() as t_scan:
+        p_scan = exhaustive_joint(prof, net, B, b_step=b_step, solver="scan")
+    identical = (p_bat.solution == p_scan.solution and p_bat.b == p_scan.b
+                 and p_bat.L_t == p_scan.L_t)
+    return {
+        "servers": 24, "layers": 30, "B": B, "b_step": b_step,
+        "scan_seconds": round(t_scan.seconds, 3),
+        "batched_seconds": round(t_bat.seconds, 3),
+        "speedup": round(t_scan.seconds / t_bat.seconds, 2),
+        "identical_plans": bool(identical),
+        "L_t": round(p_bat.L_t, 6), "b": p_bat.b,
+    }
+
+
+def run(smoke: bool = False, b_step: int | None = None) -> dict:
+    rows = []
+    grid = ([(4, 8, 32)] if smoke else
+            [(6, 14, 64), (12, 28, 64), (24, 28, 64), (48, 28, 128)])
+    for servers, blocks, B in grid:
+        _grid_cell(servers, blocks, B, rows)
+    emit("bench_planner", rows,
+         ["servers", "layers", "B", "msp_batched_s", "batched_sweeps",
+          "msp_scan_s", "scan_sweeps", "bcd_s", "exhaustive_batched_s"])
+    acc = acceptance_run(b_step=b_step if b_step is not None
+                         else (32 if smoke else 1))
+    summary = {
+        "issue": 3,
+        "generated_unix": int(time.time()),
+        "smoke": smoke,
+        "acceptance": acc,
+        "grid": [dict(zip(["servers", "layers", "B", "msp_batched_s",
+                           "batched_sweeps", "msp_scan_s", "scan_sweeps",
+                           "bcd_s", "exhaustive_batched_s"], r))
+                 for r in rows],
+    }
+    if not smoke:                      # the tracked trajectory file
+        with open(JSON_PATH, "w") as f:
+            json.dump(summary, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {JSON_PATH}")
+    print(json.dumps(acc, indent=2))
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (no BENCH_planner.json rewrite)")
+    ap.add_argument("--b-step", type=int, default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, b_step=args.b_step)

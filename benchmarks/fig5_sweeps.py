@@ -11,11 +11,11 @@ SCHEMES = {"ours": ours, "rc_op": rc_op, "rp_oc": rp_oc,
            "no_pipeline": no_pipeline}
 
 
-def _latencies(net, prof):
+def _latencies(net, prof, solver=None):
     out = {}
     for name, fn in SCHEMES.items():
         kw = {"seed": 7} if name in ("rc_op", "rp_oc") else {}
-        out[name] = fn(prof, net, B=B, **kw).L_t
+        out[name] = fn(prof, net, B=B, solver=solver, **kw).L_t
     return out
 
 

@@ -18,7 +18,10 @@ from .common import Timer, emit, paper_network, paper_profile
 B = 512
 
 
-def run(server_counts=(2, 4, 6, 8, 10), seed=1):
+def run(server_counts=(2, 4, 6, 8, 10), seed=1, scan_baseline=True):
+    """``scan_baseline`` additionally times the legacy ``solver="scan"``
+    exhaustive sweep so Fig. 7(b)'s runtime story covers both planners
+    (the ISSUE-3 threshold-batched kernel vs the per-threshold scan)."""
     prof = paper_profile()
     rows = []
     for n in server_counts:
@@ -29,18 +32,27 @@ def run(server_counts=(2, 4, 6, 8, 10), seed=1):
             p_ours = ours(prof, net, B=B, b0=20)
         with Timer() as t_opt:
             p_opt = exhaustive_joint(prof, net, B, b_step=4)
+        t_scan = float("nan")
+        if scan_baseline:
+            with Timer() as t:
+                p_scan = exhaustive_joint(prof, net, B, b_step=4,
+                                          solver="scan")
+            assert p_scan.L_t == p_opt.L_t, "scan/batched divergence"
+            t_scan = t.seconds
         rows.append([
             n,
             round(p_paper.L_t, 4), round(t_paper.seconds, 3),
             round(p_ours.L_t, 4), round(t_ours.seconds, 3),
             round(p_opt.L_t, 4), round(t_opt.seconds, 3),
+            round(t_scan, 3),
             round(p_paper.L_t / p_opt.L_t - 1, 4),
             round(p_ours.L_t / p_opt.L_t - 1, 4),
         ])
     emit("fig7_optimality", rows,
          ["servers", "bcd_paper_s", "bcd_paper_runtime",
           "bcd_refined_s", "bcd_refined_runtime",
-          "optimal_s", "optimal_runtime", "paper_gap", "refined_gap"])
+          "optimal_s", "optimal_runtime", "optimal_scan_runtime",
+          "paper_gap", "refined_gap"])
     return rows
 
 

@@ -10,14 +10,14 @@ B = 512
 TOPOLOGIES = ("mesh", "line", "star", "tree")
 
 
-def run(seeds=(0, 1, 2)):
+def run(seeds=(0, 1, 2), solver=None):
     prof = paper_profile()
     rows = []
     for topo in TOPOLOGIES:
         for n in (2, 4, 6, 8, 10):
             for s in seeds:
                 net = paper_network(num_servers=n, seed=s, topology=topo)
-                p = ours(prof, net, B=B, b0=20)
+                p = ours(prof, net, B=B, b0=20, solver=solver)
                 rows.append([topo, n, s, round(p.L_t, 4), p.b])
     emit("fig8_topologies", rows,
          ["topology", "servers", "seed", "latency_s", "micro_batch"])

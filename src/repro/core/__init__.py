@@ -12,9 +12,9 @@ from .latency import (SplitSolution, validate_solution, fill_latency,
                       pipeline_interval, total_latency, no_pipeline_latency,
                       memory_feasible, node_memory_usage, num_fills,
                       breakdown, client_shares)
-from .msp_graph import MSPGraph, build_graph, graph_stats
-from .shortest_path import (MSPResult, solve_msp, brute_force_msp,
-                            enumerate_solutions)
+from .msp_graph import GraphFactory, MSPGraph, build_graph, graph_stats
+from .shortest_path import (DEFAULT_SOLVER, MSPResult, Planner, solve_msp,
+                            brute_force_msp, enumerate_solutions)
 from .microbatch import (MicrobatchResult, optimal_microbatch,
                          exhaustive_microbatch, feasibility_box)
 from .bcd import Plan, bcd_solve, exhaustive_joint
@@ -29,8 +29,9 @@ __all__ = [
     "TPU_ICI_BW", "TPU_HBM_BYTES", "SplitSolution", "validate_solution",
     "fill_latency", "pipeline_interval", "total_latency",
     "no_pipeline_latency", "memory_feasible", "node_memory_usage",
-    "num_fills", "breakdown", "client_shares", "MSPGraph", "build_graph",
-    "graph_stats", "MSPResult", "solve_msp", "brute_force_msp",
+    "num_fills", "breakdown", "client_shares", "MSPGraph", "GraphFactory",
+    "build_graph", "graph_stats", "MSPResult", "Planner", "DEFAULT_SOLVER",
+    "solve_msp", "brute_force_msp",
     "enumerate_solutions", "MicrobatchResult", "optimal_microbatch",
     "exhaustive_microbatch", "feasibility_box", "Plan", "bcd_solve",
     "exhaustive_joint", "rc_op", "rp_oc", "no_pipeline", "ours", "optimal",

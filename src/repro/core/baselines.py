@@ -21,7 +21,7 @@ from .latency import SplitSolution
 from .microbatch import optimal_microbatch
 from .network import EdgeNetwork
 from .profiles import ModelProfile
-from .shortest_path import solve_msp
+from .shortest_path import Planner
 
 
 def _finish_plan(profile, net, sol, b, B) -> Plan:
@@ -45,16 +45,17 @@ def random_cuts(rng: np.random.Generator, I: int, K: int) -> tuple:
 
 def rc_op(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
           b0: int = 20, K: int | None = None, tries: int = 4,
-          memory_model: str = "paper") -> Plan:
+          memory_model: str = "paper", solver: str | None = None) -> Plan:
     """Random Cut + Optimal Placement (+ optimal micro-batch for the pipeline
     comparison to be apples-to-apples, as in Fig. 4/5)."""
     rng = np.random.default_rng(seed)
     K = K or min(1 + net.num_servers, profile.num_layers)
+    planner = Planner(profile, net, memory_model)  # shared across re-draws
     best = None
     for _ in range(tries):  # a random cut can be infeasible; re-draw
         cuts = random_cuts(rng, profile.num_layers, K)
-        msp = solve_msp(profile, net, b0, B, K=len(cuts),
-                        restrict_cuts=cuts, memory_model=memory_model)
+        msp = planner.solve(b0, B, K=len(cuts), restrict_cuts=cuts,
+                            solver=solver)
         if not msp.feasible:
             continue
         mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
@@ -68,19 +69,19 @@ def rc_op(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
 
 def rp_oc(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
           b0: int = 20, K: int | None = None, tries: int = 4,
-          memory_model: str = "paper") -> Plan:
+          memory_model: str = "paper", solver: str | None = None) -> Plan:
     """Random Placement + Optimal Cut (+ optimal micro-batch)."""
     rng = np.random.default_rng(seed)
     K = K or min(1 + net.num_servers, profile.num_layers)
     servers = list(net.server_indices())
+    planner = Planner(profile, net, memory_model)  # shared across re-draws
     best = None
     for _ in range(tries):
         s = min(int(rng.integers(2, K + 1)), 1 + len(servers))
         order = list(rng.permutation(servers)[:s - 1])
         placement = (0,) + tuple(int(n) for n in order)
-        msp = solve_msp(profile, net, b0, B, K=len(placement),
-                        restrict_placement=placement,
-                        memory_model=memory_model)
+        msp = planner.solve(b0, B, K=len(placement),
+                            restrict_placement=placement, solver=solver)
         if not msp.feasible:
             continue
         mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
@@ -93,17 +94,18 @@ def rp_oc(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
 
 
 def no_pipeline(profile: ModelProfile, net: EdgeNetwork, B: int,
-                K: int | None = None, memory_model: str = "paper") -> Plan:
+                K: int | None = None, memory_model: str = "paper",
+                solver: str | None = None) -> Plan:
     """Optimal MSP with b = B (xi = 0 -> pure min-sum Dijkstra).  'Due to the
     optimality, also the upper bound of existing split inference/learning
     schemes without pipeline parallelism' (Sec. VI-A)."""
-    msp = solve_msp(profile, net, B, B, K=K, memory_model=memory_model)
+    planner = Planner(profile, net, memory_model)  # shared across fallbacks
+    msp = planner.solve(B, B, K=K, solver=solver)
     if not msp.feasible:
         # memory may force b < B even without pipelining benefits: fall back
         # to the largest feasible single micro-batch
         for b in (B // 2, B // 4, B // 8, B // 16, 1):
-            msp = solve_msp(profile, net, max(b, 1), B, K=K,
-                            memory_model=memory_model)
+            msp = planner.solve(max(b, 1), B, K=K, solver=solver)
             if msp.feasible:
                 sol = msp.solution
                 ticks = math.ceil(B / max(b, 1))
@@ -120,17 +122,21 @@ def no_pipeline(profile: ModelProfile, net: EdgeNetwork, B: int,
 
 def ours(profile: ModelProfile, net: EdgeNetwork, B: int, *, b0: int = 20,
          theta: float = 0.01, K: int | None = None,
-         memory_model: str = "paper", restarts: bool = True) -> Plan:
+         memory_model: str = "paper", restarts: bool = True,
+         solver: str | None = None) -> Plan:
     """Algorithm 2, with multi-start over b0 (beyond-paper robustness: BCD
     is a coordinate descent and can sit in a poor basin for one seed; three
-    extra solves cost milliseconds and close most of the Fig. 7 gap)."""
+    extra solves cost milliseconds and close most of the Fig. 7 gap).  One
+    ``Planner`` (graph factory + DP buffers) is shared by every restart."""
+    planner = Planner(profile, net, memory_model)
     plan = bcd_solve(profile, net, B, b0=b0, theta=theta, K=K,
-                     memory_model=memory_model)
+                     memory_model=memory_model, solver=solver, planner=planner)
     if not restarts:
         return plan
     for alt in {max(1, B // 16), max(1, B // 4), max(1, B // 2)} - {b0}:
         cand = bcd_solve(profile, net, B, b0=alt, theta=theta, K=K,
-                         memory_model=memory_model)
+                         memory_model=memory_model, solver=solver,
+                         planner=planner)
         if cand.feasible and (not plan.feasible or cand.L_t < plan.L_t):
             plan = cand
     return plan
@@ -138,9 +144,9 @@ def ours(profile: ModelProfile, net: EdgeNetwork, B: int, *, b0: int = 20,
 
 def optimal(profile: ModelProfile, net: EdgeNetwork, B: int,
             K: int | None = None, b_step: int = 1,
-            memory_model: str = "paper") -> Plan:
+            memory_model: str = "paper", solver: str | None = None) -> Plan:
     return exhaustive_joint(profile, net, B, K=K, b_step=b_step,
-                            memory_model=memory_model)
+                            memory_model=memory_model, solver=solver)
 
 
 SCHEMES = {

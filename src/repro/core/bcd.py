@@ -37,7 +37,7 @@ from .latency import SplitSolution
 from .microbatch import optimal_microbatch
 from .network import EdgeNetwork
 from .profiles import ModelProfile
-from .shortest_path import MSPResult, solve_msp
+from .shortest_path import DEFAULT_SOLVER, MSPResult, Planner, solve_msp
 
 
 @dataclasses.dataclass
@@ -62,7 +62,8 @@ class Plan:
 def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
               b0: int = 20, theta: float = 0.01, max_iters: int = 12,
               K: int | None = None, memory_model: str = "paper",
-              refine_b: bool = True) -> Plan:
+              refine_b: bool = True, solver: str | None = None,
+              planner: Planner | None = None) -> Plan:
     """Algorithm 2.  ``theta`` is the convergence tolerance (Table II: 0.01).
 
     ``refine_b`` (beyond-paper, default on): Theorem 1 minimizes
@@ -74,8 +75,19 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
     scan of the TRUE Eq. (14) objective over b (O(B) cheap evaluations),
     then re-runs Algorithm 1 once at the refined b.  Set False for the
     paper-faithful variant (reported separately in Fig. 7).
+
+    ``solver`` selects the Algorithm-1 strategy ("batched" default, "scan"
+    reference); a shared ``planner`` (graph factory + DP buffers) is created
+    once per solve and reused across every BCD iteration — pass one in to
+    amortize it further (e.g. across multi-start restarts).
     """
     t_start = time.perf_counter()
+    if planner is None:
+        planner = Planner(profile, net, memory_model)
+    elif planner.memory_model != memory_model:
+        raise ValueError(
+            f"planner was built with memory_model={planner.memory_model!r} "
+            f"but bcd_solve was called with {memory_model!r}")
     b = max(1, min(b0, B))
     history = []
     prev_L = math.inf
@@ -83,7 +95,7 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
     iters = 0
     for tau in range(1, max_iters + 1):
         iters = tau
-        msp = solve_msp(profile, net, b, B, K=K, memory_model=memory_model)
+        msp = planner.solve(b, B, K=K, solver=solver)
         if not msp.feasible:
             # shrink b: memory may be the blocker at this micro-batch size
             if b > 1:
@@ -114,8 +126,7 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
         b_ref, _ = exhaustive_microbatch(profile, net, sol, B, T_1=None,
                                          memory_model=memory_model)
         if b_ref > 0 and b_ref != b:
-            msp2 = solve_msp(profile, net, b_ref, B, K=K,
-                             memory_model=memory_model)
+            msp2 = planner.solve(b_ref, B, K=K, solver=solver)
             if msp2.feasible:
                 cand_sol, cand_b = msp2.solution, b_ref
                 b_ref2, _ = exhaustive_microbatch(
@@ -139,12 +150,26 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
 
 def exhaustive_joint(profile: ModelProfile, net: EdgeNetwork, B: int,
                      K: int | None = None, memory_model: str = "paper",
-                     b_step: int = 1) -> Plan:
-    """Fig. 7's 'optimal scheme': exhaustive over b, Algorithm 1 per b."""
+                     b_step: int = 1, solver: str | None = None) -> Plan:
+    """Fig. 7's 'optimal scheme': exhaustive over b, Algorithm 1 per b.
+
+    With ``solver="batched"`` (default) the whole b-sweep is dispatched as
+    stacked multi-slice kernel sweeps through one shared ``Planner``
+    (``Planner.solve_many``): graphs assemble by broadcasting from one
+    ``GraphFactory`` and all b ride the kernel's slice axis.  With
+    ``solver="scan"`` each b pays the legacy per-b rebuild + threshold scan
+    — the reference the ISSUE-3 benchmark measures speedup against."""
     t_start = time.perf_counter()
+    solver = solver or DEFAULT_SOLVER
+    bs = list(range(1, B + 1, b_step))
+    if solver == "batched":
+        planner = Planner(profile, net, memory_model)
+        msps = planner.solve_many(bs, B, K=K)
+    else:
+        msps = [solve_msp(profile, net, b, B, K=K, memory_model=memory_model,
+                          solver=solver) for b in bs]
     best_plan = None
-    for b in range(1, B + 1, b_step):
-        msp = solve_msp(profile, net, b, B, K=K, memory_model=memory_model)
+    for b, msp in zip(bs, msps):
         if not msp.feasible:
             continue
         L_t = L.total_latency(profile, net, msp.solution, b, B)

@@ -23,9 +23,16 @@ Each edge also carries the *bottleneck* value
 so a path's max-beta equals T_i of Eq. (13) whenever no node hosts two
 submodels (paper mode; see DESIGN.md §6 for the exact-mode discussion).
 
-Everything is materialized as dense numpy arrays over the edge space
-``(n, i, n', j)`` — independent of k — so Algorithm 1's repeated
-shortest-path sweeps are vectorized.
+Everything is materialized as dense numpy arrays over the *factored* edge
+space — communication terms over ``(i, n, n')`` and segment terms over
+``(n', i, j)`` — so Algorithm 1's shortest-path sweeps are vectorized and an
+edge weight is recovered as ``comm + segment`` on demand.
+
+``GraphFactory`` separates the b-independent precomputation (per-sample
+segment workloads, per-cut byte volumes, rate matrices, node constants) from
+the b-dependent assembly (a handful of broadcast multiplies), so the BCD loop
+and the micro-batch sweep of ``exhaustive_joint`` rebuild graphs in
+microseconds instead of re-running a Python double loop per b (ISSUE 3).
 """
 
 from __future__ import annotations
@@ -34,8 +41,7 @@ import dataclasses
 
 import numpy as np
 
-from .latency import (SplitSolution, bp_latency, bwd_bytes, client_max_share,
-                      comm_latency, fp_latency, fwd_bytes, memory_bytes)
+from .latency import SplitSolution, client_max_share
 from .network import EdgeNetwork
 from .profiles import ModelProfile
 
@@ -79,44 +85,127 @@ class MSPGraph:
         return float(max(self.comm_beta[i, n, m], self.seg_beta[m, i, j]))
 
 
+class GraphFactory:
+    """b-independent precomputation for MSP graph assembly.
+
+    Everything that does not depend on the micro-batch size b — cumulative
+    segment workloads delta^F/delta^B over every (i, j] range, per-sample
+    memory footprints, per-cut activation/gradient byte volumes, link-rate
+    reciprocals, and the node constant vectors — is computed once here.
+    ``graph(b)`` then assembles an :class:`MSPGraph` with pure broadcasting:
+
+        seg_cost(b) = eff(b) * kappa * delta^F / f + t0
+                    + max(0, eff(b) - b_th) * kappa * delta^B / f + t1
+        comm_cost(b) = eff(b) * phi_i / r_{nm} + eff(b) * phi'_i / r_{mn}
+
+    where ``eff(b)`` is b for servers and the Eq. (1) max client share for
+    the virtual client node.  Building a factory is O(N I^2); each
+    ``graph(b)`` is a few fused array ops, so Algorithm 2's BCD iterations
+    and the b-sweep of ``exhaustive_joint`` stop paying a per-b rebuild.
+    """
+
+    def __init__(self, profile: ModelProfile, net: EdgeNetwork,
+                 memory_model: str = "paper"):
+        self.profile, self.net, self.memory_model = profile, net, memory_model
+        I = profile.num_layers
+        N = len(net.nodes)
+        self.I, self.N = I, N
+        I1 = I + 1
+
+        # node constant vectors
+        self.f = np.array([n.f for n in net.nodes])
+        self.kappa = np.array([n.kappa for n in net.nodes])
+        self.t0 = np.array([n.t0 for n in net.nodes])
+        self.t1 = np.array([n.t1 for n in net.nodes])
+        self.b_th = np.array([float(n.b_th) for n in net.nodes])
+        self.mem = np.array([n.mem for n in net.nodes])
+
+        # per-sample segment workloads over every (i, j] range, (I1, I1)
+        def seg_table(per_layer: np.ndarray) -> np.ndarray:
+            c = np.concatenate([[0.0], np.cumsum(per_layer)])
+            return c[None, :] - c[:, None]          # [i, j] = cum[j] - cum[i]
+
+        self.W_fp = seg_table(profile.fp_work)
+        self.W_bp = seg_table(profile.bp_work)
+        # Eq. (11) per-sample footprints: paper model scales everything by b;
+        # refined model scales only activations/grads (static part separate)
+        self.Mem_ps = seg_table(profile.act_bytes + profile.grad_bytes +
+                                profile.param_bytes + profile.opt_bytes)
+        self.Mem_act = seg_table(profile.act_bytes + profile.grad_bytes)
+        self.Mem_static = seg_table(profile.param_bytes + profile.opt_bytes)
+        # valid segment ranges: [i, j] with j > i
+        self.tri = np.arange(I1)[None, :] > np.arange(I1)[:, None]
+
+        # per-sample byte volumes per cut i (1-based; row 0 unused -> inf comm)
+        self.fb1 = np.concatenate([[0.0], profile.act_bytes])   # phi_i
+        self.gb1 = np.concatenate([[0.0], profile.grad_bytes])  # phi'_i
+
+        self.rate = net.rate                                    # (N, N)
+        self.rate_T = net.rate.T
+
+    # -- assembly -----------------------------------------------------------
+    def effective_batch(self, b: int) -> np.ndarray:
+        """Per-node effective micro-batch: Eq. (1) max share on the client
+        tier (node 0), b everywhere else."""
+        eff = np.full(self.N, float(b))
+        eff[0] = float(client_max_share(b, self.net.num_clients))
+        return eff
+
+    def graph(self, b: int) -> MSPGraph:
+        """Assemble the dense MSPGraph for micro-batch size b (broadcast-only)."""
+        I1 = self.I + 1
+        eff = self.effective_batch(b)
+
+        # segments: (N, I1, I1) over [n, i, j]
+        e = eff[:, None, None]
+        fp = (e * self.kappa[:, None, None]) * self.W_fp[None] \
+            / self.f[:, None, None] + self.t0[:, None, None]
+        bp_w = (np.maximum(e - self.b_th[:, None, None], 0.0)
+                * self.kappa[:, None, None]) * self.W_bp[None]
+        bp = np.where(bp_w == 0.0, self.t1[:, None, None],
+                      bp_w / self.f[:, None, None] + self.t1[:, None, None])
+        if self.memory_model == "paper":
+            mem_ok = e * self.Mem_ps[None] <= self.mem[:, None, None]
+        else:
+            mem_ok = (e * self.Mem_act[None] + self.Mem_static[None]
+                      <= self.mem[:, None, None])
+        ok = self.tri[None] & mem_ok
+        seg_cost = np.where(ok, fp + bp, np.inf)
+        seg_beta = np.where(ok, np.maximum(fp, bp), np.inf)
+
+        # comms: (I1, N, N) over [i, n, m]
+        fb = eff[None, :] * self.fb1[:, None]       # (I1, N) bytes fwd at cut i
+        gb = eff[None, :] * self.gb1[:, None]       # (I1, N) bytes bwd at cut i
+        with np.errstate(divide="ignore", invalid="ignore"):
+            tf = np.where(fb[:, :, None] == 0.0, 0.0,
+                          np.where(self.rate[None] > 0,
+                                   fb[:, :, None] / self.rate[None], np.inf))
+            tb = np.where(gb[:, :, None] == 0.0, 0.0,
+                          np.where(self.rate_T[None] > 0,
+                                   gb[:, :, None] / self.rate_T[None], np.inf))
+        comm_cost = tf + tb
+        comm_beta = np.maximum(tf, tb)
+        comm_cost[0] = np.inf                       # no cut before layer 1
+        comm_beta[0] = np.inf
+        idx = np.arange(self.N)
+        comm_cost[:, idx, idx] = np.inf             # no self-transfer
+        comm_beta[:, idx, idx] = np.inf
+
+        return MSPGraph(profile=self.profile, net=self.net, b=b,
+                        seg_cost=seg_cost, seg_beta=seg_beta,
+                        comm_cost=comm_cost, comm_beta=comm_beta,
+                        src_cost=seg_cost[0, 0, :].copy(),
+                        src_beta=seg_beta[0, 0, :].copy())
+
+
 def build_graph(profile: ModelProfile, net: EdgeNetwork, b: int,
                 memory_model: str = "paper") -> MSPGraph:
-    I = profile.num_layers
-    N = len(net.nodes)
-    seg_cost = np.full((N, I + 1, I + 1), np.inf)
-    seg_beta = np.full((N, I + 1, I + 1), np.inf)
-    for n in range(N):
-        node = net.nodes[n]
-        for i in range(I):            # segment (i, j]
-            for j in range(i + 1, I + 1):
-                fp = fp_latency(profile, net, i, j, n, b)
-                bp = bp_latency(profile, net, i, j, n, b)
-                mem = memory_bytes(profile, net, i, j, n, b, memory_model)
-                if mem > node.mem:
-                    continue          # per-vertex memory infeasibility (C7/C8)
-                seg_cost[n, i, j] = fp + bp
-                seg_beta[n, i, j] = max(fp, bp)
+    """One-shot graph build (delegates to :class:`GraphFactory`).
 
-    comm_cost = np.full((I + 1, N, N), np.inf)
-    comm_beta = np.full((I + 1, N, N), np.inf)
-    for i in range(1, I + 1):         # cut after layer i (1-based)
-        for n in range(N):
-            fb = fwd_bytes(profile, net, i, b, from_client=(n == 0))
-            gb = bwd_bytes(profile, net, i, b, to_client=(n == 0))
-            for m in range(N):
-                if m == n:
-                    continue
-                tf = comm_latency(net, n, m, fb)
-                tb = comm_latency(net, m, n, gb)
-                comm_cost[i, n, m] = tf + tb
-                comm_beta[i, n, m] = max(tf, tb)
-
-    src_cost = seg_cost[0, 0, :].copy()   # client segment (0, i]
-    src_beta = seg_beta[0, 0, :].copy()
-    return MSPGraph(profile=profile, net=net, b=b,
-                    seg_cost=seg_cost, seg_beta=seg_beta,
-                    comm_cost=comm_cost, comm_beta=comm_beta,
-                    src_cost=src_cost, src_beta=src_beta)
+    Callers that need graphs for many micro-batch sizes (BCD iterations,
+    exhaustive b-sweeps) should hold a ``GraphFactory`` — or a
+    ``shortest_path.Planner`` — and amortize the precomputation."""
+    return GraphFactory(profile, net, memory_model).graph(b)
 
 
 def graph_stats(g: MSPGraph) -> dict:

@@ -23,7 +23,7 @@ from .bcd import Plan, bcd_solve
 from .network import (TPU_HBM_BYTES, TPU_ICI_BW, TPU_PEAK_FLOPS, EdgeNetwork,
                       tpu_stage_network)
 from .profiles import ModelProfile
-from .shortest_path import solve_msp
+from .shortest_path import Planner
 from .microbatch import optimal_microbatch
 from . import latency as L
 
@@ -59,9 +59,10 @@ def _solve_fixed_stages(profile: ModelProfile, net: EdgeNetwork, B: int,
     b = max(1, min(b0, B))
     prev_L = math.inf
     plan = None
+    planner = Planner(profile, net, mm)      # shared across BCD iterations
     for _ in range(8):                       # BCD with ordered placement
-        msp = solve_msp(profile, net, b, B, K=num_stages,
-                        restrict_placement=placement, memory_model=mm)
+        msp = planner.solve(b, B, K=num_stages,
+                            restrict_placement=placement)
         if not msp.feasible:
             if b > 1:
                 b = max(1, b // 2)

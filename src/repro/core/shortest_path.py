@@ -2,25 +2,44 @@
 
 The MSP objective (P4) is  min over paths of  T_f(path) + xi(b) * T_1(path)
 with T_1 = the path's bottleneck (max edge beta) — a combined min-sum +
-min-max problem (Minoux 1989).  Exact strategy:
+min-max problem (Minoux 1989).  Exact strategy: dist(t) — the min-sum value
+restricted to edges with beta <= t — is a non-increasing step function that
+only changes at the distinct bottleneck values B = {beta(e)}, and
 
-  1. collect the sorted distinct bottleneck values  B = {beta(e)}
-  2. for each candidate threshold t in B (ascending), restrict the graph to
-     edges with beta <= t and run a shortest-path sweep on the layered DAG;
-     objective(t) = dist(t) + xi * t
-  3. answer = min over t.   dist(t) only changes at values of B, so scanning
-     B is exhaustive; two admissible prunings keep the scan short:
-       - binary-search the smallest feasible t (feasibility monotone in t)
-       - break once  dist(full graph) + xi * t >= best   (the paper's
-         lower-bound pruning l_b + xi*w(e) > L_t^*, with l_b the min-sum
-         lower bound; ours is the combinatorial bound from the unrestricted
-         graph — admissible without an LP solver, see DESIGN.md §6)
+    OPT  =  min over t in B of  dist(t) + xi * t
 
-The sweep itself is a vectorized DP over the layered DAG (the graph of
-msp_graph.py is acyclic in (k, i)), i.e. the role Dijkstra plays in the
-paper.  Restrictions (fixed cuts / fixed placement / ordered TPU stages) are
+(attained at t = the bottleneck of an optimal path).  Two solvers share one
+layered-DP kernel and return bit-identical results:
+
+``solver="scan"`` (the reference implementation, legacy control flow):
+  1. binary-search the smallest feasible t (feasibility monotone in t)
+  2. scan B ascending, one kernel sweep per threshold, objective
+     dist(t) + xi * beta(path_t); break once dist(inf) + xi * t >= best
+     (the paper's admissible lower-bound pruning, DESIGN.md §6)
+
+``solver="batched"`` (the default; ISSUE 3 tentpole):
+  1. one sweep at t = inf  ->  dist(inf) and the unrestricted path
+  2. one *min-max* sweep   ->  beta* = the smallest feasible threshold
+     (replaces the binary search: the same kernel with (max, min) algebra)
+  3. the admissible window [beta*, (UB - dist(inf)) / xi] of thresholds is
+     stacked as a leading axis and ONE masked broadcast min-plus sweep
+     returns dist(t) for every candidate simultaneously
+  4. argmin over dist(t) + xi * t, one reconstruction sweep at the winner
+
+The kernel itself is a *two-stage* relaxation per DAG layer — first the
+communication hop over (n, i, m), then the segment extension over (i, m, j)
+— which is O(N^2 I + N I^2) per layer instead of the O(N^2 I^2) dense edge
+tensor, and accepts a leading "slice" axis of independent (threshold,
+micro-batch) instances.  Because both solvers call the same kernel with the
+same float arithmetic and the same argmin tie-breaking, ``batched`` and
+``scan`` agree bit-for-bit on (objective, cuts, placement, T_1) — asserted
+by the standing randomized cross-check in tests/test_msp.py.
+
+Restrictions (fixed cuts / fixed placement / ordered TPU stages) are
 expressed as per-segment masks so the same solver powers the RC+OP / RP+OC
-baselines and the TPU stage planner.
+baselines and the TPU stage planner.  ``Planner`` caches the b-independent
+``GraphFactory`` precomputation and the DP buffers so BCD iterations and
+the b-sweep of ``exhaustive_joint`` (``Planner.solve_many``) reuse them.
 """
 
 from __future__ import annotations
@@ -34,9 +53,14 @@ import numpy as np
 
 from . import latency as L
 from .latency import SplitSolution
-from .msp_graph import MSPGraph, build_graph
+from .msp_graph import GraphFactory, MSPGraph, build_graph
 from .network import EdgeNetwork
 from .profiles import ModelProfile
+
+#: default Algorithm-1 solver; "scan" is the legacy reference implementation
+DEFAULT_SOLVER = "batched"
+
+_INF = np.inf
 
 
 @dataclasses.dataclass
@@ -49,135 +73,452 @@ class MSPResult:
     T_i_true: float         # true Eq. (13) interval (with co-location sums)
     b: int
     B: int
-    thresholds_scanned: int = 0
+    thresholds_scanned: int = 0   # total DP kernel sweeps (see note below)
     feasible: bool = True
+    solver: str = ""
+
+    # ``thresholds_scanned`` counts *every* DP sweep the solve performed —
+    # the full-graph run, binary-search probes, per-threshold scan sweeps,
+    # min-max sweeps and reconstructions alike; a batched multi-threshold
+    # kernel invocation counts as 1 (ISSUE 3: the old accounting omitted
+    # the binary search and the full-graph run, understating planner work).
+
+
+# ---------------------------------------------------------------------------
+# The shared layered-DP kernel
+# ---------------------------------------------------------------------------
+
+class _SweepResult:
+    __slots__ = ("best_val", "best_k", "best_m", "parents")
+
+    def __init__(self, best_val, best_k, best_m, parents):
+        self.best_val, self.best_k, self.best_m = best_val, best_k, best_m
+        self.parents = parents
+
+
+def _ws_get(ws: dict, name: str, shape: tuple, dtype) -> np.ndarray:
+    """Workspace buffer, reused across layers and across sweep calls."""
+    a = ws.get(name)
+    if a is None or a.shape != shape or a.dtype != dtype:
+        a = np.empty(shape, dtype=dtype)
+        ws[name] = a
+    return a
+
+
+def _sweep(Ccom, Bcom, Sseg, Bseg, src_cost, src_beta, K, ts, *,
+           mode="sum", masks=None, want_parents=False, ws=None):
+    """Threshold-batched layered-DP sweep over the (k, n, i) DAG.
+
+    Tensor layouts (a leading slice axis of size 1 broadcasts, size S runs
+    S independent instances — thresholds and/or per-b graphs):
+
+      Ccom/Bcom[s, n, i, m]  comm cost / bottleneck crossing cut i, n -> m
+                             (structurally inf for m == n and m == 0)
+      Sseg/Bseg[s, i, m, j]  segment (i, j] on node m
+      src_cost/src_beta[s, i]  client segment (0, i] (inf where disallowed)
+
+    ``mode="sum"`` relaxes with (+, min) — shortest path among edges with
+    beta <= ts[s].  ``mode="max"`` relaxes with (max, min) — the minimal
+    achievable path bottleneck (min-max), used to find beta* in one sweep.
+
+    Per layer the relaxation is two-stage:  A[s, i, m] = min over n of
+    dist[s, n, i] (+|max) Ccom[s, n, i, m],  then  dist'[s, m, j] = min over
+    i of A[s, i, m] (+|max) Sseg[s, i, m, j].  Ties break to the smallest n
+    and then the smallest i (np.argmin takes the first minimum), identically
+    for every slice count — which is what makes scan == batched exact.
+    """
+    ts = np.asarray(ts, dtype=float)
+    S = ts.shape[0]
+    N, I1 = Ccom.shape[1], Ccom.shape[2]
+    I = I1 - 1
+    ws = {} if ws is None else ws
+    src_val = src_cost if mode == "sum" else src_beta
+
+    dist = np.full((S, N, I1), _INF)
+    dist[:, 0, :] = np.where(src_beta <= ts[:, None], src_val, _INF)
+
+    fin0 = np.isfinite(dist[:, 0, I])
+    best_val = np.where(fin0, dist[:, 0, I], _INF)
+    best_k = np.where(fin0, 1, 0)
+    best_m = np.zeros(S, dtype=np.int64)
+    parents = []
+
+    # the threshold mask is layer-independent: fold beta > t edges to inf
+    # ONCE per sweep instead of re-masking per layer (the per-layer work then
+    # reduces to one broadcast op and one reduction per stage)
+    Vc = Ccom if mode == "sum" else Bcom
+    Vs = Sseg if mode == "sum" else Bseg
+    if np.isfinite(ts).any():
+        t4 = ts[:, None, None, None]
+        Vc = np.where(Bcom <= t4, Vc, _INF)
+        Vs = np.where(Bseg <= t4, Vs, _INF)
+    op = np.add if mode == "sum" else np.maximum
+
+    for k in range(2, K + 1):
+        mc, msk = masks(k) if masks is not None else (None, None)
+        # stage 1: communication hop (n, i) -> node m across cut i
+        cand_c = _ws_get(ws, "cand_c", (S, N, I1, N), np.float64)
+        op(dist[:, :, :, None], Vc, out=cand_c)
+        if mc is not None:
+            cand_c[:, ~mc] = _INF
+        if want_parents:
+            Ap = cand_c.argmin(axis=1).astype(np.int32)
+            A = np.take_along_axis(cand_c, Ap[:, None], axis=1)[:, 0]
+        else:
+            A = cand_c.min(axis=1)                   # (S, I1, N)
+        # stage 2: extend with segment (i, j] on node m
+        cand_s = _ws_get(ws, "cand_s", (S, I1, N, I1), np.float64)
+        op(A[:, :, :, None], Vs, out=cand_s)
+        if msk is not None:
+            cand_s[:, ~msk] = _INF
+        if want_parents:
+            Sp = cand_s.argmin(axis=1).astype(np.int32)
+            nd = np.take_along_axis(cand_s, Sp[:, None], axis=1)[:, 0]
+            parents.append((Ap, Sp))
+        else:
+            nd = cand_s.min(axis=1)                  # (S, N, I1)
+        dist = nd
+        if N > 1:
+            term = nd[:, 1:, I]
+            v = term.min(axis=1)
+            upd = v < best_val
+            if upd.any():
+                best_val = np.where(upd, v, best_val)
+                best_k = np.where(upd, k, best_k)
+                best_m = np.where(upd, term.argmin(axis=1) + 1, best_m)
+        if not np.isfinite(nd).any():
+            break
+    return _SweepResult(best_val, best_k, best_m, parents)
+
+
+def _slices_per_chunk(N: int, I1: int) -> int:
+    """Cap the kernel's slice axis so one chunk's workspace stays ~64 MB."""
+    return max(1, int(2 ** 23 // max(1, N * I1 * max(N, I1))))
+
+
+def _walk_parents(parents, s: int, k: int, m: int, j: int) -> list:
+    """Reconstruct the [(node, end_layer), ...] path for slice ``s``."""
+    if k == 1:
+        return [(0, j)]
+    path = [(int(m), int(j))]
+    for kk in range(k, 1, -1):
+        Ap, Sp = parents[kk - 2]
+        i = int(Sp[s, m, j])
+        n = int(Ap[s, i, m])
+        path.append((n, i))
+        m, j = n, i
+    path.reverse()
+    return path
+
+
+def _betas_from_arrays(Bcom, Bseg, src_beta, lo=-_INF, hi=_INF,
+                       mask_c=None, mask_s=None) -> list:
+    """Finite candidate bottleneck values max(Bcom, Bseg) within [lo, hi].
+
+    The distinct edge-beta set is materialized transiently (chunked over the
+    source-node axis so no O(N^2 I^2) tensor persists)."""
+    vals = [src_beta[(src_beta >= lo) & (src_beta <= hi)
+                     & np.isfinite(src_beta)]]
+    N = Bcom.shape[0]
+    chunk = max(1, int(2 ** 22 // max(1, Bseg.size)))
+    for n0 in range(0, N, chunk):
+        dense = np.maximum(Bcom[n0:n0 + chunk, :, :, None], Bseg[None])
+        if mask_c is not None:
+            dense = np.where(mask_c[n0:n0 + chunk, :, :, None], dense, _INF)
+        if mask_s is not None:
+            dense = np.where(mask_s[None], dense, _INF)
+        sel = dense[(dense >= lo) & (dense <= hi) & np.isfinite(dense)]
+        vals.append(sel)
+    return vals
 
 
 class _LayeredDP:
-    """Vectorized shortest-path sweep over the (k, n, i) layered DAG."""
+    """Rebindable two-stage DP over one MSPGraph (see ``_sweep``).
+
+    Structural masks (servers only for k >= 2, n' != n per Eq. 21, the
+    restrict_cuts / restrict_placement selections) and workspace buffers are
+    built once; ``rebind`` swaps in a new micro-batch's cost tensors without
+    reallocating them (ISSUE 3: reuse across BCD iterations and b-sweeps).
+    """
 
     def __init__(self, g: MSPGraph, K: int,
                  restrict_cuts: Sequence[int] | None = None,
                  restrict_placement: Sequence[int] | None = None):
-        self.g = g
         self.K = K
-        self.N, self.I = g.N, g.I
-        # Dense edge arrays over (n, i, m, j):
-        #   cost[n, i, m, j] = comm_cost[i, n, m] + seg_cost[m, i, j]
-        #   beta[n, i, m, j] = max(comm_beta[i, n, m], seg_beta[m, i, j])
-        I1 = self.I + 1
-        cost = np.empty((self.N, I1, self.N, I1))
-        beta = np.empty((self.N, I1, self.N, I1))
-        cc, cb = g.comm_cost, g.comm_beta   # (I1, N, N) indexed [i, n, m]
-        sc, sb = g.seg_cost, g.seg_beta     # (N, I1, I1) indexed [m, i, j]
-        for n in range(self.N):
-            for m in range(self.N):
-                # cost[n, i, m, j] = cc[i, n, m] + sc[m, i, j]
-                cost[n, :, m, :] = cc[:, n, m][:, None] + sc[m, :, :]
-                beta[n, :, m, :] = np.maximum(cb[:, n, m][:, None], sb[m, :, :])
-        self.cost_e, self.beta_e = cost, beta
         self.restrict_cuts = tuple(restrict_cuts) if restrict_cuts else None
         self.restrict_placement = (tuple(restrict_placement)
                                    if restrict_placement else None)
+        self._mask_cache: dict = {}
+        self._ws: dict = {}
+        self.rebind(g)
 
-    # -- masks ---------------------------------------------------------------
-    def _src_allowed(self) -> np.ndarray:
-        ok = np.isfinite(self.g.src_cost)
+    @property
+    def restricted(self) -> bool:
+        return (self.restrict_cuts is not None or
+                self.restrict_placement is not None)
+
+    def rebind(self, g: MSPGraph) -> "_LayeredDP":
+        self.g = g
+        self.N, self.I = g.N, g.I
+        idx = np.arange(self.N)
+        # comm-stage tensors over (n, i, m); destinations must be servers
+        Ccom = np.ascontiguousarray(g.comm_cost.transpose(1, 0, 2))
+        Bcom = np.ascontiguousarray(g.comm_beta.transpose(1, 0, 2))
+        Ccom[:, :, 0] = _INF
+        Bcom[:, :, 0] = _INF
+        Ccom[idx, :, idx] = _INF                     # n' != n (Eq. 21)
+        Bcom[idx, :, idx] = _INF
+        # seg-stage tensors over (i, m, j)
+        Sseg = np.ascontiguousarray(g.seg_cost.transpose(1, 0, 2))
+        Bseg = np.ascontiguousarray(g.seg_beta.transpose(1, 0, 2))
+        src_ok = np.isfinite(g.src_cost)
         if self.restrict_cuts is not None:
-            sel = np.zeros_like(ok)
+            sel = np.zeros_like(src_ok)
             sel[self.restrict_cuts[0]] = True
-            ok &= sel
-        return ok
+            src_ok = src_ok & sel
+        self._Ccom, self._Bcom = Ccom[None], Bcom[None]
+        self._Sseg, self._Bseg = Sseg[None], Bseg[None]
+        self._src_cost = np.where(src_ok, g.src_cost, _INF)[None]
+        self._src_beta = np.where(src_ok, g.src_beta, _INF)[None]
+        self._dense_beta = None          # legacy dense edge betas, on demand
+        return self
 
-    def _edge_allowed(self, k: int) -> np.ndarray:
-        """Mask over (n, i, m, j) for the transition into segment k (2-based)."""
-        ok = np.isfinite(self.cost_e)
-        ok[:, :, 0, :] = False                       # servers only for k >= 2
-        for n in range(self.N):
-            ok[n, :, n, :] = False                   # n' != n (Eq. 21)
+    # -- restriction masks ---------------------------------------------------
+    def _masks(self, k: int):
+        """(comm mask over (n,i,m), seg mask over (i,m,j)) for layer k."""
+        got = self._mask_cache.get(k)
+        if got is not None:
+            return got
+        I1, N = self.I + 1, self.N
+        mc = ms = None
         if self.restrict_cuts is not None:
-            sel = np.zeros_like(ok)
             prev, cur = self.restrict_cuts[k - 2], self.restrict_cuts[k - 1]
-            sel[:, prev, :, cur] = True
-            ok &= sel
+            mc = np.zeros((N, I1, N), dtype=bool)
+            mc[:, prev, :] = True
+            ms = np.zeros((I1, N, I1), dtype=bool)
+            ms[prev, :, cur] = True
         if self.restrict_placement is not None:
-            sel = np.zeros_like(ok)
-            prev_n = self.restrict_placement[k - 2]
-            cur_n = self.restrict_placement[k - 1]
-            sel[prev_n, :, cur_n, :] = True
-            ok &= sel
-        return ok
+            pn = self.restrict_placement[k - 2]
+            cn = self.restrict_placement[k - 1]
+            mc2 = np.zeros((N, I1, N), dtype=bool)
+            mc2[pn, :, cn] = True
+            mc = mc2 if mc is None else (mc & mc2)
+            ms2 = np.zeros((I1, N, I1), dtype=bool)
+            ms2[:, cn, :] = True
+            ms = ms2 if ms is None else (ms & ms2)
+        self._mask_cache[k] = (mc, ms)
+        return mc, ms
 
-    # -- the sweep -----------------------------------------------------------
+    # -- sweeps --------------------------------------------------------------
+    def sweep(self, ts, *, mode="sum", want_parents=False) -> _SweepResult:
+        return _sweep(self._Ccom, self._Bcom, self._Sseg, self._Bseg,
+                      self._src_cost, self._src_beta, self.K,
+                      np.atleast_1d(np.asarray(ts, dtype=float)),
+                      mode=mode, masks=self._masks if self.restricted else None,
+                      want_parents=want_parents, ws=self._ws)
+
     def run(self, t: float):
         """Shortest path with all edge betas <= t. Returns (dist, path)."""
-        g = self.g
-        INF = np.inf
-        src_ok = self._src_allowed() & (g.src_beta <= t)
-        dist = np.full((self.N, self.I + 1), INF)
-        dist[0, :] = np.where(src_ok, g.src_cost, INF)
+        out = self.sweep([t], want_parents=True)
+        if out.best_k[0] == 0:
+            return math.inf, None
+        path = _walk_parents(out.parents, 0, int(out.best_k[0]),
+                             int(out.best_m[0]), self.I)
+        return float(out.best_val[0]), path
+
+    def run_dense(self, t: float):
+        """Legacy reference sweep: materializes the dense (i, n, m, j) edge
+        tensor per layer per threshold — the pre-ISSUE-3 Algorithm-1 inner
+        loop that ``solver="scan"`` keeps as the cross-validation baseline.
+
+        Bit-identical to :meth:`run`: the edge weight is grouped as
+        ``(dist + comm) + seg`` and the argmin flattens (i, n)-major, which
+        reproduces the two-stage kernel's float rounding and tie-breaking
+        exactly (addition of a shared addend preserves float ordering)."""
+        N, I = self.N, self.I
+        I1 = I + 1
+        Ccom_inm = self._Ccom[0].transpose(1, 0, 2)      # (I1, N, N)
+        Sseg = self._Sseg[0]                             # (I1, N, I1)
+        if self._dense_beta is None:
+            self._dense_beta = np.maximum(
+                self._Bcom[0].transpose(1, 0, 2)[:, :, :, None],
+                self._Bseg[0][:, None, :, :])
+        dist = np.full((N, I1), _INF)
+        dist[0, :] = np.where(self._src_beta[0] <= t, self._src_cost[0], _INF)
+        best_val, best_state = _INF, None
+        if np.isfinite(dist[0, I]):
+            best_val, best_state = float(dist[0, I]), (1, 0, I)
         parents = []
-        best_val, best_state = INF, None
-        if np.isfinite(dist[0, self.I]):             # client-only path
-            best_val, best_state = float(dist[0, self.I]), (1, 0, self.I)
-        dists = [dist]
         for k in range(2, self.K + 1):
-            ok = self._edge_allowed(k) & (self.beta_e <= t)
-            cand = np.where(ok, dists[-1][:, :, None, None] + self.cost_e, INF)
-            flat = cand.reshape(-1, self.N, self.I + 1)
+            tmp = dist.T[:, :, None] + Ccom_inm          # (I1, N, N) [i,n,m]
+            cand = tmp[:, :, :, None] + Sseg[:, None, :, :]   # (I1,N,N,I1)
+            ok = self._dense_beta <= t
+            if self.restricted:
+                mc, msk = self._masks(k)
+                if mc is not None:
+                    ok = ok & mc.transpose(1, 0, 2)[:, :, :, None]
+                if msk is not None:
+                    ok = ok & msk[:, None, :, :]
+            cand = np.where(ok, cand, _INF)
+            flat = cand.reshape(I1 * N, N, I1)
             nd = flat.min(axis=0)
-            parent = flat.argmin(axis=0)             # encodes (n, i)
-            parents.append(parent)
-            dists.append(nd)
-            v = nd[1:, self.I].min() if self.N > 1 else INF
-            if v < best_val:
-                m = 1 + int(nd[1:, self.I].argmin())
-                best_val, best_state = float(v), (k, m, self.I)
+            parents.append(flat.argmin(axis=0))          # encodes i * N + n
+            dist = nd
+            if N > 1:
+                v = nd[1:, I].min()
+                if v < best_val:
+                    best_val = float(v)
+                    best_state = (k, 1 + int(nd[1:, I].argmin()), I)
             if not np.isfinite(nd).any():
                 break
         if best_state is None:
             return math.inf, None
-        # reconstruct
-        k, n, i = best_state
-        path = [(n, i)]
+        k, m, j = best_state
+        path = [(m, j)]
         while k >= 2:
-            p = parents[k - 2][n, i]
-            pn, pi = divmod(int(p), self.I + 1)
-            path.append((pn, pi))
-            n, i, k = pn, pi, k - 1
+            p = int(parents[k - 2][m, j])
+            i, n = divmod(p, N)
+            path.append((n, i))
+            m, j, k = n, i, k - 1
         path.reverse()
         return best_val, path
 
-    def all_betas(self) -> np.ndarray:
-        vals = [self.g.src_beta[np.isfinite(self.g.src_beta)]]
-        ok = self._edge_allowed(2)  # structural mask (k-independent when free)
-        if self.restrict_cuts is None and self.restrict_placement is None:
-            vals.append(self.beta_e[ok & np.isfinite(self.beta_e)])
+    def dist_at(self, ts, backend: str = "numpy") -> np.ndarray:
+        """dist(t) for every threshold in ``ts`` — one batched sweep
+        (slice-chunked so the workspace stays memory-bounded on instances
+        with weak pruning)."""
+        ts = np.atleast_1d(np.asarray(ts, dtype=float))
+        if backend == "jax":
+            return _dist_at_jax(self, ts)
+        per = _slices_per_chunk(self.N, self.I + 1)
+        if len(ts) <= per:
+            return self.sweep(ts).best_val
+        out = np.empty(len(ts))
+        for c0 in range(0, len(ts), per):
+            out[c0:c0 + per] = self.sweep(ts[c0:c0 + per]).best_val
+        return out
+
+    def min_bottleneck(self) -> float:
+        """beta* = min over feasible paths of the path bottleneck, via one
+        (max, min) sweep — replaces the legacy feasibility binary search."""
+        out = self.sweep([_INF], mode="max")
+        return float(out.best_val[0])
+
+    # -- candidate thresholds ------------------------------------------------
+    def betas_window(self, lo: float, hi: float) -> np.ndarray:
+        """Sorted distinct candidate bottleneck values within [lo, hi]."""
+        Bcom, Bseg = self._Bcom[0], self._Bseg[0]
+        src_beta = self._src_beta[0]
+        if not self.restricted:
+            vals = _betas_from_arrays(Bcom, Bseg, src_beta, lo, hi)
         else:
+            vals = [src_beta[(src_beta >= lo) & (src_beta <= hi)
+                             & np.isfinite(src_beta)]]
             for k in range(2, self.K + 1):
-                okk = self._edge_allowed(k)
-                vals.append(self.beta_e[okk & np.isfinite(self.beta_e)])
-        v = np.concatenate([np.atleast_1d(x) for x in vals])
-        return np.unique(np.round(v, 12))
+                mc, msk = self._masks(k)
+                vals += _betas_from_arrays(Bcom, Bseg, src_beta, lo, hi,
+                                           mask_c=mc, mask_s=msk)[1:]
+        if not vals:
+            return np.empty(0)
+        return np.unique(np.concatenate([np.atleast_1d(v) for v in vals]))
+
+    def all_betas(self) -> np.ndarray:
+        return self.betas_window(-_INF, _INF)
 
 
-def solve_msp(profile: ModelProfile, net: EdgeNetwork, b: int, B: int,
-              K: int | None = None, memory_model: str = "paper",
-              restrict_cuts: Sequence[int] | None = None,
-              restrict_placement: Sequence[int] | None = None) -> MSPResult:
-    """Algorithm 1.  Returns the optimal (x, y) for fixed micro-batch b."""
-    if K is None:
-        K = min(1 + net.num_servers, profile.num_layers)
-    g = build_graph(profile, net, b, memory_model)
-    dp = _LayeredDP(g, K, restrict_cuts, restrict_placement)
-    xi = L.num_fills(B, b)
+# ---------------------------------------------------------------------------
+# Optional jax backend (jit + vmap over thresholds) for the batched sweep
+# ---------------------------------------------------------------------------
 
-    def finish(dist, path, t_scanned):
+def _dist_at_jax(dp: _LayeredDP, ts: np.ndarray) -> np.ndarray:
+    """dist(t) per threshold via jax (jit + vmap).  Numerically equivalent to
+    the numpy kernel (bit-exact under JAX_ENABLE_X64; float32 otherwise — use
+    the numpy backend where the scan/batched equality contract matters)."""
+    import jax
+    import jax.numpy as jnp
+
+    if dp.restricted:                 # masks are numpy-side; keep it simple
+        return dp.sweep(ts).best_val
+    Ccom = jnp.asarray(dp._Ccom[0])
+    Bcom = jnp.asarray(dp._Bcom[0])
+    Sseg = jnp.asarray(dp._Sseg[0])
+    Bseg = jnp.asarray(dp._Bseg[0])
+    src_cost = jnp.asarray(dp._src_cost[0])
+    src_beta = jnp.asarray(dp._src_beta[0])
+    K, I, N = dp.K, dp.I, dp.N
+    inf = jnp.inf
+
+    def one(t):
+        dist = jnp.full((N, I + 1), inf)
+        dist = dist.at[0, :].set(jnp.where(src_beta <= t, src_cost, inf))
+        best = jnp.where(jnp.isfinite(dist[0, I]), dist[0, I], inf)
+        for _ in range(2, K + 1):
+            cand_c = jnp.where(Bcom <= t, dist[:, :, None] + Ccom, inf)
+            A = cand_c.min(axis=0)
+            cand_s = jnp.where(Bseg <= t, A[:, :, None] + Sseg, inf)
+            dist = cand_s.min(axis=0)
+            if N > 1:
+                best = jnp.minimum(best, dist[1:, I].min())
+        return best
+
+    return np.asarray(jax.jit(jax.vmap(one))(jnp.asarray(ts)))
+
+
+# ---------------------------------------------------------------------------
+# The reusable planner: factory + DP caches + both solver strategies
+# ---------------------------------------------------------------------------
+
+class Planner:
+    """Reusable Algorithm-1 engine for one (profile, network, memory model).
+
+    Holds the :class:`~repro.core.msp_graph.GraphFactory` (b-independent
+    precomputation) plus per-restriction DP buffers, so repeated solves —
+    BCD iterations, baseline restarts, the exhaustive b-sweep — share all
+    structural work.  ``solve`` is one Algorithm-1 call; ``solve_many``
+    batches a whole micro-batch sweep through the same kernel.
+    """
+
+    def __init__(self, profile: ModelProfile, net: EdgeNetwork,
+                 memory_model: str = "paper"):
+        self.profile, self.net = profile, net
+        self.memory_model = memory_model
+        self.factory = GraphFactory(profile, net, memory_model)
+        self._graphs: dict = {}
+        self._dps: dict = {}
+
+    # -- caches -------------------------------------------------------------
+    def graph(self, b: int) -> MSPGraph:
+        g = self._graphs.get(b)
+        if g is None:
+            g = self.factory.graph(b)
+            self._graphs[b] = g
+        return g
+
+    def _dp(self, b: int, K: int, rc, rp) -> _LayeredDP:
+        key = (K, rc, rp)
+        g = self.graph(b)
+        dp = self._dps.get(key)
+        if dp is None:
+            dp = _LayeredDP(g, K, rc, rp)
+            self._dps[key] = dp
+        elif dp.g is not g:
+            dp.rebind(g)
+        return dp
+
+    def default_K(self, K: int | None) -> int:
+        if K is not None:
+            return K
+        return min(1 + self.net.num_servers, self.profile.num_layers)
+
+    # -- result assembly ----------------------------------------------------
+    def _finish(self, g: MSPGraph, dist, path, b, B, xi, sweeps, solver):
+        profile, net = self.profile, self.net
         if path is None:
             return MSPResult(solution=SplitSolution((profile.num_layers,), (0,)),
                              objective=math.inf, T_f=math.inf, T_1=math.inf,
                              L_t=math.inf, T_i_true=math.inf, b=b, B=B,
-                             thresholds_scanned=t_scanned, feasible=False)
+                             thresholds_scanned=sweeps, feasible=False,
+                             solver=solver)
         sol = SplitSolution(cuts=tuple(i for _, i in path),
                             placement=tuple(n for n, _ in path))
         T_f = L.fill_latency(profile, net, sol, b)
@@ -185,46 +526,260 @@ def solve_msp(profile: ModelProfile, net: EdgeNetwork, b: int, B: int,
         beta_path = _path_bottleneck(g, path)
         return MSPResult(solution=sol, objective=dist + xi * beta_path,
                          T_f=T_f, T_1=beta_path, L_t=T_f + xi * T_i,
-                         T_i_true=T_i, b=b, B=B, thresholds_scanned=t_scanned)
+                         T_i_true=T_i, b=b, B=B, thresholds_scanned=sweeps,
+                         solver=solver)
 
-    if xi == 0:                                # no pipelining: pure min-sum
-        dist, path = dp.run(math.inf)
-        return finish(dist, path, 1)
+    # -- solvers ------------------------------------------------------------
+    def solve(self, b: int, B: int, K: int | None = None,
+              restrict_cuts: Sequence[int] | None = None,
+              restrict_placement: Sequence[int] | None = None,
+              solver: str | None = None, backend: str = "numpy") -> MSPResult:
+        solver = solver or DEFAULT_SOLVER
+        K = self.default_K(K)
+        rc = tuple(restrict_cuts) if restrict_cuts else None
+        rp = tuple(restrict_placement) if restrict_placement else None
+        dp = self._dp(b, K, rc, rp)
+        g = self.graph(b)
+        xi = L.num_fills(B, b)
+        if solver == "scan":
+            return self._solve_scan(dp, g, b, B, xi)
+        if solver == "batched":
+            return self._solve_batched(dp, g, b, B, xi, backend)
+        raise ValueError(f"unknown solver {solver!r} (want 'scan'|'batched')")
 
-    betas = dp.all_betas()
-    if betas.size == 0:
-        return finish(math.inf, None, 0)
-    dist_full, path_full = dp.run(math.inf)
-    if path_full is None:
-        return finish(math.inf, None, 1)
+    def _solve_scan(self, dp: _LayeredDP, g: MSPGraph, b, B, xi) -> MSPResult:
+        """Legacy Algorithm 1: binary search + ascending pruned scan, one
+        dense-tensor DP sweep per probed threshold (``_LayeredDP.run_dense``).
+        Kept as the reference implementation and benchmark baseline."""
+        sweeps = 0
 
-    # binary search the smallest feasible threshold (feasibility monotone in t)
-    lo, hi = 0, len(betas) - 1
-    while lo < hi:
-        mid = (lo + hi) // 2
-        d, _ = dp.run(betas[mid])
-        if math.isfinite(d):
-            hi = mid
+        def run(t):
+            nonlocal sweeps
+            sweeps += 1
+            return dp.run_dense(t)
+
+        if xi == 0:                            # no pipelining: pure min-sum
+            dist, path = run(math.inf)
+            return self._finish(g, dist, path, b, B, xi, sweeps, "scan")
+
+        betas = dp.all_betas()
+        if betas.size == 0:
+            return self._finish(g, math.inf, None, b, B, xi, sweeps, "scan")
+        dist_full, path_full = run(math.inf)
+        if path_full is None:
+            return self._finish(g, math.inf, None, b, B, xi, sweeps, "scan")
+
+        # binary search the smallest feasible threshold (monotone in t)
+        lo, hi = 0, len(betas) - 1
+        while lo < hi:
+            mid = (lo + hi) // 2
+            d, _ = run(betas[mid])
+            if math.isfinite(d):
+                hi = mid
+            else:
+                lo = mid + 1
+
+        best, best_pair = math.inf, None
+        for idx in range(lo, len(betas)):
+            t = float(betas[idx])
+            if dist_full + xi * t >= best:      # admissible prune -> break
+                break
+            d, p = run(t)
+            if p is None:
+                continue
+            beta_p = _path_bottleneck(g, p)     # actual path bottleneck <= t
+            obj = d + xi * beta_p
+            if obj < best:
+                best, best_pair = obj, (d, p)
+        if best_pair is None:
+            return self._finish(g, math.inf, None, b, B, xi, sweeps, "scan")
+        return self._finish(g, best_pair[0], best_pair[1], b, B, xi, sweeps,
+                            "scan")
+
+    def _solve_batched(self, dp: _LayeredDP, g: MSPGraph, b, B, xi,
+                       backend="numpy") -> MSPResult:
+        """Threshold-batched Algorithm 1 (see module docstring)."""
+        dist_full, path_full = dp.run(math.inf)
+        sweeps = 1
+        if xi == 0:
+            return self._finish(g, dist_full, path_full, b, B, xi, sweeps,
+                                "batched")
+        if path_full is None:
+            return self._finish(g, math.inf, None, b, B, xi, sweeps, "batched")
+
+        beta_star = dp.min_bottleneck()        # smallest feasible threshold
+        sweeps += 1
+        d_star, p_star = dp.run(beta_star)
+        sweeps += 1
+        ub = min(dist_full + xi * _path_bottleneck(g, path_full),
+                 d_star + xi * _path_bottleneck(g, p_star))
+        cap = (ub - dist_full) / xi            # prune: dist_full + xi*t >= ub
+        window = dp.betas_window(beta_star, cap * (1 + 1e-12) + 1e-12)
+        if window.size == 0:                   # numerical corner: fall back
+            window = np.array([beta_star])
+        dvals = dp.dist_at(window, backend=backend)
+        sweeps += 1
+        j = int(np.argmin(dvals + xi * window))   # first minimum: smallest t
+        t_hat = float(window[j])
+        if t_hat == beta_star:
+            d_hat, p_hat = d_star, p_star
         else:
-            lo = mid + 1
+            d_hat, p_hat = dp.run(t_hat)
+            sweeps += 1
+        return self._finish(g, d_hat, p_hat, b, B, xi, sweeps, "batched")
 
-    best, best_pair = math.inf, None
-    scanned = 0
-    for idx in range(lo, len(betas)):
-        t = float(betas[idx])
-        if dist_full + xi * t >= best:        # admissible prune -> break
-            break
-        d, p = dp.run(t)
-        scanned += 1
-        if p is None:
-            continue
-        beta_p = _path_bottleneck(g, p)       # actual path bottleneck <= t
-        obj = d + xi * beta_p
-        if obj < best:
-            best, best_pair = obj, (d, p)
-    if best_pair is None:
-        return finish(math.inf, None, scanned)
-    return finish(best_pair[0], best_pair[1], scanned)
+    # -- batched micro-batch sweep (exhaustive_joint's inner loop) ----------
+    def solve_many(self, bs: Sequence[int], B: int,
+                   K: int | None = None) -> list:
+        """Algorithm 1 for every micro-batch size in ``bs`` at once.
+
+        The b-axis rides the same kernel slice axis as the thresholds: the
+        full-graph runs, the min-max beta* sweeps, the beta* probes, the
+        stacked threshold windows and the reconstructions each execute as
+        ONE multi-slice sweep across all b.  Results are bit-identical to
+        ``[self.solve(b, B, K, solver="batched") for b in bs]`` (asserted in
+        tests/test_msp.py)."""
+        K = self.default_K(K)
+        bs = list(bs)
+        S = len(bs)
+        N, I = len(self.net.nodes), self.profile.num_layers
+        I1 = I + 1
+        idx = np.arange(N)
+
+        Ccom = np.empty((S, N, I1, N))
+        Bcom = np.empty((S, N, I1, N))
+        Sseg = np.empty((S, I1, N, I1))
+        Bseg = np.empty((S, I1, N, I1))
+        src_cost = np.empty((S, I1))
+        src_beta = np.empty((S, I1))
+        graphs = []
+        for s, b in enumerate(bs):
+            g = self.graph(b)
+            graphs.append(g)
+            Ccom[s] = g.comm_cost.transpose(1, 0, 2)
+            Bcom[s] = g.comm_beta.transpose(1, 0, 2)
+            Sseg[s] = g.seg_cost.transpose(1, 0, 2)
+            Bseg[s] = g.seg_beta.transpose(1, 0, 2)
+            src_cost[s] = g.src_cost
+            src_beta[s] = g.src_beta
+        Ccom[:, :, :, 0] = _INF
+        Bcom[:, :, :, 0] = _INF
+        Ccom[:, idx, :, idx] = _INF
+        Bcom[:, idx, :, idx] = _INF
+
+        xi = np.array([L.num_fills(B, b) for b in bs])
+        inf_ts = np.full(S, _INF)
+
+        def stacked(sel, ts, **kw):
+            """Sweep the selected slices (gathered tensors) at thresholds ts."""
+            sel = np.asarray(sel)
+            return _sweep(Ccom[sel], Bcom[sel], Sseg[sel], Bseg[sel],
+                          src_cost[sel], src_beta[sel], K,
+                          np.asarray(ts, dtype=float), **kw)
+
+        # phase A: full-graph runs for every b (one stacked sweep)
+        outA = _sweep(Ccom, Bcom, Sseg, Bseg, src_cost, src_beta, K, inf_ts,
+                      want_parents=True)
+        paths_full = [
+            _walk_parents(outA.parents, s, int(outA.best_k[s]),
+                          int(outA.best_m[s]), I) if outA.best_k[s] else None
+            for s in range(S)]
+
+        results: list = [None] * S
+        live = []                               # slices still being solved
+        for s in range(S):
+            if xi[s] == 0 or paths_full[s] is None:
+                results[s] = self._finish(
+                    graphs[s], float(outA.best_val[s]), paths_full[s],
+                    bs[s], B, int(xi[s]), 1, "batched")
+            else:
+                live.append(s)
+        if not live:
+            return results
+
+        # phase B: one (max, min) sweep -> beta* per live b, then one stacked
+        # probe at beta* (parents -> the upper-bound path per b)
+        outB = stacked(live, [_INF] * len(live), mode="max")
+        beta_star = outB.best_val
+        outP = stacked(live, beta_star, want_parents=True)
+        paths_star, windows = [], []
+        for q, s in enumerate(live):
+            p_star = _walk_parents(outP.parents, q, int(outP.best_k[q]),
+                                   int(outP.best_m[q]), I)
+            paths_star.append(p_star)
+            ub = min(float(outA.best_val[s])
+                     + xi[s] * _path_bottleneck(graphs[s], paths_full[s]),
+                     float(outP.best_val[q])
+                     + xi[s] * _path_bottleneck(graphs[s], p_star))
+            cap = (ub - float(outA.best_val[s])) / xi[s]
+            w = _betas_from_arrays(Bcom[s], Bseg[s], src_beta[s],
+                                   beta_star[q], cap * (1 + 1e-12) + 1e-12)
+            w = np.unique(np.concatenate([np.atleast_1d(v) for v in w]))
+            if w.size == 0:
+                w = np.array([beta_star[q]])
+            windows.append(w)
+
+        # phase C: ONE stacked sweep over every (b, threshold) pair (chunked
+        # so the slice axis stays memory-bounded), then argmin per b
+        slice_b = np.concatenate(
+            [np.full(len(w), s) for s, w in zip(live, windows)])
+        slice_t = np.concatenate(windows)
+        t_hat = np.empty(len(live))
+        per_slice = _slices_per_chunk(N, I1)
+        dvals = np.empty(len(slice_t))
+        for c0 in range(0, len(slice_t), per_slice):
+            c1 = min(c0 + per_slice, len(slice_t))
+            dvals[c0:c1] = stacked(slice_b[c0:c1], slice_t[c0:c1]).best_val
+        pos = 0
+        for q, w in enumerate(windows):
+            H = dvals[pos:pos + len(w)] + xi[live[q]] * w
+            t_hat[q] = w[int(np.argmin(H))]
+            pos += len(w)
+
+        # phase D: one stacked reconstruction sweep at the winners; slices
+        # whose winner IS beta* reuse the phase-B probe path instead (same
+        # kernel, same threshold), exactly like the per-b solve — which also
+        # keeps the 4-vs-5 sweep accounting identical to solve()
+        need = [q for q in range(len(live)) if t_hat[q] != beta_star[q]]
+        if need:
+            outR = stacked([live[q] for q in need], t_hat[need],
+                           want_parents=True)
+        for r, q in enumerate(need):
+            s = live[q]
+            if outR.best_k[r] == 0:
+                path = None
+            else:
+                path = _walk_parents(outR.parents, r, int(outR.best_k[r]),
+                                     int(outR.best_m[r]), I)
+            results[s] = self._finish(graphs[s], float(outR.best_val[r]),
+                                      path, bs[s], B, int(xi[s]), 5, "batched")
+        for q, s in enumerate(live):
+            if results[s] is None:                  # t_hat == beta*
+                results[s] = self._finish(graphs[s], float(outP.best_val[q]),
+                                          paths_star[q], bs[s], B,
+                                          int(xi[s]), 4, "batched")
+        return results
+
+
+def solve_msp(profile: ModelProfile, net: EdgeNetwork, b: int, B: int,
+              K: int | None = None, memory_model: str = "paper",
+              restrict_cuts: Sequence[int] | None = None,
+              restrict_placement: Sequence[int] | None = None,
+              solver: str | None = None,
+              planner: Planner | None = None) -> MSPResult:
+    """Algorithm 1.  Returns the optimal (x, y) for fixed micro-batch b.
+
+    ``solver``: "batched" (default) or "scan" (the legacy reference — same
+    results, more sweeps).  Pass a :class:`Planner` to amortize the graph
+    factory and DP buffers across calls (it must have been built for the
+    same memory model)."""
+    if planner is not None and planner.memory_model != memory_model:
+        raise ValueError(
+            f"planner was built with memory_model={planner.memory_model!r} "
+            f"but solve_msp was called with {memory_model!r}")
+    pl = planner if planner is not None else Planner(profile, net, memory_model)
+    return pl.solve(b, B, K=K, restrict_cuts=restrict_cuts,
+                    restrict_placement=restrict_placement, solver=solver)
 
 
 def _path_bottleneck(g: MSPGraph, path: list) -> float:

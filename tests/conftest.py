@@ -26,3 +26,13 @@ def small_instance(seed: int, num_layers: int = 6, num_servers: int = 3,
     net = make_edge_network(num_servers=num_servers,
                             num_clients=num_clients, seed=seed)
     return prof, net
+
+
+def same_msp_result(r1, r2):
+    """The scan == batched contract: bit-identical searched result."""
+    if r1.feasible != r2.feasible:
+        return False
+    if not r1.feasible:
+        return True
+    return (r1.objective == r2.objective and r1.solution == r2.solution
+            and r1.T_1 == r2.T_1 and r1.T_f == r2.T_f and r1.b == r2.b)

@@ -8,11 +8,11 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep: skip module, not error
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (brute_force_msp, build_graph, graph_stats,
+from repro.core import (Planner, brute_force_msp, build_graph, graph_stats,
                         make_edge_network, random_profile, solve_msp,
                         total_latency, validate_solution)
 from repro.core.shortest_path import path_cost, _path_bottleneck
-from conftest import small_instance
+from conftest import same_msp_result as _same_result, small_instance
 
 
 @settings(max_examples=25, deadline=None)
@@ -107,6 +107,59 @@ def test_graph_stats_reports_paper_scale(vgg_profile, paper_network):
     s = graph_stats(g)
     assert s["paper_vertices"] > 0
     assert s["paper_edges_upper"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 3: threshold-batched solver — standing randomized cross-check
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 400), b=st.sampled_from([1, 4, 8, 16, 64]),
+       B=st.sampled_from([32, 64]),
+       mem_scale=st.sampled_from([1.0, 1.0, 1e-3, 1e-9]),
+       restrict=st.sampled_from(["free", "cuts", "placement"]))
+def test_batched_equals_scan_equals_brute_force(seed, b, B, mem_scale, restrict):
+    """solver='batched' returns bit-identical (objective, cuts, placement,
+    T_1) results to the legacy solver='scan', and both match brute force —
+    across free/restricted solves, memory-tight (infeasible / client-only)
+    instances and micro-batch sizes (incl. b >= B, i.e. xi = 0)."""
+    rng = np.random.default_rng(seed)
+    prof = random_profile(rng, 5)
+    net = make_edge_network(
+        num_servers=3, num_clients=2, seed=seed,
+        mem_range=(mem_scale * 2 * 2**30, mem_scale * 16 * 2**30),
+        client_mem=4 * 2**30)   # roomy client: tight servers -> client-only
+    kw = {"K": 3}
+    if restrict == "cuts":
+        cuts = tuple(sorted(rng.choice(np.arange(1, 5), 2, replace=False)))
+        kw["restrict_cuts"] = cuts + (5,)
+    elif restrict == "placement":
+        kw["restrict_placement"] = (0,) + tuple(
+            int(x) for x in rng.permutation(list(net.server_indices()))[:2])
+    b = min(b, B)
+    r_scan = solve_msp(prof, net, b, B, solver="scan", **kw)
+    r_bat = solve_msp(prof, net, b, B, solver="batched", **kw)
+    assert _same_result(r_scan, r_bat), (r_scan, r_bat)
+    if restrict == "free":
+        bf, _ = brute_force_msp(prof, net, b, B, K=3, objective="paper")
+        if r_scan.feasible:
+            assert r_scan.objective == pytest.approx(bf, rel=1e-9)
+        else:
+            assert bf == math.inf
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 60))
+def test_solve_many_matches_per_b_solve(seed):
+    """Planner.solve_many (the stacked b-sweep under exhaustive_joint) is
+    bit-identical to independent per-b batched solves."""
+    prof, net = small_instance(seed, num_layers=5, num_servers=3)
+    pl = Planner(prof, net)
+    B = 32
+    bs = list(range(1, B + 1, 3))
+    for b, many in zip(bs, pl.solve_many(bs, B)):
+        solo = pl.solve(b, B, solver="batched")
+        assert _same_result(many, solo), (b, many, solo)
 
 
 @settings(max_examples=10, deadline=None)
