@@ -8,7 +8,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify verify-ci verify-docs test dev-deps sim-check bench \
-        bench-planner bench-fig6b bench-sweep example-sim
+        bench-planner bench-costmodel bench-fig6b bench-sweep example-sim
 
 verify:
 	$(PYTHON) -m pytest -x -q
@@ -21,7 +21,8 @@ verify-ci: verify
 DOCTEST_MODULES := \
   src/repro/sim/engine.py src/repro/sim/events.py src/repro/sim/policies.py \
   src/repro/sim/scenario.py src/repro/sim/validate.py \
-  src/repro/core/bcd.py src/repro/core/microbatch.py \
+  src/repro/core/bcd.py src/repro/core/cost_model.py \
+  src/repro/core/microbatch.py \
   src/repro/pipeline/schedule.py
 
 # docs job: doctests over the documented APIs + the docs/*.md anchor/link
@@ -45,7 +46,12 @@ sim-check:
 bench-planner:
 	$(PYTHON) -m benchmarks.bench_planner
 
-bench: bench-planner bench-fig6b bench-sweep
+# closed-form vs sim-refined BCD on reentrant/memory-starved instances;
+# rewrites the repo-root BENCH_costmodel.json trajectory file
+bench-costmodel:
+	$(PYTHON) -m benchmarks.bench_costmodel
+
+bench: bench-planner bench-costmodel bench-fig6b bench-sweep
 
 bench-fig6b:
 	$(PYTHON) -m benchmarks.fig6b_traces

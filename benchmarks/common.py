@@ -45,3 +45,14 @@ class Timer:
 
     def __exit__(self, *a):
         self.seconds = time.perf_counter() - self.t0
+
+
+def sim_exec(prof, net, plan, B) -> float:
+    """Measured makespan of a plan under memory-budgeted admission — the
+    execution metric shared by fig7 and bench_costmodel.  Delegates to
+    ``SimMakespan.evaluate``, which guards budget feasibility (returns inf
+    instead of letting ``simulate_plan`` raise on unschedulable plans)."""
+    from repro.core import SimMakespan
+    if not plan.feasible or plan.b <= 0:
+        return float("inf")
+    return SimMakespan().evaluate(prof, net, plan.solution, plan.b, B)

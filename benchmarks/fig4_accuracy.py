@@ -35,8 +35,9 @@ def run(rounds: int = 10, batch: int = 32, iid: bool = True):
     eval_batch = {k: jnp.asarray(v) for k, v in next(data).items()}
     accs = [ex.evaluate(eval_batch)]
     for _ in range(rounds):
+        # lr/momentum retuned for the He-gain VGG init (models/vgg.py)
         ex.train_round({k: jnp.asarray(v) for k, v in next(data).items()},
-                       lr=0.04)
+                       lr=0.02, momentum=0.9)
         accs.append(ex.evaluate(eval_batch))
     rows = []
     for name, plan in plans.items():

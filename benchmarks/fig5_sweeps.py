@@ -1,5 +1,11 @@
 """Fig. 5: total latency vs (a) #servers, (b) bandwidth, (c) compute,
-(d) memory — for ours / RC+OP / RP+OC / no-pipeline."""
+(d) memory — for ours / RC+OP / RP+OC / no-pipeline.
+
+Every scheme accepts ``cost_model=`` (ISSUE 4): pass
+``repro.core.SimMakespan()`` to ``run(cost_model=...)`` to score each
+scheme's internal selection by the measured makespan instead of Eq. (14)
+— the sim-refined "ours" then rides the same sweep as a comparable curve
+(it is also reported standalone in fig7/bench_costmodel)."""
 
 from __future__ import annotations
 
@@ -11,21 +17,23 @@ SCHEMES = {"ours": ours, "rc_op": rc_op, "rp_oc": rp_oc,
            "no_pipeline": no_pipeline}
 
 
-def _latencies(net, prof, solver=None):
+def _latencies(net, prof, solver=None, cost_model=None):
     out = {}
     for name, fn in SCHEMES.items():
         kw = {"seed": 7} if name in ("rc_op", "rp_oc") else {}
-        out[name] = fn(prof, net, B=B, solver=solver, **kw).L_t
+        out[name] = fn(prof, net, B=B, solver=solver, cost_model=cost_model,
+                       **kw).L_t
     return out
 
 
-def run(seeds=(0, 1)):
+def run(seeds=(0, 1), cost_model=None):
     prof = paper_profile()
     rows = []
     # (a) servers 2..10
     for n in (2, 4, 6, 8, 10):
         for s in seeds:
-            la = _latencies(paper_network(num_servers=n, seed=s), prof)
+            la = _latencies(paper_network(num_servers=n, seed=s), prof,
+                            cost_model=cost_model)
             rows += [["servers", n, s, k, round(v, 4)]
                      for k, v in la.items()]
     # (b) bandwidth 10..200 MHz
@@ -33,7 +41,7 @@ def run(seeds=(0, 1)):
         for s in seeds:
             net = paper_network(num_servers=6, seed=s,
                                 bw_range_hz=(bw, bw * 1.2))
-            la = _latencies(net, prof)
+            la = _latencies(net, prof, cost_model=cost_model)
             rows += [["bandwidth_mhz", bw / 1e6, s, k, round(v, 4)]
                      for k, v in la.items()]
     # (c) compute 2e10..12e10 cycles/s (paper's Fig. 5(c) axis)
@@ -41,7 +49,7 @@ def run(seeds=(0, 1)):
         for s in seeds:
             net = paper_network(num_servers=6, seed=s,
                                 f_range=(f, f * 1.2))
-            la = _latencies(net, prof)
+            la = _latencies(net, prof, cost_model=cost_model)
             rows += [["compute_flops", f, s, k, round(v, 4)]
                      for k, v in la.items()]
     # (d) memory 2..16 GB
@@ -49,7 +57,7 @@ def run(seeds=(0, 1)):
         for s in seeds:
             net = paper_network(num_servers=6, seed=s,
                                 mem_range=(gb * 2**30, gb * 2**30))
-            la = _latencies(net, prof)
+            la = _latencies(net, prof, cost_model=cost_model)
             rows += [["memory_gb", gb, s, k, round(v, 4)]
                      for k, v in la.items()]
     emit("fig5_sweeps", rows, ["sweep", "value", "seed", "scheme",

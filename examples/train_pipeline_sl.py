@@ -53,7 +53,7 @@ def main():
         parts = [c.draw(int(s)) for c, s in zip(clients, shares)]
         batch = {k: jnp.asarray(np.concatenate([p[k] for p in parts]))
                  for k in parts[0]}
-        loss = ex.train_round(batch, lr=0.03)
+        loss = ex.train_round(batch, lr=0.02, momentum=0.9)
         if r == args.rounds // 2:
             # a server slows down mid-training: cheap Theorem-1 re-solve
             node = coord.plan.solution.placement[-1]

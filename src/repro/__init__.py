@@ -20,7 +20,8 @@ _SIM_EXPORTS = frozenset({
     "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
     "iid_piecewise", "NetworkScenario", "ReplanTrigger",
     "piecewise_cv_scenario", "gauss_markov_scenario",
-    "AdmissionPolicy", "FIFO", "OneFOneB", "resolve_policy",
+    "AdmissionPolicy", "FIFO", "OneFOneB", "MemoryBudgeted",
+    "resolve_policy",
     "activation_occupancy", "stage_activation_highwater",
     "PipelineSimulator", "SimReport", "build_tasks", "build_visit_table",
     "simulate_plan", "vectorizable",
@@ -29,7 +30,15 @@ _SIM_EXPORTS = frozenset({
     "random_chain_solution", "random_instance",
 })
 
-__all__ = sorted(_SUBMODULES | _SIM_EXPORTS)
+# the cost-model seam (ISSUE 4): mirrored from ``repro.core.cost_model``'s
+# ``__all__`` — the same sync contract as _SIM_EXPORTS, same test.
+_COST_MODEL_EXPORTS = frozenset({
+    "CostModel", "ClosedForm", "SimMakespan", "StageClaim",
+    "stage_memory_claims", "node_budget_windows", "budget_feasible",
+    "resolve_cost_model",
+})
+
+__all__ = sorted(_SUBMODULES | _SIM_EXPORTS | _COST_MODEL_EXPORTS)
 
 
 def __getattr__(name):
@@ -37,8 +46,12 @@ def __getattr__(name):
         return importlib.import_module(f"{__name__}.{name}")
     if name in _SIM_EXPORTS:
         return getattr(importlib.import_module(f"{__name__}.sim"), name)
+    if name in _COST_MODEL_EXPORTS:
+        return getattr(importlib.import_module(f"{__name__}.core.cost_model"),
+                       name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(set(globals()) | _SUBMODULES | _SIM_EXPORTS)
+    return sorted(set(globals()) | _SUBMODULES | _SIM_EXPORTS
+                  | _COST_MODEL_EXPORTS)

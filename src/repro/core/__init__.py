@@ -15,10 +15,14 @@ from .latency import (SplitSolution, validate_solution, fill_latency,
 from .msp_graph import GraphFactory, MSPGraph, build_graph, graph_stats
 from .shortest_path import (DEFAULT_SOLVER, MSPResult, Planner, solve_msp,
                             brute_force_msp, enumerate_solutions)
+from .cost_model import (CostModel, ClosedForm, SimMakespan, StageClaim,
+                         stage_memory_claims, node_budget_windows,
+                         budget_feasible, resolve_cost_model)
 from .microbatch import (MicrobatchResult, optimal_microbatch,
                          exhaustive_microbatch, feasibility_box)
 from .bcd import Plan, bcd_solve, exhaustive_joint
-from .baselines import rc_op, rp_oc, no_pipeline, ours, optimal, SCHEMES
+from .baselines import (rc_op, rp_oc, no_pipeline, ours, sim_refined,
+                        optimal, SCHEMES)
 from .fluctuation import FluctuationReport, evaluate_under_fluctuation
 from .planner import StagePlan, plan_stages, replan
 
@@ -32,9 +36,13 @@ __all__ = [
     "num_fills", "breakdown", "client_shares", "MSPGraph", "GraphFactory",
     "build_graph", "graph_stats", "MSPResult", "Planner", "DEFAULT_SOLVER",
     "solve_msp", "brute_force_msp",
-    "enumerate_solutions", "MicrobatchResult", "optimal_microbatch",
+    "enumerate_solutions", "CostModel", "ClosedForm", "SimMakespan",
+    "StageClaim", "stage_memory_claims", "node_budget_windows",
+    "budget_feasible", "resolve_cost_model", "MicrobatchResult",
+    "optimal_microbatch",
     "exhaustive_microbatch", "feasibility_box", "Plan", "bcd_solve",
-    "exhaustive_joint", "rc_op", "rp_oc", "no_pipeline", "ours", "optimal",
+    "exhaustive_joint", "rc_op", "rp_oc", "no_pipeline", "ours",
+    "sim_refined", "optimal",
     "SCHEMES", "FluctuationReport", "evaluate_under_fluctuation",
     "StagePlan", "plan_stages", "replan",
 ]

@@ -17,6 +17,7 @@ import numpy as np
 
 from . import latency as L
 from .bcd import Plan, bcd_solve, exhaustive_joint
+from .cost_model import SimMakespan, resolve_cost_model
 from .latency import SplitSolution
 from .microbatch import optimal_microbatch
 from .network import EdgeNetwork
@@ -24,14 +25,17 @@ from .profiles import ModelProfile
 from .shortest_path import Planner
 
 
-def _finish_plan(profile, net, sol, b, B) -> Plan:
+def _finish_plan(profile, net, sol, b, B, cm=None) -> Plan:
     T_f = L.fill_latency(profile, net, sol, b)
     T_i = L.pipeline_interval(profile, net, sol, b)
+    cm = resolve_cost_model(cm)
     return Plan(solution=sol, b=b, B=B, T_f=T_f, T_i=T_i,
                 L_t=T_f + L.num_fills(B, b) * T_i, iterations=1, history=[],
                 solve_seconds=0.0,
                 feasible=math.isfinite(T_f) and
-                L.memory_feasible(profile, net, sol, b))
+                L.memory_feasible(profile, net, sol, b),
+                objective=cm.evaluate(profile, net, sol, b, B),
+                cost_model=cm.name)
 
 
 def random_cuts(rng: np.random.Generator, I: int, K: int) -> tuple:
@@ -45,10 +49,13 @@ def random_cuts(rng: np.random.Generator, I: int, K: int) -> tuple:
 
 def rc_op(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
           b0: int = 20, K: int | None = None, tries: int = 4,
-          memory_model: str = "paper", solver: str | None = None) -> Plan:
+          memory_model: str = "paper", solver: str | None = None,
+          cost_model=None) -> Plan:
     """Random Cut + Optimal Placement (+ optimal micro-batch for the pipeline
-    comparison to be apples-to-apples, as in Fig. 4/5)."""
+    comparison to be apples-to-apples, as in Fig. 4/5).  ``cost_model``
+    scores the re-draws (default: closed-form Eq. 14)."""
     rng = np.random.default_rng(seed)
+    cm = resolve_cost_model(cost_model, memory_model)
     K = K or min(1 + net.num_servers, profile.num_layers)
     planner = Planner(profile, net, memory_model)  # shared across re-draws
     best = None
@@ -59,19 +66,21 @@ def rc_op(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
         if not msp.feasible:
             continue
         mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
-                                memory_model=memory_model)
+                                memory_model=memory_model, cost_model=cm)
         b = mb.b if mb.b > 0 else b0
-        plan = _finish_plan(profile, net, msp.solution, b, B)
-        if best is None or plan.L_t < best.L_t:
+        plan = _finish_plan(profile, net, msp.solution, b, B, cm)
+        if best is None or plan.objective < best.objective:
             best = plan
     return best if best is not None else _infeasible(profile, B)
 
 
 def rp_oc(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
           b0: int = 20, K: int | None = None, tries: int = 4,
-          memory_model: str = "paper", solver: str | None = None) -> Plan:
+          memory_model: str = "paper", solver: str | None = None,
+          cost_model=None) -> Plan:
     """Random Placement + Optimal Cut (+ optimal micro-batch)."""
     rng = np.random.default_rng(seed)
+    cm = resolve_cost_model(cost_model, memory_model)
     K = K or min(1 + net.num_servers, profile.num_layers)
     servers = list(net.server_indices())
     planner = Planner(profile, net, memory_model)  # shared across re-draws
@@ -85,20 +94,25 @@ def rp_oc(profile: ModelProfile, net: EdgeNetwork, B: int, *, seed: int = 0,
         if not msp.feasible:
             continue
         mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
-                                memory_model=memory_model)
+                                memory_model=memory_model, cost_model=cm)
         b = mb.b if mb.b > 0 else b0
-        plan = _finish_plan(profile, net, msp.solution, b, B)
-        if best is None or plan.L_t < best.L_t:
+        plan = _finish_plan(profile, net, msp.solution, b, B, cm)
+        if best is None or plan.objective < best.objective:
             best = plan
     return best if best is not None else _infeasible(profile, B)
 
 
 def no_pipeline(profile: ModelProfile, net: EdgeNetwork, B: int,
                 K: int | None = None, memory_model: str = "paper",
-                solver: str | None = None) -> Plan:
+                solver: str | None = None, cost_model=None) -> Plan:
     """Optimal MSP with b = B (xi = 0 -> pure min-sum Dijkstra).  'Due to the
     optimality, also the upper bound of existing split inference/learning
-    schemes without pipeline parallelism' (Sec. VI-A)."""
+    schemes without pipeline parallelism' (Sec. VI-A).  ``cost_model`` is
+    accepted for SCHEMES-interface uniformity; there is no pipeline to
+    re-score, so it only names the plan's ``cost_model`` — the scheme's
+    ``objective`` is its own sequential latency (== ``L_t``), keeping
+    min-by-objective comparisons across SCHEMES well-defined."""
+    cm = resolve_cost_model(cost_model, memory_model)
     planner = Planner(profile, net, memory_model)  # shared across fallbacks
     msp = planner.solve(B, B, K=K, solver=solver)
     if not msp.feasible:
@@ -112,45 +126,71 @@ def no_pipeline(profile: ModelProfile, net: EdgeNetwork, B: int,
                 T_f = L.fill_latency(profile, net, sol, max(b, 1))
                 return Plan(solution=sol, b=max(b, 1), B=B, T_f=T_f,
                             T_i=T_f, L_t=ticks * T_f, iterations=1,
-                            history=[], solve_seconds=0.0)
+                            history=[], solve_seconds=0.0,
+                            objective=ticks * T_f, cost_model=cm.name)
         return _infeasible(profile, B)
     sol = msp.solution
     T_f = L.fill_latency(profile, net, sol, B)
     return Plan(solution=sol, b=B, B=B, T_f=T_f, T_i=T_f, L_t=T_f,
-                iterations=1, history=[], solve_seconds=0.0)
+                iterations=1, history=[], solve_seconds=0.0,
+                objective=T_f, cost_model=cm.name)
 
 
 def ours(profile: ModelProfile, net: EdgeNetwork, B: int, *, b0: int = 20,
          theta: float = 0.01, K: int | None = None,
          memory_model: str = "paper", restarts: bool = True,
-         solver: str | None = None) -> Plan:
+         solver: str | None = None, cost_model=None) -> Plan:
     """Algorithm 2, with multi-start over b0 (beyond-paper robustness: BCD
     is a coordinate descent and can sit in a poor basin for one seed; three
     extra solves cost milliseconds and close most of the Fig. 7 gap).  One
-    ``Planner`` (graph factory + DP buffers) is shared by every restart."""
+    ``Planner`` (graph factory + DP buffers) is shared by every restart.
+    ``cost_model`` is forwarded to every ``bcd_solve`` and also decides the
+    winner across restarts."""
+    cm = resolve_cost_model(cost_model, memory_model)
     planner = Planner(profile, net, memory_model)
     plan = bcd_solve(profile, net, B, b0=b0, theta=theta, K=K,
-                     memory_model=memory_model, solver=solver, planner=planner)
+                     memory_model=memory_model, solver=solver,
+                     planner=planner, cost_model=cm)
     if not restarts:
         return plan
     for alt in {max(1, B // 16), max(1, B // 4), max(1, B // 2)} - {b0}:
         cand = bcd_solve(profile, net, B, b0=alt, theta=theta, K=K,
                          memory_model=memory_model, solver=solver,
-                         planner=planner)
-        if cand.feasible and (not plan.feasible or cand.L_t < plan.L_t):
+                         planner=planner, cost_model=cm)
+        if cand.feasible and (not plan.feasible
+                              or cand.objective < plan.objective):
             plan = cand
     return plan
 
 
+def sim_refined(profile: ModelProfile, net: EdgeNetwork, B: int, *,
+                b0: int = 20, theta: float = 0.01, K: int | None = None,
+                memory_model: str = "paper", restarts: bool = False,
+                solver: str | None = None, cost_model=None,
+                policy="memory", engine: str = "auto") -> Plan:
+    """Sim-in-the-loop BCD: Algorithm 2 whose iterate selection and final
+    micro-batch refinement optimize the *measured* makespan of
+    ``sim.simulate_plan`` under memory-budgeted admission (the default
+    ``SimMakespan(policy="memory")``) instead of the closed form.  Restarts
+    default off — each one pays an O(B)-simulation refinement scan."""
+    cm = cost_model or SimMakespan(policy=policy, engine=engine)
+    return ours(profile, net, B, b0=b0, theta=theta, K=K,
+                memory_model=memory_model, restarts=restarts, solver=solver,
+                cost_model=cm)
+
+
 def optimal(profile: ModelProfile, net: EdgeNetwork, B: int,
             K: int | None = None, b_step: int = 1,
-            memory_model: str = "paper", solver: str | None = None) -> Plan:
+            memory_model: str = "paper", solver: str | None = None,
+            cost_model=None) -> Plan:
     return exhaustive_joint(profile, net, B, K=K, b_step=b_step,
-                            memory_model=memory_model, solver=solver)
+                            memory_model=memory_model, solver=solver,
+                            cost_model=cost_model)
 
 
 SCHEMES = {
     "ours": ours,
+    "sim_refined": sim_refined,
     "rc_op": rc_op,
     "rp_oc": rp_oc,
     "no_pipeline": no_pipeline,
@@ -160,4 +200,5 @@ SCHEMES = {
 def _infeasible(profile: ModelProfile, B: int) -> Plan:
     return Plan(solution=SplitSolution((profile.num_layers,), (0,)), b=0, B=B,
                 T_f=math.inf, T_i=math.inf, L_t=math.inf, iterations=0,
-                history=[], solve_seconds=0.0, feasible=False)
+                history=[], solve_seconds=0.0, feasible=False,
+                objective=math.inf)

@@ -7,7 +7,13 @@
 
 Each block is solved optimally, so L_t is non-increasing across iterations
 (asserted in tests) and the loop converges in a few iterations (Fig. 7 shows
-the fixed point is near the joint optimum).
+the fixed point is near the joint optimum).  The objective — and the memory
+predicate behind the feasible-b box — is pluggable (``cost_model=``, see
+``repro.core.cost_model``): the default ``ClosedForm`` reproduces the
+Eq. (12)-(14) path bit-for-bit, while ``SimMakespan`` scores iterates and
+the final micro-batch refinement with the measured makespan of
+``sim.simulate_plan`` under (by default) memory-budgeted admission; the
+incumbent's objective stays non-increasing per model.
 
 The returned ``Plan`` is what the rest of the repo consumes: the simulator
 executes it (``repro.sim.simulate_plan``), the jax runtime maps it to stage
@@ -33,16 +39,24 @@ import math
 import time
 
 from . import latency as L
+from .cost_model import ClosedForm, resolve_cost_model
 from .latency import SplitSolution
 from .microbatch import optimal_microbatch
 from .network import EdgeNetwork
 from .profiles import ModelProfile
-from .shortest_path import DEFAULT_SOLVER, MSPResult, Planner, solve_msp
+from .shortest_path import DEFAULT_SOLVER, Planner, solve_msp
 
 
 @dataclasses.dataclass
 class Plan:
-    """A fully-specified pipelined-SL execution plan."""
+    """A fully-specified pipelined-SL execution plan.
+
+    ``L_t``/``T_f``/``T_i`` are always the closed-form Eqs. (12)-(14)
+    numbers so plans stay comparable across cost models; ``objective`` is
+    the solving cost model's own metric at the final plan (equal to ``L_t``
+    under the default ``ClosedForm``, the simulated makespan under
+    ``SimMakespan``), and ``cost_model`` names it.
+    """
     solution: SplitSolution
     b: int
     B: int
@@ -50,9 +64,11 @@ class Plan:
     T_i: float
     L_t: float
     iterations: int
-    history: list            # [(L_t, b, cuts, placement), ...] per iteration
+    history: list            # [(objective, b, cuts, placement)] per iteration
     solve_seconds: float
     feasible: bool = True
+    objective: float = math.nan
+    cost_model: str = "closed_form"
 
     @property
     def num_microbatches(self) -> int:
@@ -63,7 +79,7 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
               b0: int = 20, theta: float = 0.01, max_iters: int = 12,
               K: int | None = None, memory_model: str = "paper",
               refine_b: bool = True, solver: str | None = None,
-              planner: Planner | None = None) -> Plan:
+              planner: Planner | None = None, cost_model=None) -> Plan:
     """Algorithm 2.  ``theta`` is the convergence tolerance (Table II: 0.01).
 
     ``refine_b`` (beyond-paper, default on): Theorem 1 minimizes
@@ -72,9 +88,24 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
     systematically overshoots the micro-batch size (measured ~35% latency
     gap vs exhaustive on sub-second instances; see benchmarks/fig7).  The
     refinement replaces the final micro-batching step with an exact 1-D
-    scan of the TRUE Eq. (14) objective over b (O(B) cheap evaluations),
-    then re-runs Algorithm 1 once at the refined b.  Set False for the
-    paper-faithful variant (reported separately in Fig. 7).
+    scan of the TRUE objective over b (O(B) evaluations), then re-runs
+    Algorithm 1 once at the refined b.  Set False for the paper-faithful
+    variant (reported separately in Fig. 7).
+
+    ``cost_model`` selects what "the TRUE objective" means
+    (``repro.core.cost_model``): the default ``ClosedForm`` is bit-identical
+    to the historical hard-wired Eq. (14) path; ``SimMakespan`` scores every
+    iterate and the final refinement with the *measured* makespan of
+    ``sim.simulate_plan`` (which charges reentrant/co-location idle time and
+    respects memory-budgeted admission), and its memory predicate reshapes
+    the feasible-b box.  Candidate generation stays the paper's closed-form
+    alternation either way; the cost model decides which iterate is kept
+    (best-so-far, so ``history`` objectives are non-increasing under the
+    chosen metric) and how the final micro-batch size is refined.  A
+    non-ClosedForm model additionally warm-starts its incumbent from the
+    closed-form plan (same arguments, shared planner caches) scored under
+    the new metric — so the returned plan is never worse than the
+    closed-form plan under the model's own objective, by construction.
 
     ``solver`` selects the Algorithm-1 strategy ("batched" default, "scan"
     reference); a shared ``planner`` (graph factory + DP buffers) is created
@@ -82,6 +113,7 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
     amortize it further (e.g. across multi-start restarts).
     """
     t_start = time.perf_counter()
+    cm = resolve_cost_model(cost_model, memory_model)
     if planner is None:
         planner = Planner(profile, net, memory_model)
     elif planner.memory_model != memory_model:
@@ -90,8 +122,20 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
             f"but bcd_solve was called with {memory_model!r}")
     b = max(1, min(b0, B))
     history = []
-    prev_L = math.inf
-    best: MSPResult | None = None
+    prev_obj = math.inf
+    best: tuple | None = None           # (solution, b, objective) incumbent
+    if not isinstance(cm, ClosedForm):
+        # warm start: the closed-form plan, re-scored under this model —
+        # guarantees the result is never worse than the closed form's plan
+        # on the model's own metric, whatever the trajectories do
+        seed = bcd_solve(profile, net, B, b0=b0, theta=theta,
+                         max_iters=max_iters, K=K, memory_model=memory_model,
+                         refine_b=refine_b, solver=solver, planner=planner)
+        if seed.feasible and seed.b > 0:
+            best = (seed.solution, seed.b,
+                    cm.evaluate(profile, net, seed.solution, seed.b, B))
+            history.append((best[2], best[1], best[0].cuts,
+                            best[0].placement))
     iters = 0
     for tau in range(1, max_iters + 1):
         iters = tau
@@ -105,52 +149,79 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
                         b=0, B=B, T_f=math.inf, T_i=math.inf, L_t=math.inf,
                         iterations=tau, history=history,
                         solve_seconds=time.perf_counter() - t_start,
-                        feasible=False)
+                        feasible=False, objective=math.inf,
+                        cost_model=cm.name)
         mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
-                                memory_model=memory_model)
+                                memory_model=memory_model, cost_model=cm)
         if mb.b > 0:
             b = mb.b
-        L_t = L.total_latency(profile, net, msp.solution, b, B)
-        history.append((L_t, b, msp.solution.cuts, msp.solution.placement))
-        best = msp
+        obj = cm.evaluate(profile, net, msp.solution, b, B)
+        # keep the best iterate under the cost model (ties move forward, so
+        # the ClosedForm path tracks the paper's always-move alternation,
+        # whose objective is non-increasing anyway); under a measured metric
+        # a closed-form step may regress — the incumbent simply survives it
+        if best is None or obj <= best[2]:
+            best = (msp.solution, b, obj)
+        history.append((best[2], best[1], best[0].cuts, best[0].placement))
         # convergence: theta acts RELATIVE to the current latency scale
         # (Table II's theta=0.01 against ~100 s latencies; an absolute
         # 0.01 s would stop sub-second instances after one iteration)
-        if abs(prev_L - L_t) < theta * max(L_t, 1e-12):
+        # (the equality leg catches obj == prev_obj == inf, where the
+        # subtraction would yield NaN and never satisfy the tolerance)
+        if prev_obj == obj or abs(prev_obj - obj) < theta * max(obj, 1e-12):
             break
-        prev_L = L_t
-    sol = best.solution
+        prev_obj = obj
+    sol, b, obj = best
 
     if refine_b:
         from .microbatch import exhaustive_microbatch
-        b_ref, _ = exhaustive_microbatch(profile, net, sol, B, T_1=None,
-                                         memory_model=memory_model)
+        # candidate 1: exact 1-D scan of the cost-model objective over the
+        # model's feasible-b box, split fixed (the box feeds back here)
+        b_ref, val_ref = exhaustive_microbatch(profile, net, sol, B,
+                                               T_1=None,
+                                               memory_model=memory_model,
+                                               cost_model=cm)
         if b_ref > 0 and b_ref != b:
+            if val_ref < obj:
+                sol, b, obj = sol, b_ref, val_ref
+                history.append((obj, b, sol.cuts, sol.placement))
+            # candidate 2: re-run Algorithm 1 once at the refined b, then
+            # re-refine b on the (possibly new) split
             msp2 = planner.solve(b_ref, B, K=K, solver=solver)
-            if msp2.feasible:
+            if msp2.feasible and msp2.solution != sol:
                 cand_sol, cand_b = msp2.solution, b_ref
-                b_ref2, _ = exhaustive_microbatch(
+                b_ref2, val2 = exhaustive_microbatch(
                     profile, net, cand_sol, B, T_1=None,
-                    memory_model=memory_model)
+                    memory_model=memory_model, cost_model=cm)
                 if b_ref2 > 0:
-                    cand_b = b_ref2
-                if (L.total_latency(profile, net, cand_sol, cand_b, B)
-                        < L.total_latency(profile, net, sol, b, B)):
-                    sol, b = cand_sol, cand_b
-                    history.append((
-                        L.total_latency(profile, net, sol, b, B), b,
-                        sol.cuts, sol.placement))
+                    cand_b, cand_obj = b_ref2, val2
+                else:
+                    cand_obj = cm.evaluate(profile, net, cand_sol, cand_b, B)
+                if cand_obj < obj:
+                    sol, b, obj = cand_sol, cand_b, cand_obj
+                    history.append((obj, b, sol.cuts, sol.placement))
 
+    if math.isinf(obj):
+        # no iterate (nor the warm start) was feasible under the cost model
+        # — mirror exhaustive_joint: an inf-objective plan is not runnable
+        # (simulate_plan would refuse it), so don't report it feasible
+        return Plan(solution=SplitSolution((profile.num_layers,), (0,)),
+                    b=0, B=B, T_f=math.inf, T_i=math.inf, L_t=math.inf,
+                    iterations=iters, history=history,
+                    solve_seconds=time.perf_counter() - t_start,
+                    feasible=False, objective=math.inf, cost_model=cm.name)
     T_f = L.fill_latency(profile, net, sol, b)
     T_i = L.pipeline_interval(profile, net, sol, b)
     return Plan(solution=sol, b=b, B=B, T_f=T_f, T_i=T_i,
                 L_t=T_f + L.num_fills(B, b) * T_i, iterations=iters,
-                history=history, solve_seconds=time.perf_counter() - t_start)
+                history=history, solve_seconds=time.perf_counter() - t_start,
+                objective=obj, cost_model=cm.name)
 
 
 def exhaustive_joint(profile: ModelProfile, net: EdgeNetwork, B: int,
                      K: int | None = None, memory_model: str = "paper",
-                     b_step: int = 1, solver: str | None = None) -> Plan:
+                     b_step: int = 1, solver: str | None = None,
+                     cost_model=None) -> Plan:
     """Fig. 7's 'optimal scheme': exhaustive over b, Algorithm 1 per b.
 
     With ``solver="batched"`` (default) the whole b-sweep is dispatched as
@@ -158,8 +229,13 @@ def exhaustive_joint(profile: ModelProfile, net: EdgeNetwork, B: int,
     (``Planner.solve_many``): graphs assemble by broadcasting from one
     ``GraphFactory`` and all b ride the kernel's slice axis.  With
     ``solver="scan"`` each b pays the legacy per-b rebuild + threshold scan
-    — the reference the ISSUE-3 benchmark measures speedup against."""
+    — the reference the ISSUE-3 benchmark measures speedup against.
+
+    ``cost_model`` scores the per-b plans (default ``ClosedForm``: Eq. 14;
+    ``SimMakespan``: measured makespan — the exhaustive counterpart of the
+    sim-refined BCD)."""
     t_start = time.perf_counter()
+    cm = resolve_cost_model(cost_model, memory_model)
     solver = solver or DEFAULT_SOLVER
     bs = list(range(1, B + 1, b_step))
     if solver == "batched":
@@ -172,18 +248,20 @@ def exhaustive_joint(profile: ModelProfile, net: EdgeNetwork, B: int,
     for b, msp in zip(bs, msps):
         if not msp.feasible:
             continue
-        L_t = L.total_latency(profile, net, msp.solution, b, B)
-        if best_plan is None or L_t < best_plan.L_t:
+        obj = cm.evaluate(profile, net, msp.solution, b, B)
+        if best_plan is None or obj < best_plan.objective:
             best_plan = Plan(
                 solution=msp.solution, b=b, B=B,
                 T_f=L.fill_latency(profile, net, msp.solution, b),
                 T_i=L.pipeline_interval(profile, net, msp.solution, b),
-                L_t=L_t, iterations=1, history=[],
-                solve_seconds=0.0)
-    if best_plan is None:
+                L_t=L.total_latency(profile, net, msp.solution, b, B),
+                iterations=1, history=[],
+                solve_seconds=0.0, objective=obj, cost_model=cm.name)
+    if best_plan is None or math.isinf(best_plan.objective):
         return Plan(solution=SplitSolution((profile.num_layers,), (0,)),
                     b=0, B=B, T_f=math.inf, T_i=math.inf, L_t=math.inf,
                     iterations=0, history=[], feasible=False,
-                    solve_seconds=time.perf_counter() - t_start)
+                    solve_seconds=time.perf_counter() - t_start,
+                    objective=math.inf, cost_model=cm.name)
     return dataclasses.replace(best_plan,
                                solve_seconds=time.perf_counter() - t_start)

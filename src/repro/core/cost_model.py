@@ -1,0 +1,229 @@
+"""Cost models — the pluggable objective/feasibility seam of the planner.
+
+The paper's Algorithm 2 alternates Algorithm 1 (MSP) and Theorem 1
+(micro-batch size) against the idealized closed form of Eqs. (12)-(14),
+which ignores the reentrant/co-location idle time and activation-memory
+pressure the ``repro.sim`` engine actually measures.  A :class:`CostModel`
+makes that objective (and the memory-feasibility predicate behind the
+Eq. (24) box) a first-class, swappable component:
+
+* :class:`ClosedForm` — the default; bit-identical to the historical
+  hard-wired path (``latency.total_latency`` / ``latency.memory_feasible``).
+* :class:`SimMakespan` — wraps ``sim.simulate_plan`` with a configurable
+  admission policy (``repro.sim.policies``; the memory-budgeted policy by
+  default), so ``bcd_solve``'s final micro-batch refinement optimizes the
+  *measured* makespan instead of the closed form.
+
+The Eq. (11) memory arithmetic is factored into one claims source:
+``latency.memory_split`` -> :func:`stage_memory_claims` ->
+:func:`node_budget_windows`.  ``MemoryBudgeted.stage_capacity`` (admission
+windows), ``pipeline.schedule.memory_highwater`` (schedule claims) and
+``microbatch.feasibility_box`` (the feasible-b box, via
+:meth:`SimMakespan.memory_feasible`) all consume it — no duplicated
+arithmetic, which is what lets the tests cross-validate the three
+event-by-event against the engine's measured occupancy.
+
+>>> from repro.core import make_edge_network, uniform_profile, SplitSolution
+>>> prof = uniform_profile(6, fp=1.0, bp=2.0, act=1.0)
+>>> net = make_edge_network(num_servers=2, num_clients=2, seed=0)
+>>> sol = SplitSolution(cuts=(3, 6), placement=(0, 1))
+>>> cm = ClosedForm()
+>>> import repro.core.latency as L
+>>> bool(cm.evaluate(prof, net, sol, 4, 32)
+...      == L.total_latency(prof, net, sol, 4, 32))
+True
+>>> [c.position for c in stage_memory_claims(prof, net, sol, 4)]
+[0, 1]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import latency as L
+from .latency import SplitSolution, memory_split
+from .network import EdgeNetwork
+from .profiles import ModelProfile
+
+__all__ = ["CostModel", "ClosedForm", "SimMakespan", "StageClaim",
+           "stage_memory_claims", "node_budget_windows", "budget_feasible",
+           "resolve_cost_model"]
+
+
+# ---------------------------------------------------------------------------
+# The shared Eq. (11) claims source
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageClaim:
+    """Memory claim of one pipeline stage (chain position ``position``).
+
+    ``static_bytes`` is resident once (parameters + optimizer state);
+    ``act_bytes`` is the cost of ONE live micro-batch (activations +
+    act-gradients).  Holding ``w`` micro-batches live at this stage costs
+    ``static_bytes + w * act_bytes``.
+    """
+    position: int            # stage position j in the non-empty chain
+    submodel: int            # paper submodel index k
+    node: int                # hosting node index
+    static_bytes: float
+    act_bytes: float
+
+
+def stage_memory_claims(profile: ModelProfile, net: EdgeNetwork,
+                        sol: SplitSolution, b: int,
+                        memory_model: str = "refined") -> list:
+    """Per-stage :class:`StageClaim` list — Eq. (11) via
+    ``latency.memory_split``, the single claims source (see module doc)."""
+    claims = []
+    for j, (k, lo, hi, node) in enumerate(sol.segments()):
+        static, act = memory_split(profile, net, lo, hi, node, b,
+                                   memory_model)
+        claims.append(StageClaim(position=j, submodel=k, node=node,
+                                 static_bytes=static, act_bytes=act))
+    return claims
+
+
+def node_budget_windows(profile: ModelProfile, net: EdgeNetwork,
+                        sol: SplitSolution, b: int,
+                        memory_model: str = "refined") -> list:
+    """Per-stage admission windows derived from ``Node.mem``.
+
+    Co-located stages share their node's budget: for node ``n`` hosting
+    claims with totals ``static_n`` / ``act_n`` per live micro-batch, the
+    window is the largest ``w`` with ``static_n + w * act_n <= mem_n`` —
+    i.e. ``floor((mem_n - static_n) / act_n)``.  ``None`` means unbounded
+    (zero activation bytes); ``0`` means even a single live micro-batch
+    does not fit (the plan is memory-infeasible at this ``b``).
+    """
+    claims = stage_memory_claims(profile, net, sol, b, memory_model)
+    static_n: dict = {}
+    act_n: dict = {}
+    for c in claims:
+        static_n[c.node] = static_n.get(c.node, 0.0) + c.static_bytes
+        act_n[c.node] = act_n.get(c.node, 0.0) + c.act_bytes
+    windows = []
+    for c in claims:
+        free = net.nodes[c.node].mem - static_n[c.node]
+        act = act_n[c.node]
+        if act <= 0.0:
+            windows.append(None if free >= 0.0 else 0)
+        else:
+            windows.append(max(0, int(math.floor(free / act))))
+    return windows
+
+
+def budget_feasible(profile: ModelProfile, net: EdgeNetwork,
+                    sol: SplitSolution, b: int,
+                    memory_model: str = "refined") -> bool:
+    """Window >= 1 everywhere: one live micro-batch per stage fits every
+    node's memory — the memory predicate behind the memory-budgeted
+    feasible-b box (monotone non-increasing in ``b``)."""
+    return all(w is None or w >= 1
+               for w in node_budget_windows(profile, net, sol, b,
+                                            memory_model))
+
+
+# ---------------------------------------------------------------------------
+# The cost-model protocol
+# ---------------------------------------------------------------------------
+
+class CostModel:
+    """Objective + memory-feasibility pair consumed by the planner stack.
+
+    ``evaluate`` is the quantity ``bcd_solve`` / ``exhaustive_joint`` /
+    ``exhaustive_microbatch`` minimize (lower is better; ``math.inf`` for
+    infeasible points); ``memory_feasible`` is the predicate behind the
+    Eq. (24) feasible-b box (must be monotone non-increasing in ``b``).
+    """
+
+    name = "abstract"
+
+    def evaluate(self, profile: ModelProfile, net: EdgeNetwork,
+                 sol: SplitSolution, b: int, B: int) -> float:
+        raise NotImplementedError
+
+    def memory_feasible(self, profile: ModelProfile, net: EdgeNetwork,
+                        sol: SplitSolution, b: int) -> bool:
+        raise NotImplementedError
+
+class ClosedForm(CostModel):
+    """The paper's Eqs. (12)-(14) objective with the Eq. (11)/C7-C8 memory
+    predicate — bit-identical to the historical hard-wired path (the same
+    float operations in the same order), and the default everywhere."""
+
+    name = "closed_form"
+
+    def __init__(self, memory_model: str = "paper"):
+        self.memory_model = memory_model
+
+    def evaluate(self, profile, net, sol, b, B) -> float:
+        return L.total_latency(profile, net, sol, b, B)
+
+    def memory_feasible(self, profile, net, sol, b) -> bool:
+        return L.memory_feasible(profile, net, sol, b, self.memory_model)
+
+    def __repr__(self):
+        return f"ClosedForm(memory_model={self.memory_model!r})"
+
+
+class SimMakespan(CostModel):
+    """Measured makespan: ``sim.simulate_plan`` under an admission policy.
+
+    The simulated timeline charges the reentrant/co-location idle time the
+    closed form idealizes away (a resource serves one task at a time), and
+    the admission ``policy`` bounds live activations — ``"memory"``
+    (:class:`repro.sim.policies.MemoryBudgeted`, the default) derives the
+    windows from ``Node.mem`` via :func:`node_budget_windows`, so the
+    objective and the feasibility predicate consume the same claims.
+
+    ``engine="auto"`` uses the vectorized engine wherever it is exact and
+    falls back to the heap event loop (reentrant plans, time-varying
+    capacity).  The import of ``repro.sim`` is deferred to call time so
+    ``repro.core`` keeps importing without the sim subsystem.
+    """
+
+    name = "sim_makespan"
+
+    def __init__(self, policy="memory", engine: str = "auto",
+                 memory_model: str = "refined"):
+        # keep the feasibility predicate and the executed admission windows
+        # on ONE memory model: a "memory" policy name is materialized with
+        # this model's memory_model, and a pre-built MemoryBudgeted instance
+        # donates its own (otherwise the box would prune b values the
+        # simulated windows would happily schedule, or vice versa)
+        if isinstance(policy, str) and \
+                policy.lower() in ("memory", "memory_budgeted"):
+            from repro.sim.policies import MemoryBudgeted  # deferred
+            policy = MemoryBudgeted(memory_model)
+        elif getattr(policy, "name", None) == "memory":
+            memory_model = policy.memory_model
+        self.policy = policy
+        self.engine = engine
+        self.memory_model = memory_model
+
+    def evaluate(self, profile, net, sol, b, B) -> float:
+        if b < 1 or not self.memory_feasible(profile, net, sol, b):
+            return math.inf
+        from repro.sim.engine import simulate_plan  # deferred: no hard dep
+        rep = simulate_plan(profile, net, sol, b, B=B, policy=self.policy,
+                            engine=self.engine)
+        return rep.L_t
+
+    def memory_feasible(self, profile, net, sol, b) -> bool:
+        return budget_feasible(profile, net, sol, b, self.memory_model)
+
+    def __repr__(self):
+        return (f"SimMakespan(policy={getattr(self.policy, 'name', self.policy)!r}, "
+                f"engine={self.engine!r}, memory_model={self.memory_model!r})")
+
+
+def resolve_cost_model(cost_model, memory_model: str = "paper") -> CostModel:
+    """``None`` -> the default :class:`ClosedForm` (with the caller's
+    ``memory_model``); a :class:`CostModel` instance passes through."""
+    if cost_model is None:
+        return ClosedForm(memory_model)
+    if isinstance(cost_model, CostModel):
+        return cost_model
+    raise TypeError(f"expected a CostModel or None, got {cost_model!r}")

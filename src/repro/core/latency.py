@@ -173,17 +173,36 @@ def comm_latency(net: EdgeNetwork, n_from: int, n_to: int, nbytes: float) -> flo
     return nbytes / r
 
 
-def memory_bytes(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
-                 node: int, b: int, model: str = "paper") -> float:
-    """Eq. (11): eta_k.  ``model='paper'`` scales the whole footprint by b
-    (as printed); ``'refined'`` scales only activations/grads by b."""
+def memory_split(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
+                 node: int, b: int, model: str = "paper") -> tuple:
+    """Eq. (11) split into ``(static_bytes, act_bytes)`` for one submodel.
+
+    ``static_bytes`` is resident regardless of how many micro-batches are in
+    flight (parameters + optimizer state); ``act_bytes`` is the footprint of
+    ONE live micro-batch of size ``b`` (activations + act-gradients).  Under
+    ``model='paper'`` Eq. (11) scales the *whole* footprint with b (as
+    printed), so everything lands in the act term; ``'refined'`` scales only
+    activations/grads.  This split is the single claims source shared by
+    ``memory_bytes`` (C7/C8 with one live micro-batch), the memory-budgeted
+    admission windows (``repro.core.cost_model.stage_memory_claims``), and
+    ``pipeline.schedule.memory_highwater``.
+    """
     eff_b = client_max_share(b, net.num_clients) if node == 0 else b
     if model == "paper":
-        return eff_b * profile.seg_mem_per_sample(lo, hi)
+        return 0.0, eff_b * profile.seg_mem_per_sample(lo, hi)
     act = (profile.act_cum() + profile.grad_cum())
     static = (profile.param_cum() + profile.opt_cum())
     seg = lambda c: float(c[hi - 1] - (c[lo - 1] if lo > 0 else 0.0))
-    return eff_b * seg(act) + seg(static)
+    return seg(static), eff_b * seg(act)
+
+
+def memory_bytes(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
+                 node: int, b: int, model: str = "paper") -> float:
+    """Eq. (11): eta_k — the footprint with one micro-batch in flight.
+    ``model='paper'`` scales the whole footprint by b (as printed);
+    ``'refined'`` scales only activations/grads by b."""
+    static, act = memory_split(profile, net, lo, hi, node, b, model)
+    return act + static
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,7 @@ import dataclasses
 import math
 
 from . import latency as L
+from .cost_model import resolve_cost_model
 from .latency import SplitSolution, client_max_share
 from .network import EdgeNetwork
 from .profiles import ModelProfile
@@ -93,17 +94,27 @@ def _linear_coeff(profile: ModelProfile, net: EdgeNetwork, sol: SplitSolution,
 
 def feasibility_box(profile: ModelProfile, net: EdgeNetwork,
                     sol: SplitSolution, B: int, T_1: float,
-                    memory_model: str = "paper") -> int:
+                    memory_model: str = "paper", cost_model=None) -> int:
     """Largest b in [1, B] with memory feasible AND T_i(b) <= T_1.
 
     Both predicates are monotone non-increasing in b, so binary search is
     exact — this is Eq. (24)'s min-of-floors evaluated without re-deriving
     each constraint analytically.
+
+    ``cost_model`` supplies the memory predicate (default
+    ``ClosedForm(memory_model)``, i.e. Eq. (11)'s one-in-flight eta_k; a
+    ``SimMakespan`` model substitutes the memory-budgeted window >= 1
+    predicate derived from ``Node.mem`` — the claims source shared with
+    ``sim.policies.MemoryBudgeted`` and ``pipeline.schedule``).  The
+    ``T_i(b) <= T_1`` leg stays closed-form: T_1 is Algorithm 1's
+    analytical bottleneck, so mixing a measured interval in would compare
+    unlike quantities.
     """
+    cm = resolve_cost_model(cost_model, memory_model)
     tol = 1.0 + 1e-9
 
     def ok(b: int) -> bool:
-        if not L.memory_feasible(profile, net, sol, b, memory_model):
+        if not cm.memory_feasible(profile, net, sol, b):
             return False
         return L.pipeline_interval(profile, net, sol, b) <= T_1 * tol
 
@@ -129,10 +140,17 @@ def _objective(profile, net, sol, b, B, T_1) -> float:
 
 def optimal_microbatch(profile: ModelProfile, net: EdgeNetwork,
                        sol: SplitSolution, B: int, T_1: float,
-                       memory_model: str = "paper") -> MicrobatchResult:
+                       memory_model: str = "paper",
+                       cost_model=None) -> MicrobatchResult:
     """Eq. (18): evaluate the four closed-form cases and pick the best
-    feasible candidate under the exact P3 objective."""
-    b_v = feasibility_box(profile, net, sol, B, T_1, memory_model)
+    feasible candidate under the exact P3 objective.
+
+    ``cost_model`` only reshapes the feasible box (its memory predicate);
+    the case analysis *is* Theorem 1's closed form — measured objectives
+    enter through ``exhaustive_microbatch`` / ``bcd_solve``'s refinement.
+    """
+    b_v = feasibility_box(profile, net, sol, B, T_1, memory_model,
+                          cost_model=cost_model)
     if b_v == 0:
         return MicrobatchResult(b=0, objective=math.inf, L_t=math.inf,
                                 case="infeasible", b_v=0, candidates={})
@@ -183,23 +201,28 @@ def optimal_microbatch(profile: ModelProfile, net: EdgeNetwork,
 
 def exhaustive_microbatch(profile: ModelProfile, net: EdgeNetwork,
                           sol: SplitSolution, B: int, T_1: float | None = None,
-                          memory_model: str = "paper"):
+                          memory_model: str = "paper", cost_model=None):
     """Oracle: argmin over all b in [1, B].
 
     With ``T_1`` given, minimizes the P3 objective under the same feasibility
-    box (for closed-form comparison).  With ``T_1=None``, minimizes the true
-    L_t(b) of Eq. (14) (for the Fig. 7 optimal scheme).
+    box (for closed-form comparison).  With ``T_1=None``, minimizes the cost
+    model's objective — Eq. (14)'s L_t for the default ``ClosedForm`` (the
+    Fig. 7 optimal scheme), the *measured* makespan for ``SimMakespan``
+    (the sim-in-the-loop refinement of ``bcd_solve``).  The feasible-b set
+    comes from the cost model's memory predicate either way, which is how
+    the memory-budgeted box feeds back into the BCD.
     """
+    cm = resolve_cost_model(cost_model, memory_model)
     best_b, best_val = 0, math.inf
     for b in range(1, B + 1):
-        if not L.memory_feasible(profile, net, sol, b, memory_model):
+        if not cm.memory_feasible(profile, net, sol, b):
             continue
         if T_1 is not None:
             if L.pipeline_interval(profile, net, sol, b) > T_1 * (1 + 1e-9):
                 continue
             val = _objective(profile, net, sol, b, B, T_1)
         else:
-            val = L.total_latency(profile, net, sol, b, B)
+            val = cm.evaluate(profile, net, sol, b, B)
         if val < best_val:
             best_val, best_b = val, b
     return best_b, best_val

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import (EdgeNetwork, ModelProfile, Plan, bcd_solve,
                         optimal_microbatch, total_latency, pipeline_interval,
                         fill_latency, num_fills)
+from repro.core.cost_model import resolve_cost_model
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,16 +59,25 @@ class ReplanOutcome:
 
 
 class Coordinator:
-    """Holds the live (profile, network, plan); applies events."""
+    """Holds the live (profile, network, plan); applies events.
+
+    ``cost_model`` (default: closed form) is threaded through every replan
+    — the initial solve, full replans and the Theorem-1 cheap path — so an
+    elastic deployment can replan against the *measured* makespan
+    (``repro.core.cost_model.SimMakespan``) instead of Eq. (14).
+    """
 
     def __init__(self, profile: ModelProfile, net: EdgeNetwork, B: int,
-                 *, theta: float = 0.01, microbatch_gain_threshold: float = 0.95):
+                 *, theta: float = 0.01,
+                 microbatch_gain_threshold: float = 0.95, cost_model=None):
         self.profile = profile
         self.net = net
         self.B = B
         self.theta = theta
         self.mb_gain_threshold = microbatch_gain_threshold
-        self.plan = bcd_solve(profile, net, B, theta=theta)
+        self.cost_model = resolve_cost_model(cost_model)
+        self.plan = bcd_solve(profile, net, B, theta=theta,
+                              cost_model=self.cost_model)
         self.events: list = []
 
     # -- event application ----------------------------------------------------
@@ -95,15 +105,17 @@ class Coordinator:
 
     def _current_latency(self) -> float:
         try:
-            return total_latency(self.profile, self.net, self.plan.solution,
-                                 self.plan.b, self.B)
+            return self.cost_model.evaluate(self.profile, self.net,
+                                            self.plan.solution, self.plan.b,
+                                            self.B)
         except Exception:
             return math.inf
 
     def _full_replan(self, event, old_L) -> ReplanOutcome:
         old_sol = self.plan.solution
         self.plan = bcd_solve(self.profile, self.net, self.B,
-                              b0=max(self.plan.b, 1), theta=self.theta)
+                              b0=max(self.plan.b, 1), theta=self.theta,
+                              cost_model=self.cost_model)
         return ReplanOutcome(
             event=event, old_latency=old_L, new_plan=self.plan,
             action="replan",
@@ -115,19 +127,23 @@ class Coordinator:
         too little."""
         sol = self.plan.solution
         T_i = pipeline_interval(self.profile, self.net, sol, self.plan.b)
-        mb = optimal_microbatch(self.profile, self.net, sol, self.B, T_i)
+        mb = optimal_microbatch(self.profile, self.net, sol, self.B, T_i,
+                                cost_model=self.cost_model)
         if mb.b > 0:
-            cheap_L = total_latency(self.profile, self.net, sol, mb.b, self.B)
+            cheap_L = self.cost_model.evaluate(self.profile, self.net, sol,
+                                               mb.b, self.B)
         else:
             cheap_L = math.inf
         full = bcd_solve(self.profile, self.net, self.B,
-                         b0=max(self.plan.b, 1), theta=self.theta)
-        if math.isfinite(cheap_L) and cheap_L <= full.L_t / self.mb_gain_threshold:
+                         b0=max(self.plan.b, 1), theta=self.theta,
+                         cost_model=self.cost_model)
+        if math.isfinite(cheap_L) and cheap_L <= full.objective / self.mb_gain_threshold:
             self.plan = dataclasses.replace(
                 self.plan, b=mb.b,
                 T_f=fill_latency(self.profile, self.net, sol, mb.b),
                 T_i=pipeline_interval(self.profile, self.net, sol, mb.b),
-                L_t=cheap_L)
+                L_t=total_latency(self.profile, self.net, sol, mb.b, self.B),
+                objective=cheap_L, cost_model=self.cost_model.name)
             return ReplanOutcome(event=event, old_latency=old_L,
                                  new_plan=self.plan, action="microbatch",
                                  remapped_stages=False)

@@ -1,0 +1,129 @@
+"""jax version shims: the jax>=0.6 API surface on the pinned 0.4.x wheel.
+
+The repo was written against four jax>=0.6 APIs that do not exist on the
+toolchain's jax 0.4.37 (the ISSUE 3 root-caused seed debt):
+
+  * ``jax.sharding.AxisType`` — explicit-sharding mesh axis types.  0.4.x
+    meshes are implicitly Auto, so the shim is a plain enum accepted (and
+    dropped) by :func:`make_mesh`.
+  * ``jax.make_mesh(axis_types=...)`` — :func:`make_mesh` forwards the
+    kwarg when the installed jax takes it and drops it otherwise.
+  * ``jax.set_mesh(mesh)`` — the 0.4.x idiom is entering the mesh itself
+    (``with mesh:``); :func:`set_mesh` returns a context manager either way.
+  * ``jax.shard_map(..., axis_names=..., check_vma=...)`` — 0.4.x ships
+    ``jax.experimental.shard_map.shard_map`` with the complementary
+    ``auto=``/``check_rep=`` spelling; :func:`shard_map` translates.
+  * flat-dict ``Compiled.cost_analysis()`` — 0.4.x returns a per-partition
+    LIST of dicts; :func:`cost_analysis` always returns the flat dict.
+
+Every shim resolves to the native API when it exists, so this module is a
+no-op on jax>=0.6 and the call sites (``launch.mesh``, ``launch.dryrun``,
+``pipeline.spmd``, ``tests/test_hlo.py``, ``tests/test_spmd.py``) stay
+version-agnostic.  This module must not import anything from the rest of
+``repro.launch`` (it is imported by ``launch.mesh`` during package init).
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "set_mesh", "shard_map",
+           "cost_analysis", "PARTIAL_AUTO_SHARD_MAP"]
+
+#: True when the installed jax supports *partial-auto* shard_map regions
+#: (manual over a subset of mesh axes).  The 0.4.x experimental shard_map
+#: accepts ``auto=...`` but its CPU SPMD lowering cannot partition
+#: ``axis_index``/``ppermute`` inside such a region (XLA: "PartitionId
+#: instruction is not supported for SPMD partitioning"); callers that can
+#: express their region fully manually should do so when this is False
+#: (see ``repro.pipeline.spmd``).
+PARTIAL_AUTO_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+# -- AxisType ---------------------------------------------------------------
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        """Stand-in for ``jax.sharding.AxisType`` (jax>=0.6).  0.4.x meshes
+        have no axis types (every axis behaves like Auto)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on every jax version.
+
+    On 0.4.x the kwarg is dropped: those meshes are implicitly Auto, which
+    is exactly what every call site in this repo requests.
+    """
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if _MAKE_MESH_TAKES_AXIS_TYPES and axis_types is not None:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+# -- set_mesh ---------------------------------------------------------------
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    def set_mesh(mesh):
+        """``with set_mesh(mesh):`` — on 0.4.x a ``Mesh`` is itself the
+        context manager that installs the global physical mesh."""
+        return mesh
+
+
+# -- shard_map --------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        """jax>=0.6 ``jax.shard_map`` surface on the 0.4.x experimental
+        implementation: ``axis_names`` (the *manual* axes) becomes the
+        complementary ``auto`` frozenset, ``check_vma`` maps to the old
+        ``check_rep`` flag."""
+        kw = {}
+        if axis_names is not None:
+            kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map_04(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+
+
+# -- cost_analysis ----------------------------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """Flat-dict ``Compiled.cost_analysis()`` on every jax version.
+
+    jax 0.4.x returns a per-partition list of dicts (one per SPMD
+    partition; entries are replicated), jax>=0.6 the flat dict itself.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca) if ca else {}

@@ -4,7 +4,7 @@ device count before any jax initialization)."""
 
 from __future__ import annotations
 
-import jax
+from .compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -13,8 +13,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     axis carries the cross-pod (DCN-class) gradient reduction."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_pipeline_mesh(*, multi_pod: bool = False, num_stages: int = 4):
@@ -27,8 +27,8 @@ def make_pipeline_mesh(*, multi_pod: bool = False, num_stages: int = 4):
                                                 "model")
     else:
         shape, axes = (16, num_stages, tp), ("data", "stage", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def data_axes(mesh) -> tuple:

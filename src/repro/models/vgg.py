@@ -9,10 +9,20 @@ the following conv, exactly as the profile assumes.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
 from .common import cross_entropy, dense_init
+
+#: ReLU (He) gain: ``dense_init`` is 1/sqrt(fan_in) — correct for the
+#: normed residual transformers, but a norm-free 16-layer ReLU stack decays
+#: activations by ~1/sqrt(2) per layer under it (logits land at ~1e-3 and
+#: single-batch overfit plateaus at the majority class — the ISSUE 3
+#: "convergence-margin" seed debt).  Hidden layers take the sqrt(2) gain;
+#: the logit layer stays at gain 1.
+_RELU_GAIN = math.sqrt(2.0)
 
 
 # (kind, out_channels, pool_before) mirroring core.profiles._VGG16_LAYERS
@@ -30,17 +40,18 @@ def init_params(rng, dtype=jnp.float32):
     params = []
     in_c, hw = 3, 32
     keys = jax.random.split(rng, len(LAYERS))
-    for key, (kind, out_c, pool) in zip(keys, LAYERS):
+    for i, (key, (kind, out_c, pool)) in enumerate(zip(keys, LAYERS)):
         if pool:
             hw //= 2
         if kind == "conv":
             w = dense_init(key, (3, 3, in_c, out_c), dtype, in_axis=2) \
-                / 3.0  # fan-in includes the 3x3 window
+                * (_RELU_GAIN / 3.0)  # fan-in includes the 3x3 window
             params.append({"w": w, "b": jnp.zeros((out_c,), dtype)})
             in_c = out_c
         else:
             fan_in = in_c * hw * hw if hw > 1 else in_c
-            w = dense_init(key, (fan_in, out_c), dtype)
+            gain = _RELU_GAIN if i < len(LAYERS) - 1 else 1.0
+            w = dense_init(key, (fan_in, out_c), dtype) * gain
             params.append({"w": w, "b": jnp.zeros((out_c,), dtype)})
             in_c, hw = out_c, 1
     return params

@@ -94,6 +94,7 @@ class SplitLearningExecutor:
         self.full_params = vgg_lib.init_params(rng)
         self.round_latency = plan.L_t
         self.simulated_time = 0.0
+        self._jitted_grads = {}      # q -> compiled microbatch_grads
 
     def stage_params(self):
         return split_vgg_params(self.full_params, self.plan.solution.cuts)
@@ -112,17 +113,36 @@ class SplitLearningExecutor:
         from repro.models.common import cross_entropy
         return cross_entropy(logits[:, None, :], batch["labels"][:, None])
 
-    def train_round(self, batch, lr: float = 0.05):
-        """One mini-batch: micro-batched grads + SGD; advances sim clock."""
+    def train_round(self, batch, lr: float = 0.05, momentum: float = 0.0):
+        """One mini-batch: micro-batched grads + SGD (optionally with heavy
+        -ball ``momentum``); advances the simulated clock.  Momentum keeps
+        the update rule client-computable (one extra buffer per stage) and
+        tames plain SGD's oscillation on the norm-free VGG stack."""
         params_list = self.stage_params()
         q = self.plan.num_microbatches
         B = batch["images"].shape[0]
         q = max(1, min(q, B))
         while B % q:
             q -= 1
-        loss, grads = jax.jit(
-            lambda p, b: microbatch_grads(self.loss, p, b, q)
-        )(params_list, batch)
+        # cache the compiled step per q: a fresh jit(lambda) every round
+        # would recompile the whole fwd+bwd scan each call
+        step = self._jitted_grads.get(q)
+        if step is None:
+            step = jax.jit(
+                lambda p, b: microbatch_grads(self.loss, p, b, q))
+            self._jitted_grads[q] = step
+        loss, grads = step(params_list, batch)
+        if momentum:
+            vel = getattr(self, "_velocity", None)
+            # a replan can change the cuts (different stage grouping/leaf
+            # shapes) — a stale velocity tree would crash the tree.map, so
+            # restart the buffer whenever the gradient tree changed shape
+            if vel is None or (jax.tree.map(jnp.shape, vel)
+                               != jax.tree.map(jnp.shape, grads)):
+                vel = jax.tree.map(jnp.zeros_like, grads)
+            vel = jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+            self._velocity = vel
+            grads = vel
         params_list = jax.tree.map(lambda p, g: p - lr * g, params_list,
                                    grads)
         # write back into the flat param list

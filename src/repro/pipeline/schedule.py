@@ -35,19 +35,26 @@ from repro.sim.policies import resolve_policy
 
 
 def memory_highwater(num_stages: int, num_microbatches: int,
-                     policy="1f1b") -> dict:
+                     policy="1f1b", *, bind=None) -> dict:
     """Closed-form activation high-water claim per 0-based stage position.
 
-    ``policy`` is an admission-policy name ("fifo"/"gpipe"/"1f1b") or an
-    ``AdmissionPolicy`` instance; the claim is the most activations the
-    schedule ever holds live at each stage.
+    ``policy`` is an admission-policy name ("fifo"/"gpipe"/"1f1b"/"memory")
+    or an ``AdmissionPolicy`` instance; the claim is the most activations
+    the schedule ever holds live at each stage.  Plan-dependent policies
+    (``"memory"``: windows derived from ``Node.mem`` via the shared
+    ``repro.core.cost_model.node_budget_windows`` claims source) need the
+    plan context: pass ``bind=(profile, net, sol, b)`` or a pre-bound
+    policy instance.
 
     >>> memory_highwater(3, 12, "1f1b")
     {0: 3, 1: 2, 2: 1}
     >>> memory_highwater(3, 12, "gpipe")
     {0: 12, 1: 12, 2: 12}
     """
-    return resolve_policy(policy).stage_capacity(num_stages, num_microbatches)
+    pol = resolve_policy(policy)
+    if bind is not None:
+        pol = pol.bind(*bind)
+    return pol.stage_capacity(num_stages, num_microbatches)
 
 
 @dataclasses.dataclass

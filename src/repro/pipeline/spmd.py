@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.compat import PARTIAL_AUTO_SHARD_MAP, shard_map
 from repro.models.common import ArchConfig, cross_entropy, rms_norm
 from repro.models import transformer as tf_lib
 from .stage import stack_stage_params, transformer_stage_fn
@@ -77,11 +78,27 @@ def _make_pipe_region(cfg: ArchConfig, pcfg: PipelineConfig, mesh):
         out = jax.lax.psum(valid.astype(jnp.float32), ax)
         return out.astype(stream.dtype)
 
-    return jax.shard_map(
+    if PARTIAL_AUTO_SHARD_MAP:
+        # jax>=0.6: manual over "stage" only; data/model stay auto so the
+        # stream keeps its outer sharding through the region
+        return shard_map(
+            pipe, mesh=mesh,
+            in_specs=(P(ax), P()),    # stage params split; stream replicated
+            out_specs=P(),            # identical across stages after psum
+            axis_names={ax}, check_vma=False)
+    # jax 0.4.x: partial-auto regions cannot lower axis_index/ppermute
+    # (XLA PartitionId limitation — see compat.PARTIAL_AUTO_SHARD_MAP), so
+    # run fully manual and carry the data sharding through in_specs: the
+    # micro-batch rows split over the data axes, d stays unsharded inside
+    # the region (numerics identical; the model axis resharding happens at
+    # the region boundary instead of via auto sharding)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    stream_spec = P(None, data_axes) if data_axes else P()
+    return shard_map(
         pipe, mesh=mesh,
-        in_specs=(P(ax), P()),        # stage params split; stream replicated
-        out_specs=P(),                # identical across stages after psum
-        axis_names={ax}, check_vma=False)
+        in_specs=(P(ax), stream_spec),
+        out_specs=stream_spec,
+        axis_names=set(mesh.axis_names), check_vma=False)
 
 
 def make_pipelined_loss(cfg: ArchConfig, mesh, pcfg: PipelineConfig

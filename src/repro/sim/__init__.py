@@ -7,9 +7,10 @@ FIFO resource occupancy (a node engine or link serves one unit at a time,
 matching the co-location sums of C9-C16) — via either the exact heap-based
 event loop or the vectorized batched-advancement engine (``engine="auto"``
 picks whichever is exact and fastest).  ``policies`` supplies pluggable
-micro-batch admission: GPipe-like ``FIFO`` and memory-bounded ``OneFOneB``
-(1F1B), whose closed-form activation high-water claims the engine validates
-event by event.  ``scenario`` supplies time-varying capacity traces
+micro-batch admission: GPipe-like ``FIFO``, fixed-depth ``OneFOneB`` (1F1B),
+and ``MemoryBudgeted`` (windows derived from ``Node.mem`` and the Eq. (11)
+activation profile), whose closed-form activation high-water claims the
+engine validates event by event.  ``scenario`` supplies time-varying capacity traces
 (piecewise-constant, Gauss-Markov), straggler windows, link outages, and
 replan triggers.  ``validate`` cross-checks the simulated ``T_f``/``T_i``/
 ``L_t`` against ``core.latency`` on deterministic networks — exact to
@@ -22,8 +23,9 @@ from .events import (Task, Timeline, TraceRecord, VisitTable,
 from .scenario import (PiecewiseTrace, constant, piecewise, gauss_markov,
                        iid_piecewise, NetworkScenario, ReplanTrigger,
                        piecewise_cv_scenario, gauss_markov_scenario)
-from .policies import (AdmissionPolicy, FIFO, OneFOneB, resolve_policy,
-                       activation_occupancy, stage_activation_highwater)
+from .policies import (AdmissionPolicy, FIFO, OneFOneB, MemoryBudgeted,
+                       resolve_policy, activation_occupancy,
+                       stage_activation_highwater)
 from .engine import (PipelineSimulator, SimReport, build_tasks,
                      build_visit_table, simulate_plan, vectorizable,
                      SegmentReport, ReplanSimReport, simulate_with_replanning)
@@ -36,7 +38,7 @@ __all__ = [
     "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
     "iid_piecewise", "NetworkScenario", "ReplanTrigger",
     "piecewise_cv_scenario", "gauss_markov_scenario",
-    "AdmissionPolicy", "FIFO", "OneFOneB", "resolve_policy",
+    "AdmissionPolicy", "FIFO", "OneFOneB", "MemoryBudgeted", "resolve_policy",
     "activation_occupancy", "stage_activation_highwater",
     "PipelineSimulator", "SimReport", "build_tasks", "build_visit_table",
     "simulate_plan", "vectorizable",

@@ -503,7 +503,10 @@ def simulate_plan(profile: ModelProfile, net: EdgeNetwork,
     Give either ``B`` (mini-batch size: ``1 + ceil((B-b)/b)`` full-size
     micro-batches, the paper's Eq. (14) accounting) or an explicit
     ``num_microbatches``.  ``policy`` selects micro-batch admission ("fifo"
-    is the GPipe-like PR 1 behavior, "1f1b" the memory-bounded schedule).
+    is the GPipe-like PR 1 behavior, "1f1b" the fixed-depth schedule,
+    "memory" the ``Node.mem``-derived windows); plan-dependent policies are
+    bound to ``(profile, net, sol, b)`` here, and a plan whose budget cannot
+    hold even one live micro-batch is refused with ``ValueError``.
     ``engine`` picks the executor: "event" (default; exact everywhere,
     bit-identical FIFO timelines), "vectorized" (batched numpy advancement;
     raises unless exact for this instance — see :func:`vectorizable`), or
@@ -516,7 +519,12 @@ def simulate_plan(profile: ModelProfile, net: EdgeNetwork,
     if engine not in ("event", "vectorized", "auto"):
         raise ValueError(f"unknown engine {engine!r}: "
                          "expected 'event', 'vectorized' or 'auto'")
-    pol = resolve_policy(policy)
+    pol = resolve_policy(policy).bind(profile, net, sol, b)
+    if not pol.schedulable():
+        raise ValueError(
+            f"plan is memory-infeasible under the {pol.name!r} admission "
+            f"policy at b={b}: some stage cannot hold even one live "
+            "micro-batch within its node's memory budget")
     if engine in ("vectorized", "auto"):
         table, d = _vectorized_inputs(profile, net, sol, b, scenario)
         if d is not None:

@@ -12,7 +12,7 @@ backward pass reclaims an activation.  Windows become precedence edges
 added on top of the per-micro-batch chains, so both the heap engine and the
 vectorized engine execute any policy without special cases.
 
-Two concrete policies ship:
+Three concrete policies ship:
 
 * :class:`FIFO` — unbounded windows; byte-for-byte the PR 1 behavior (no
   extra edges are generated, the event loop is untouched).  Activation
@@ -21,6 +21,14 @@ Two concrete policies ship:
   pipeline (1F1B): once warm, each stage alternates one forward with one
   backward, holding at most ``S - j`` live activations.  Claim:
   ``min(Q, S - j)``.
+* :class:`MemoryBudgeted` — windows derived from each node's actual memory
+  budget (``Node.mem`` vs the Eq. (11) activation profile) instead of fixed
+  1F1B depths; must be *bound* to a concrete plan first
+  (``simulate_plan`` binds automatically via :meth:`AdmissionPolicy.bind`).
+  Claim: ``min(Q, floor((mem_n - static_n) / act_n))`` per stage on node n
+  — the same claims source ``pipeline.schedule.memory_highwater`` and
+  ``core.microbatch.feasibility_box`` consume
+  (``repro.core.cost_model.node_budget_windows``).
 
 The closed-form claims (:meth:`AdmissionPolicy.stage_capacity`) are the
 single source of truth shared with ``repro.pipeline.schedule``'s
@@ -52,6 +60,23 @@ class AdmissionPolicy:
 
     def window(self, num_stages: int, stage: int) -> int | None:
         raise NotImplementedError
+
+    # -- plan binding -------------------------------------------------------
+    def bind(self, profile, net, sol, b) -> "AdmissionPolicy":
+        """Specialize the policy to a concrete plan.
+
+        Stateless policies (FIFO, 1F1B) return ``self``; plan-dependent ones
+        (:class:`MemoryBudgeted`) return a bound copy whose windows are
+        derived from the instance.  ``simulate_plan`` calls this before
+        execution, so callers can pass unbound policies everywhere.
+        """
+        return self
+
+    def schedulable(self) -> bool:
+        """False when some window is 0 — admitting even one micro-batch
+        would exceed a budget, so execution must be refused (a 0-window
+        edge set would deadlock the pipeline)."""
+        return True
 
     # -- closed-form memory claim -------------------------------------------
     def stage_capacity(self, num_stages: int, num_microbatches: int) -> dict:
@@ -120,7 +145,72 @@ class OneFOneB(AdmissionPolicy):
         return num_stages - stage
 
 
-_POLICIES = {"fifo": FIFO, "gpipe": FIFO, "1f1b": OneFOneB}
+class MemoryBudgeted(AdmissionPolicy):
+    """Admission windows derived from node memory budgets (ROADMAP item).
+
+    Instead of 1F1B's fixed ``S - j`` depths, stage ``j`` on node ``n`` gets
+    the largest window ``w`` whose live activations actually fit:
+    ``static_n + w * act_n <= mem_n`` with the static/activation split of
+    Eq. (11) (``repro.core.cost_model.node_budget_windows`` — the claims
+    source shared with ``pipeline.schedule.memory_highwater`` and the
+    planner's feasible-b box).  Co-located stages share their node's budget
+    and therefore its window.
+
+    The windows depend on ``(profile, net, sol, b)``, so the policy must be
+    *bound* before use; ``simulate_plan`` binds automatically:
+
+    >>> import numpy as np
+    >>> from repro.core import EdgeNetwork, Node, SplitSolution, uniform_profile
+    >>> prof = uniform_profile(4, fp=1.0, bp=1.0, act=1.0, param=1.0)
+    >>> nodes = [Node("c", f=1.0, is_client=True, mem=100.0),
+    ...          Node("s", f=1.0, mem=14.0)]
+    >>> net = EdgeNetwork(nodes=nodes, rate=np.full((2, 2), 10.0),
+    ...                   num_clients=1)
+    >>> sol = SplitSolution(cuts=(2, 4), placement=(0, 1))
+    >>> pol = MemoryBudgeted().bind(prof, net, sol, b=1)
+    >>> pol.window(2, 1)        # server: (14 - 4 static) // (2*2 act) = 2
+    2
+    >>> pol.stage_capacity(2, 8)[1]
+    2
+    """
+
+    name = "memory"
+
+    def __init__(self, memory_model: str = "refined"):
+        self.memory_model = memory_model
+        self._windows: tuple | None = None
+
+    @property
+    def bound(self) -> bool:
+        return self._windows is not None
+
+    def bind(self, profile, net, sol, b) -> "MemoryBudgeted":
+        from repro.core.cost_model import node_budget_windows
+        pol = MemoryBudgeted(self.memory_model)
+        pol._windows = tuple(node_budget_windows(profile, net, sol, b,
+                                                 self.memory_model))
+        return pol
+
+    def schedulable(self) -> bool:
+        if self._windows is None:
+            return True
+        return all(w is None or w >= 1 for w in self._windows)
+
+    def window(self, num_stages: int, stage: int) -> int | None:
+        if self._windows is None:
+            raise RuntimeError(
+                "MemoryBudgeted is plan-dependent: call "
+                ".bind(profile, net, sol, b) first (simulate_plan binds "
+                "automatically)")
+        if num_stages != len(self._windows):
+            raise ValueError(
+                f"policy bound for {len(self._windows)} stages, asked about "
+                f"a {num_stages}-stage pipeline")
+        return self._windows[stage]
+
+
+_POLICIES = {"fifo": FIFO, "gpipe": FIFO, "1f1b": OneFOneB,
+             "memory": MemoryBudgeted, "memory_budgeted": MemoryBudgeted}
 
 
 def resolve_policy(policy) -> AdmissionPolicy:

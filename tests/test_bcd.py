@@ -7,8 +7,8 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep: skip module, not error
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (bcd_solve, exhaustive_joint, no_pipeline, ours,
-                        rc_op, rp_oc, total_latency, validate_solution)
+from repro.core import (ClosedForm, bcd_solve, exhaustive_joint, no_pipeline,
+                        ours, rc_op, rp_oc, total_latency, validate_solution)
 from conftest import small_instance
 
 
@@ -26,6 +26,28 @@ def test_bcd_converges_and_is_monotone(seed):
     validate_solution(plan.solution, prof, net)
     assert plan.L_t == pytest.approx(
         total_latency(prof, net, plan.solution, plan.b, plan.B), rel=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100), B=st.sampled_from([48, 96, 128]))
+def test_cost_model_closed_form_is_bit_identical_default(seed, B):
+    """The ISSUE 4 contract: ``cost_model=ClosedForm()`` must reproduce the
+    default path bit-for-bit — objective, cuts, placement, b, L_t — on the
+    randomized cross-check grid (same grid family as the tests above)."""
+    prof, net = small_instance(seed, num_layers=6, num_servers=3)
+    p0 = bcd_solve(prof, net, B=B, b0=12)
+    p1 = bcd_solve(prof, net, B=B, b0=12, cost_model=ClosedForm())
+    assert p0.feasible == p1.feasible
+    if p0.feasible:
+        assert p0.objective == p1.objective
+        assert p0.solution.cuts == p1.solution.cuts
+        assert p0.solution.placement == p1.solution.placement
+        assert p0.b == p1.b and p0.L_t == p1.L_t
+        assert p0.history == p1.history
+    e0 = exhaustive_joint(prof, net, B=min(B, 48))
+    e1 = exhaustive_joint(prof, net, B=min(B, 48), cost_model=ClosedForm())
+    assert (e0.feasible, e0.b, e0.L_t, e0.solution) == \
+        (e1.feasible, e1.b, e1.L_t, e1.solution)
 
 
 @settings(max_examples=8, deadline=None)

@@ -19,8 +19,26 @@ def test_sim_reexports_mirror_sim_all():
     assert set(repro._SIM_EXPORTS) == set(repro.sim.__all__)
 
 
+def test_cost_model_reexports_mirror_module_all():
+    """The ISSUE 4 seam: repro's cost-model re-exports must mirror
+    ``repro.core.cost_model.__all__`` and resolve from ``repro.core`` too."""
+    import repro.core
+    import repro.core.cost_model as cmod
+    assert set(repro._COST_MODEL_EXPORTS) == set(cmod.__all__)
+    for name in cmod.__all__:
+        assert getattr(repro, name) is getattr(cmod, name), name
+        assert getattr(repro.core, name) is getattr(cmod, name), name
+
+
+def test_memory_budgeted_exported_everywhere():
+    import repro.sim
+    assert repro.MemoryBudgeted is repro.sim.MemoryBudgeted
+    assert "MemoryBudgeted" in repro.sim.__all__
+
+
 def test_all_is_sorted_union_of_submodules_and_sim_exports():
-    assert repro.__all__ == sorted(repro._SUBMODULES | repro._SIM_EXPORTS)
+    assert repro.__all__ == sorted(repro._SUBMODULES | repro._SIM_EXPORTS
+                                   | repro._COST_MODEL_EXPORTS)
 
 
 def test_unknown_attribute_raises():

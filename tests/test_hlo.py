@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.compat import cost_analysis
 from repro.utils import collective_bytes, hlo_cost, op_histogram, shape_bytes
 
 
@@ -21,14 +22,10 @@ def _compile(f, *args):
     return jax.jit(f).lower(*args).compile().as_text()
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="seed debt (jax 0.4.37): Compiled.cost_analysis() returns a "
-           "per-partition LIST of dicts on this jax; the seed's flat-dict "
-           "indexing (cost_analysis()['flops']) is the jax>=0.6 API — "
-           "TypeError: list indices must be integers")
 def test_xla_counts_loop_bodies_once():
-    """The motivation for hlo_cost: scan x10 reports ~1x matmul flops."""
+    """The motivation for hlo_cost: scan x10 reports ~1x matmul flops.
+    (``repro.launch.compat.cost_analysis`` flattens the per-partition list
+    jax 0.4.x returns — the ISSUE 4 port of the jax>=0.6 call site.)"""
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
 
@@ -36,7 +33,7 @@ def test_xla_counts_loop_bodies_once():
         return jax.lax.scan(lambda c, w: (jnp.dot(c, w), None), x, ws)[0]
 
     comp = jax.jit(scanned).lower(x, ws).compile()
-    xla = comp.cost_analysis()["flops"]
+    xla = cost_analysis(comp)["flops"]
     assert xla < 2 * 2 * 128**3          # ~1 matmul, NOT 10
 
 
@@ -76,14 +73,10 @@ def test_hlo_cost_plain_dot():
     assert c.flops == 2 * 32 * 64 * 16
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="seed debt (jax 0.4.37): jax.sharding.AxisType (explicit-sharding "
-           "mesh axis types) and shard_map(check_vma=...) only exist in "
-           "jax>=0.6; the subprocess dies with AttributeError before the "
-           "collective parser under test ever runs")
 def test_collective_parser_on_sharded_module():
-    """A psum under shard_map must be found with the right byte count."""
+    """A psum under shard_map must be found with the right byte count.
+    (Mesh/shard_map go through ``repro.launch.compat`` so the same code
+    runs the jax>=0.6 surface on the pinned 0.4.x wheel.)"""
     import subprocess, sys, textwrap
     code = textwrap.dedent("""
         import os
@@ -92,12 +85,12 @@ def test_collective_parser_on_sharded_module():
         from jax.sharding import PartitionSpec as P
         import sys
         sys.path.insert(0, "src")
+        from repro.launch.compat import AxisType, make_mesh, shard_map
         from repro.utils import collective_bytes, hlo_cost
-        mesh = jax.make_mesh((4,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-        f = jax.shard_map(lambda a: jax.lax.psum(a, "x"), mesh=mesh,
-                          in_specs=P(), out_specs=P(), axis_names={"x"},
-                          check_vma=False)
+        mesh = make_mesh((4,), ("x",), axis_types=(AxisType.Auto,))
+        f = shard_map(lambda a: jax.lax.psum(a, "x"), mesh=mesh,
+                      in_specs=P(), out_specs=P(), axis_names={"x"},
+                      check_vma=False)
         txt = jax.jit(f).lower(
             jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile().as_text()
         st = collective_bytes(txt)

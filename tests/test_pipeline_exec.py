@@ -56,7 +56,9 @@ def test_sl_executor_trains(sl_setup):
     batch = {k: jnp.asarray(v)
              for k, v in next(classification_batches(batch=16, seed=0)).items()}
     # overfit one batch: monotone-ish loss decrease is guaranteed
-    losses = [ex.train_round(batch, lr=0.05) for _ in range(3)]
+    # (lr retuned for the He-gain VGG init — 0.05 overshoots with
+    # properly-scaled gradients)
+    losses = [ex.train_round(batch, lr=0.01) for _ in range(3)]
     assert losses[-1] < losses[0]
     # the sim clock advances by the plan latency per round
     assert ex.simulated_time == pytest.approx(3 * plan.L_t)
@@ -69,7 +71,7 @@ def test_sl_executor_with_compression(sl_setup):
                                hooks=make_link_hooks("int8"))
     batch = {k: jnp.asarray(v)
              for k, v in next(classification_batches(batch=16, seed=1)).items()}
-    losses = [ex.train_round(batch, lr=0.05) for _ in range(3)]
+    losses = [ex.train_round(batch, lr=0.01) for _ in range(3)]
     assert losses[-1] < losses[0]          # int8 links don't break training
 
 

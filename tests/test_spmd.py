@@ -27,13 +27,6 @@ def _run(code: str, devices: int = 4):
         (r.stdout[-2000:], r.stderr[-3000:])
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="seed debt (jax 0.4.37): the subprocess uses "
-           "jax.sharding.AxisType / jax.set_mesh / "
-           "jax.make_mesh(axis_types=...), all jax>=0.6 APIs absent in "
-           "0.4.37 — AttributeError before the SPMD behavior under test "
-           "runs")
 def test_pipeline_loss_and_grads_match_plain():
     _run("""
         import jax, jax.numpy as jnp, dataclasses
@@ -48,10 +41,11 @@ def test_pipeline_loss_and_grads_match_plain():
         params = api.init(rng)
         batch = {"tokens": jax.random.randint(rng, (8, 16), 0, cfg.vocab),
                  "labels": jax.random.randint(rng, (8, 16), 0, cfg.vocab)}
-        mesh = jax.make_mesh((2, 2), ("data", "stage"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.compat import AxisType, make_mesh, set_mesh
+        mesh = make_mesh((2, 2), ("data", "stage"),
+                         axis_types=(AxisType.Auto,) * 2)
         pcfg = PipelineConfig(num_stages=2, num_microbatches=4)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             ploss = make_pipelined_loss(cfg, mesh, pcfg)
             lp = float(jax.jit(ploss)(params, batch))
             gp = jax.jit(jax.grad(ploss))(params, batch)
@@ -82,13 +76,6 @@ def test_planner_drives_pipeline_config():
     """, devices=1)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="seed debt (jax 0.4.37): the subprocess uses "
-           "jax.sharding.AxisType / jax.set_mesh / "
-           "jax.make_mesh(axis_types=...), all jax>=0.6 APIs absent in "
-           "0.4.37 — AttributeError before the SPMD behavior under test "
-           "runs")
 def test_checkpoint_reshards_across_meshes():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
@@ -96,13 +83,14 @@ def test_checkpoint_reshards_across_meshes():
         from repro.checkpoint import save_checkpoint, restore_checkpoint
         import tempfile, os
         d = tempfile.mkdtemp()
-        mesh4 = jax.make_mesh((4,), ("model",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.compat import AxisType, make_mesh
+        mesh4 = make_mesh((4,), ("model",),
+                          axis_types=(AxisType.Auto,))
         x = jax.device_put(jnp.arange(32.0).reshape(8, 4),
                            NamedSharding(mesh4, P("model", None)))
         save_checkpoint(d, 0, {"x": x})
-        mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh2 = make_mesh((2, 2), ("data", "model"),
+                          axis_types=(AxisType.Auto,) * 2)
         sh = {"x": NamedSharding(mesh2, P(None, "model"))}
         restored, _ = restore_checkpoint(
             d, 0, jax.eval_shape(lambda: {"x": jnp.zeros((8, 4))}),
@@ -114,13 +102,6 @@ def test_checkpoint_reshards_across_meshes():
     """)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="seed debt (jax 0.4.37): the subprocess uses "
-           "jax.sharding.AxisType / jax.set_mesh / "
-           "jax.make_mesh(axis_types=...), all jax>=0.6 APIs absent in "
-           "0.4.37 — AttributeError before the SPMD behavior under test "
-           "runs")
 def test_small_mesh_train_step_lowers_with_production_rules():
     """8-device (2 data x 4 model) lowering of the full train_step using
     the same sharding rules as the 512-device dry-run."""
@@ -133,8 +114,9 @@ def test_small_mesh_train_step_lowers_with_production_rules():
         from repro.optim import get_optimizer
         import dataclasses
         cfg = get_config("qwen3-0.6b", reduced=True)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.compat import AxisType, make_mesh, set_mesh
+        mesh = make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
         policy = ShardingPolicy()
         pshapes = param_specs(cfg)
         psh = param_sharding_tree(cfg, mesh, pshapes, policy)
@@ -148,7 +130,7 @@ def test_small_mesh_train_step_lowers_with_production_rules():
         step = make_train_step(cfg, opt, 2)
         jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
                          out_shardings=(psh, osh, None))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             compiled = jitted.lower(pshapes, oshapes, bshapes).compile()
         assert compiled.memory_analysis().temp_size_in_bytes > 0
         print("PASS")
