@@ -8,7 +8,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify verify-ci verify-docs test dev-deps sim-check bench \
-        bench-planner bench-costmodel bench-fig6b bench-sweep example-sim
+        bench-planner bench-costmodel bench-sim bench-fig6b bench-sweep \
+        example-sim
 
 verify:
 	$(PYTHON) -m pytest -x -q
@@ -21,6 +22,7 @@ verify-ci: verify
 DOCTEST_MODULES := \
   src/repro/sim/engine.py src/repro/sim/events.py src/repro/sim/policies.py \
   src/repro/sim/scenario.py src/repro/sim/validate.py \
+  src/repro/sim/advance.py \
   src/repro/core/bcd.py src/repro/core/cost_model.py \
   src/repro/core/microbatch.py \
   src/repro/pipeline/schedule.py
@@ -51,7 +53,12 @@ bench-planner:
 bench-costmodel:
 	$(PYTHON) -m benchmarks.bench_costmodel
 
-bench: bench-planner bench-costmodel bench-fig6b bench-sweep
+# trace-aware engine scaling + sim-in-the-loop solve overhead;
+# rewrites the repo-root BENCH_sim.json trajectory file
+bench-sim:
+	$(PYTHON) -m benchmarks.bench_sim
+
+bench: bench-planner bench-costmodel bench-sim bench-fig6b bench-sweep
 
 bench-fig6b:
 	$(PYTHON) -m benchmarks.fig6b_traces

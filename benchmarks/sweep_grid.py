@@ -67,15 +67,22 @@ def run_grid(topologies=TOPOLOGIES, cvs=(0.0, 0.1, 0.3), policies=POLICIES,
                     rep = simulate_plan(prof, net, plan.solution, plan.b,
                                         B=plan.B, scenario=scen, policy=pol,
                                         engine="auto")
-                rows.append([topo, cv, pol, rep.engine, plan.b,
-                             rep.num_microbatches,
+                rows.append([topo, cv, pol, rep.engine, rep.engine_reason,
+                             plan.b, rep.num_microbatches,
                              round(rep.T_f, 5), round(rep.T_i, 5),
                              round(rep.L_t, 5),
                              round(rep.L_t / plan.L_t, 4),
                              round(t.seconds, 5)])
     emit("sweep_grid", rows,
-         ["topology", "cv", "policy", "engine", "b", "num_microbatches",
-          "T_f_s", "T_i_s", "L_t_s", "vs_planned", "wall_s"])
+         ["topology", "cv", "policy", "engine", "engine_reason", "b",
+          "num_microbatches", "T_f_s", "T_i_s", "L_t_s", "vs_planned",
+          "wall_s"])
+    # ISSUE 5: the fluctuation (cv > 0) cells must run vectorized now that
+    # the batched advancement splits at trace breakpoints — a cell quietly
+    # landing back on the heap is a coverage regression
+    fluct = [r for r in rows if r[1] > 0]
+    assert all(r[3] == "vectorized" for r in fluct), \
+        [(r[0], r[1], r[2], r[4]) for r in fluct if r[3] != "vectorized"]
     return rows
 
 

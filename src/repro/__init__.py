@@ -24,18 +24,19 @@ _SIM_EXPORTS = frozenset({
     "resolve_policy",
     "activation_occupancy", "stage_activation_highwater",
     "PipelineSimulator", "SimReport", "build_tasks", "build_visit_table",
-    "simulate_plan", "vectorizable",
+    "simulate_plan", "simulate_plans", "vectorizable",
     "SegmentReport", "ReplanSimReport", "simulate_with_replanning",
     "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
-    "random_chain_solution", "random_instance",
+    "random_chain_solution", "random_instance", "random_reentrant_solution",
 })
 
 # the cost-model seam (ISSUE 4): mirrored from ``repro.core.cost_model``'s
 # ``__all__`` — the same sync contract as _SIM_EXPORTS, same test.
 _COST_MODEL_EXPORTS = frozenset({
     "CostModel", "ClosedForm", "SimMakespan", "StageClaim",
-    "stage_memory_claims", "node_budget_windows", "budget_feasible",
-    "resolve_cost_model",
+    "stage_memory_claims", "node_budget_windows",
+    "node_budget_windows_many", "budget_feasible", "resolve_cost_model",
+    "memoized_cost_model",
 })
 
 __all__ = sorted(_SUBMODULES | _SIM_EXPORTS | _COST_MODEL_EXPORTS)

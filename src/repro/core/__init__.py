@@ -17,7 +17,8 @@ from .shortest_path import (DEFAULT_SOLVER, MSPResult, Planner, solve_msp,
                             brute_force_msp, enumerate_solutions)
 from .cost_model import (CostModel, ClosedForm, SimMakespan, StageClaim,
                          stage_memory_claims, node_budget_windows,
-                         budget_feasible, resolve_cost_model)
+                         node_budget_windows_many, budget_feasible,
+                         resolve_cost_model, memoized_cost_model)
 from .microbatch import (MicrobatchResult, optimal_microbatch,
                          exhaustive_microbatch, feasibility_box)
 from .bcd import Plan, bcd_solve, exhaustive_joint
@@ -38,7 +39,8 @@ __all__ = [
     "solve_msp", "brute_force_msp",
     "enumerate_solutions", "CostModel", "ClosedForm", "SimMakespan",
     "StageClaim", "stage_memory_claims", "node_budget_windows",
-    "budget_feasible", "resolve_cost_model", "MicrobatchResult",
+    "node_budget_windows_many", "budget_feasible", "resolve_cost_model",
+    "memoized_cost_model", "MicrobatchResult",
     "optimal_microbatch",
     "exhaustive_microbatch", "feasibility_box", "Plan", "bcd_solve",
     "exhaustive_joint", "rc_op", "rp_oc", "no_pipeline", "ours",

@@ -42,13 +42,14 @@ import dataclasses
 import math
 
 from . import latency as L
-from .latency import SplitSolution, memory_split
+from .latency import SplitSolution, memory_split, memory_split_per_sample
 from .network import EdgeNetwork
 from .profiles import ModelProfile
 
 __all__ = ["CostModel", "ClosedForm", "SimMakespan", "StageClaim",
-           "stage_memory_claims", "node_budget_windows", "budget_feasible",
-           "resolve_cost_model"]
+           "stage_memory_claims", "node_budget_windows",
+           "node_budget_windows_many", "budget_feasible",
+           "resolve_cost_model", "memoized_cost_model"]
 
 
 # ---------------------------------------------------------------------------
@@ -114,6 +115,48 @@ def node_budget_windows(profile: ModelProfile, net: EdgeNetwork,
     return windows
 
 
+def node_budget_windows_many(profile: ModelProfile, net: EdgeNetwork,
+                             sol: SplitSolution, bs,
+                             memory_model: str = "refined") -> list:
+    """:func:`node_budget_windows` for a whole range of micro-batch sizes.
+
+    The Eq. (11) cumulative lookups are b-independent
+    (``latency.memory_split_per_sample``); only the effective-batch
+    multiplier varies, so one claims pass serves every ``b`` — the batched
+    counterpart a micro-batch refinement sweep calls once instead of
+    re-deriving the claims per candidate.  Per-``b`` results are
+    float-identical to the one-at-a-time function (same multiplies, same
+    accumulation order; asserted in tests).
+    """
+    import numpy as np
+    segs = list(sol.segments())
+    per = [(node, *memory_split_per_sample(profile, lo, hi, memory_model))
+           for _, lo, hi, node in segs]
+    M = net.num_clients
+    bs = list(bs)
+    b_arr = np.asarray(bs, dtype=np.intp)
+    share = b_arr - (M - 1) * (b_arr // M)        # client_max_share, batched
+    static_n: dict = {}
+    act_n: dict = {}
+    for node, static, per_sample in per:
+        eff = share if node == 0 else b_arr
+        static_n[node] = static_n.get(node, 0.0) + static
+        act_n[node] = act_n.get(node, 0.0) + eff * per_sample
+    cols = []
+    for node, _, _ in per:
+        free = net.nodes[node].mem - static_n[node]
+        act = act_n[node]
+        ws: list = [None] * len(bs)
+        for i in range(len(bs)):
+            a = float(act[i])
+            if a <= 0.0:
+                ws[i] = None if free >= 0.0 else 0
+            else:
+                ws[i] = max(0, int(math.floor(free / a)))
+        cols.append(ws)
+    return [[col[i] for col in cols] for i in range(len(bs))]
+
+
 def budget_feasible(profile: ModelProfile, net: EdgeNetwork,
                     sol: SplitSolution, b: int,
                     memory_model: str = "refined") -> bool:
@@ -147,6 +190,25 @@ class CostModel:
     def memory_feasible(self, profile: ModelProfile, net: EdgeNetwork,
                         sol: SplitSolution, b: int) -> bool:
         raise NotImplementedError
+
+    # -- batched candidate scoring ------------------------------------------
+    def evaluate_many(self, profile: ModelProfile, net: EdgeNetwork,
+                      cands, B: int) -> list:
+        """Objectives for many candidate ``(sol, b)`` plans at once —
+        identical to looping :meth:`evaluate` (asserted in tests), which is
+        exactly what this base implementation does.  Models with a batched
+        fast path (``SimMakespan`` via ``sim.simulate_plans``'s stacked
+        plan axis) override it; consumers — ``exhaustive_microbatch``'s
+        refinement sweep, ``exhaustive_joint``'s iterate selection — call
+        it instead of per-candidate ``evaluate``."""
+        return [self.evaluate(profile, net, sol, b, B) for sol, b in cands]
+
+    def memory_feasible_many(self, profile: ModelProfile, net: EdgeNetwork,
+                             sol: SplitSolution, bs) -> list:
+        """:meth:`memory_feasible` over a range of ``b`` (batched where the
+        model supports it)."""
+        return [self.memory_feasible(profile, net, sol, b) for b in bs]
+
 
 class ClosedForm(CostModel):
     """The paper's Eqs. (12)-(14) objective with the Eq. (11)/C7-C8 memory
@@ -211,12 +273,130 @@ class SimMakespan(CostModel):
                             engine=self.engine)
         return rep.L_t
 
+    def evaluate_many(self, profile, net, cands, B) -> list:
+        """Batched scoring: one ``sim.simulate_plans`` call for every
+        memory-feasible candidate — refinement sweeps over ``b`` ride the
+        engine's stacked plan axis instead of paying per-call dispatch.
+        Results are identical to looping :meth:`evaluate`."""
+        from repro.sim.engine import simulate_plans  # deferred: no hard dep
+        out = [math.inf] * len(cands)
+        by_sol: dict = {}
+        for i, (sol, b) in enumerate(cands):
+            if b >= 1:
+                by_sol.setdefault((sol.cuts, sol.placement), []).append(i)
+        live = []
+        for idxs in by_sol.values():
+            sol = cands[idxs[0]][0]
+            oks = self.memory_feasible_many(profile, net, sol,
+                                            [cands[i][1] for i in idxs])
+            live.extend(i for i, ok in zip(idxs, oks) if ok)
+        live.sort()
+        if not live:
+            return out
+        reps = simulate_plans(profile, net, [cands[i] for i in live], B=B,
+                              policy=self.policy, engine=self.engine)
+        for i, rep in zip(live, reps):
+            out[i] = rep.L_t
+        return out
+
     def memory_feasible(self, profile, net, sol, b) -> bool:
         return budget_feasible(profile, net, sol, b, self.memory_model)
+
+    def memory_feasible_many(self, profile, net, sol, bs) -> list:
+        wss = node_budget_windows_many(profile, net, sol, bs,
+                                       self.memory_model)
+        return [all(w is None or w >= 1 for w in ws) for ws in wss]
 
     def __repr__(self):
         return (f"SimMakespan(policy={getattr(self.policy, 'name', self.policy)!r}, "
                 f"engine={self.engine!r}, memory_model={self.memory_model!r})")
+
+
+class _MemoCostModel(CostModel):
+    """Per-solve memoization around another cost model.
+
+    ``bcd_solve`` / ``exhaustive_joint`` wrap their (non-``ClosedForm``)
+    model for the duration of one solve: the warm-start seed score, the
+    per-iteration iterate scores (which repeat once the alternation
+    stabilizes), and the two micro-batch refinement sweeps all land on the
+    same ``(cuts, placement, b)`` keys, so expensive simulated objectives
+    are computed once.  The cache is scoped to one ``(profile, net)`` —
+    that is why this is a per-solve wrapper and not state on the model
+    itself (the elastic coordinator re-solves on *mutated* networks, where
+    stale makespans would be silently wrong).
+    """
+
+    def __init__(self, inner: CostModel):
+        self.inner = inner
+        self._eval: dict = {}
+        self._mem: dict = {}
+
+    @property
+    def name(self):                      # type: ignore[override]
+        return self.inner.name
+
+    def evaluate(self, profile, net, sol, b, B) -> float:
+        key = (sol.cuts, sol.placement, b, B)
+        got = self._eval.get(key)
+        if got is None:
+            got = self._eval[key] = self.inner.evaluate(profile, net, sol,
+                                                        b, B)
+        return got
+
+    def evaluate_many(self, profile, net, cands, B) -> list:
+        out: list = [None] * len(cands)
+        miss = []
+        for i, (sol, b) in enumerate(cands):
+            got = self._eval.get((sol.cuts, sol.placement, b, B))
+            if got is None:
+                miss.append(i)
+            else:
+                out[i] = got
+        if miss:
+            vals = self.inner.evaluate_many(profile, net,
+                                            [cands[i] for i in miss], B)
+            for i, val in zip(miss, vals):
+                sol, b = cands[i]
+                self._eval[(sol.cuts, sol.placement, b, B)] = val
+                out[i] = val
+        return out
+
+    def memory_feasible(self, profile, net, sol, b) -> bool:
+        key = (sol.cuts, sol.placement, b)
+        got = self._mem.get(key)
+        if got is None:
+            got = self._mem[key] = self.inner.memory_feasible(profile, net,
+                                                              sol, b)
+        return got
+
+    def memory_feasible_many(self, profile, net, sol, bs) -> list:
+        out: list = [None] * len(bs)
+        miss = []
+        for i, b in enumerate(bs):
+            got = self._mem.get((sol.cuts, sol.placement, b))
+            if got is None:
+                miss.append(i)
+            else:
+                out[i] = got
+        if miss:
+            vals = self.inner.memory_feasible_many(
+                profile, net, sol, [bs[i] for i in miss])
+            for i, val in zip(miss, vals):
+                self._mem[(sol.cuts, sol.placement, bs[i])] = val
+                out[i] = val
+        return out
+
+    def __repr__(self):
+        return f"_MemoCostModel({self.inner!r})"
+
+
+def memoized_cost_model(cm: CostModel) -> CostModel:
+    """Wrap ``cm`` in a fresh per-solve memo (idempotent; ``ClosedForm`` is
+    returned as-is — its evaluations are cheaper than the cache lookups,
+    and the default path stays bit-identical and untouched)."""
+    if isinstance(cm, (ClosedForm, _MemoCostModel)):
+        return cm
+    return _MemoCostModel(cm)
 
 
 def resolve_cost_model(cost_model, memory_model: str = "paper") -> CostModel:

@@ -69,9 +69,12 @@ def evaluate_under_fluctuation(profile: ModelProfile, net: EdgeNetwork,
             raise ValueError("dt and horizon must be positive")
         # degradation baseline: the *simulated* deterministic run, so plans
         # with co-located submodels (where FIFO execution deviates from the
-        # idealized Eq. 14) don't report spurious degradation at cv = 0
+        # idealized Eq. 14) don't report spurious degradation at cv = 0.
+        # engine="auto": since the trace-aware vectorized engine (ISSUE 5),
+        # every draw leaves the heap — the segmented scans make the whole
+        # Fig. 6b sweep batched.
         baseline = simulate_plan(profile, net, plan.solution, plan.b,
-                                 B=plan.B).L_t
+                                 B=plan.B, engine="auto").L_t
         for d in range(draws):
             r = np.random.default_rng((seed, d))
             if trace_model == "piecewise":
@@ -83,7 +86,7 @@ def evaluate_under_fluctuation(profile: ModelProfile, net: EdgeNetwork,
             else:
                 raise ValueError(f"unknown trace_model {trace_model!r}")
             rep = simulate_plan(profile, net, plan.solution, plan.b,
-                                B=plan.B, scenario=scen)
+                                B=plan.B, scenario=scen, engine="auto")
             lats.append(rep.L_t)
     else:
         raise ValueError(f"unknown mode {mode!r}")

@@ -187,13 +187,24 @@ def memory_split(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,
     admission windows (``repro.core.cost_model.stage_memory_claims``), and
     ``pipeline.schedule.memory_highwater``.
     """
+    static, per_sample = memory_split_per_sample(profile, lo, hi, model)
     eff_b = client_max_share(b, net.num_clients) if node == 0 else b
+    return static, eff_b * per_sample
+
+
+def memory_split_per_sample(profile: ModelProfile, lo: int, hi: int,
+                            model: str = "paper") -> tuple:
+    """The b-independent core of :func:`memory_split`:
+    ``(static_bytes, act_bytes_per_sample)`` — the act term scales by the
+    effective micro-batch size.  Factored out so batched sweeps (the
+    memory-budgeted windows for a whole range of ``b``) pay the cumulative
+    lookups once."""
     if model == "paper":
-        return 0.0, eff_b * profile.seg_mem_per_sample(lo, hi)
+        return 0.0, profile.seg_mem_per_sample(lo, hi)
     act = (profile.act_cum() + profile.grad_cum())
     static = (profile.param_cum() + profile.opt_cum())
     seg = lambda c: float(c[hi - 1] - (c[lo - 1] if lo > 0 else 0.0))
-    return seg(static), eff_b * seg(act)
+    return seg(static), seg(act)
 
 
 def memory_bytes(profile: ModelProfile, net: EdgeNetwork, lo: int, hi: int,

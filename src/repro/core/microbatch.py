@@ -214,15 +214,24 @@ def exhaustive_microbatch(profile: ModelProfile, net: EdgeNetwork,
     """
     cm = resolve_cost_model(cost_model, memory_model)
     best_b, best_val = 0, math.inf
-    for b in range(1, B + 1):
-        if not cm.memory_feasible(profile, net, sol, b):
-            continue
-        if T_1 is not None:
+    if T_1 is not None:
+        for b in range(1, B + 1):
+            if not cm.memory_feasible(profile, net, sol, b):
+                continue
             if L.pipeline_interval(profile, net, sol, b) > T_1 * (1 + 1e-9):
                 continue
             val = _objective(profile, net, sol, b, B, T_1)
-        else:
-            val = cm.evaluate(profile, net, sol, b, B)
+            if val < best_val:
+                best_val, best_b = val, b
+        return best_b, best_val
+    # cost-model objective: batch the whole sweep — feasibility in one
+    # claims pass, the survivors through evaluate_many (SimMakespan rides
+    # the engine's stacked plan axis); identical results to the per-b loop
+    bs = list(range(1, B + 1))
+    feas = [b for b, ok in zip(bs, cm.memory_feasible_many(profile, net,
+                                                           sol, bs)) if ok]
+    vals = cm.evaluate_many(profile, net, [(sol, b) for b in feas], B)
+    for b, val in zip(feas, vals):
         if val < best_val:
             best_val, best_b = val, b
     return best_b, best_val

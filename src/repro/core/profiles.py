@@ -64,23 +64,34 @@ class ModelProfile:
         return len(self.fp_work)
 
     # ---- cumulative views (paper's w_i, rho_i, beta_i, sigma~_i, phi~_i) ----
+    # Lazily cached on the (frozen) instance: the planner's inner loops ask
+    # for the same cumulative arrays thousands of times per solve, and the
+    # cumsum was the hot path.  ``dataclasses.replace`` builds a fresh
+    # instance, so derived profiles never see a stale cache.
+    def _cum(self, key: str, source) -> np.ndarray:
+        got = self.__dict__.get(key)
+        if got is None:
+            got = np.cumsum(source)
+            object.__setattr__(self, key, got)
+        return got
+
     def w_cum(self) -> np.ndarray:
-        return np.cumsum(self.fp_work)
+        return self._cum("_w_cum", self.fp_work)
 
     def rho_cum(self) -> np.ndarray:
-        return np.cumsum(self.bp_work)
+        return self._cum("_rho_cum", self.bp_work)
 
     def act_cum(self) -> np.ndarray:        # phi~_i
-        return np.cumsum(self.act_bytes)
+        return self._cum("_act_cum", self.act_bytes)
 
     def grad_cum(self) -> np.ndarray:       # phi'~_i
-        return np.cumsum(self.grad_bytes)
+        return self._cum("_grad_cum", self.grad_bytes)
 
     def param_cum(self) -> np.ndarray:      # beta_i
-        return np.cumsum(self.param_bytes)
+        return self._cum("_param_cum", self.param_bytes)
 
     def opt_cum(self) -> np.ndarray:        # sigma~_i
-        return np.cumsum(self.opt_bytes)
+        return self._cum("_opt_cum", self.opt_bytes)
 
     # ---- submodel (segment) quantities --------------------------------------
     def seg_fp(self, lo: int, hi: int) -> float:
@@ -98,7 +109,11 @@ class ModelProfile:
 
     def seg_mem_per_sample(self, lo: int, hi: int) -> float:
         """Eq. (11) inner sum over the segment: phi~ + phi'~ + sigma~ + beta."""
-        tot = (self.act_cum() + self.grad_cum() + self.opt_cum() + self.param_cum())
+        tot = self.__dict__.get("_mem_cum")
+        if tot is None:
+            tot = (self.act_cum() + self.grad_cum() + self.opt_cum()
+                   + self.param_cum())
+            object.__setattr__(self, "_mem_cum", tot)
         return float(tot[hi - 1] - (tot[lo - 1] if lo > 0 else 0.0))
 
     def cut_act_bytes(self, cut: int) -> float:

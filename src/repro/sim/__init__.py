@@ -27,11 +27,12 @@ from .policies import (AdmissionPolicy, FIFO, OneFOneB, MemoryBudgeted,
                        resolve_policy, activation_occupancy,
                        stage_activation_highwater)
 from .engine import (PipelineSimulator, SimReport, build_tasks,
-                     build_visit_table, simulate_plan, vectorizable,
-                     SegmentReport, ReplanSimReport, simulate_with_replanning)
+                     build_visit_table, simulate_plan, simulate_plans,
+                     vectorizable, SegmentReport, ReplanSimReport,
+                     simulate_with_replanning)
 from .validate import (CrossCheck, cross_validate, cross_validate_many,
                        compare_engines, random_chain_solution,
-                       random_instance)
+                       random_instance, random_reentrant_solution)
 
 __all__ = [
     "Task", "Timeline", "TraceRecord", "VisitTable", "write_chrome_trace",
@@ -41,8 +42,8 @@ __all__ = [
     "AdmissionPolicy", "FIFO", "OneFOneB", "MemoryBudgeted", "resolve_policy",
     "activation_occupancy", "stage_activation_highwater",
     "PipelineSimulator", "SimReport", "build_tasks", "build_visit_table",
-    "simulate_plan", "vectorizable",
+    "simulate_plan", "simulate_plans", "vectorizable",
     "SegmentReport", "ReplanSimReport", "simulate_with_replanning",
     "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
-    "random_chain_solution", "random_instance",
+    "random_chain_solution", "random_instance", "random_reentrant_solution",
 ]

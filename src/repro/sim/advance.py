@@ -1,0 +1,587 @@
+"""Heap-free advancement kernels for the vectorized engine.
+
+The vectorized engine executes a :class:`~repro.sim.events.VisitTable` — Q
+identical micro-batch chains over R visits — without a priority queue.  PR 2
+covered the constant-capacity, distinct-placement case with closed-form
+prefix-max scans; this module generalizes the batched max-plus advancement
+along two axes:
+
+**Piecewise-constant traces (segmented scans).**  On a FIFO resource a task
+of ``work`` units started at ``t`` finishes at ``finish(W(t) + work)``,
+where ``W`` is the trace's cumulative-work function and ``finish`` its
+inverse (both precomputed as breakpoint prefix arrays on
+:class:`~repro.sim.scenario.PiecewiseTrace`).  Back-to-back service
+therefore *chains in work space*: with arrivals ``a[m]`` at a visit of
+per-micro-batch work ``w``,
+
+    target[m] = max(W(a[m]), target[m-1]) + w
+              = (m+1) w + cummax(W(a[m]) - m w)
+
+— the same prefix-max scan as the constant case, run on cumulative work
+instead of time, with ``ends = finish(target)`` mapping back through the
+breakpoints.  One ``np.searchsorted`` per visit replaces the event engine's
+per-task trace walk.  (A rate-independent ``fixed`` latency breaks the
+work-space chaining on a *varying* trace — those rare columns fall back to
+an exact scalar sweep.)
+
+**Reentrant plans (merged-scan fixpoint).**  When a resource hosts several
+visits (co-located submodels), FIFO service interleaves the visit streams
+by arrival time, so no single pass is exact.  But the interleave is
+constrained: within a stream, service stays in micro-batch order, and a
+later micro-batch's *deeper* visit can never overtake an earlier
+micro-batch's shallower visit on the same resource.  The kernel therefore
+iterates to the unique self-consistent schedule: per sweep, each resource
+re-merges its visit streams by current arrival estimates
+(:meth:`VisitTable.resource_visits` supplies the per-resource visit
+ordering), serves the merged sequence with one vectorized scan (time-space
+for constant capacity, work-space for traces), and the sweep repeats until
+the end-time matrix reproduces itself exactly.  Admission-window feedback
+edges ride along as extra ready-time terms.  Starting from the relaxed
+(contention-free) lower bound, convergence typically takes a handful of
+sweeps; a non-converging instance is reported so the caller can fall back
+to the event engine.
+
+**Stacked plan axis.**  ``stacked_fifo`` / ``stacked_windowed`` run *many*
+candidate plans at once by adding a leading plan axis to the constant-
+capacity scans (mirroring the threshold-batched planner kernel) — the
+``CostModel.evaluate_many`` fast path for micro-batch refinement sweeps.
+Visit axes are padded with zero-duration visits (pass-through under the
+prefix-max recurrences), micro-batch axes to the largest plan.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["VisitServe", "column_advance", "fifo_pass", "windowed_pass",
+           "fixpoint_advance", "stacked_fifo", "stacked_windowed"]
+
+
+class VisitServe:
+    """Per-visit serving model: when does work started at ``t`` finish.
+
+    ``const_d`` is the total service duration when it does not depend on
+    the start time — constant-capacity trace, or zero work (the duration
+    is then the rate-independent ``fixed`` seconds alone).  Otherwise the
+    piecewise trace is served through its cumulative-work arrays.
+    """
+
+    __slots__ = ("trace", "work", "fixed", "const_d")
+
+    def __init__(self, trace, work: float, fixed: float):
+        self.work = float(work)
+        self.fixed = float(fixed)
+        if self.work <= 0.0:
+            self.const_d = self.fixed
+            self.trace = None
+        elif trace.is_constant():
+            v = trace.values[0]
+            self.const_d = self.fixed + (self.work / v if v > 0.0
+                                         else math.inf)
+            self.trace = None
+        else:
+            self.const_d = None
+            self.trace = trace
+
+    def finite(self) -> bool:
+        """Every service completes in finite time from any start."""
+        if self.const_d is not None:
+            return math.isfinite(self.const_d)
+        return self.trace.drains()
+
+    def end_at(self, t: float) -> float:
+        """Scalar service end for a task starting (exactly) at ``t``."""
+        if self.const_d is not None:
+            return t + self.const_d
+        tr = self.trace
+        return tr.finish_time(tr.work_done(t + self.fixed) + self.work)
+
+    def ends_at(self, t: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`end_at` (no queueing — starts are given)."""
+        if self.const_d is not None:
+            return t + self.const_d
+        tr = self.trace
+        return tr.finish_many(tr.work_done_many(t + self.fixed) + self.work)
+
+
+def _shift_starts(a: np.ndarray, ends: np.ndarray) -> np.ndarray:
+    """Service starts for FIFO back-to-back service: max(arrival, previous
+    completion on the resource)."""
+    s = a.copy()
+    if len(s) > 1:
+        np.maximum(s[1:], ends[:-1], out=s[1:])
+    return s
+
+
+def column_advance(serve: VisitServe, a: np.ndarray):
+    """FIFO service of one dedicated visit: arrivals ``a`` (one per
+    micro-batch, in micro-batch order) -> ``(starts, ends)``.
+
+    Constant durations use the PR 2 closed-form time-space scan verbatim;
+    varying traces with no fixed latency use the work-space segmented scan
+    (module docstring); the remaining corner (varying trace AND fixed > 0)
+    is an exact scalar sweep.
+    """
+    Q = len(a)
+    if serve.const_d is not None:
+        dv = serve.const_d
+        idx = _idx(Q)
+        ends = (idx + 1.0) * dv + np.maximum.accumulate(a - idx * dv)
+    elif serve.fixed == 0.0:
+        w = serve.work
+        idx = _idx(Q)
+        A = serve.trace.work_done_many(a)
+        target = (idx + 1.0) * w + np.maximum.accumulate(A - idx * w)
+        ends = serve.trace.finish_many(target)
+    else:
+        ends = np.empty(Q)
+        prev = -math.inf
+        for m in range(Q):
+            s = a[m] if a[m] > prev else prev
+            prev = ends[m] = serve.end_at(s)
+    return _shift_starts(a, ends), ends
+
+
+def fifo_pass(serves, Q: int, t_start: float):
+    """Single exact pass for non-reentrant FIFO admission (any traces):
+    chain-ordered column scans — visit ``v``'s arrivals are visit
+    ``v-1``'s completions."""
+    R = len(serves)
+    starts = np.empty((Q, R))
+    ends = np.empty((Q, R))
+    a = np.full(Q, float(t_start))
+    for v in range(R):
+        starts[:, v], ends[:, v] = column_advance(serves[v], a)
+        a = ends[:, v]
+    return starts, ends
+
+
+def _feedback_map(table, windows, Q: int) -> dict:
+    """``{fp_visit: (bp_visit, window)}`` for the admission windows that can
+    actually bind (``window < Q``)."""
+    out = {}
+    for j, w in enumerate(windows):
+        if w is not None and w < Q:
+            out[int(table.fp_visit[j])] = (int(table.bp_visit[j]), int(w))
+    return out
+
+
+def windowed_pass(serves, table, windows, Q: int, t_start: float):
+    """Single exact pass for non-reentrant *windowed* admission with
+    time-varying traces: micro-batch-major, so the window feedback
+    ``BP_j(m - w)  ->  FP_j(m)`` only ever reads earlier rows.  The chain
+    scan along a row mixes per-visit traces, so it is a scalar sweep —
+    exact, heap-free, O(Q R) trace lookups."""
+    R = len(serves)
+    fb_at = _feedback_map(table, windows, Q)
+    starts = np.empty((Q, R))
+    ends = np.empty((Q, R))
+    for m in range(Q):
+        chain = t_start
+        for v in range(R):
+            r = ends[m - 1, v] if m else t_start
+            fb = fb_at.get(v)
+            if fb is not None and m - fb[1] >= 0:
+                e_fb = ends[m - fb[1], fb[0]]
+                if e_fb > r:
+                    r = e_fb
+            s = chain if chain > r else r
+            e = serves[v].end_at(s)
+            starts[m, v] = s
+            ends[m, v] = e
+            chain = e
+    return starts, ends
+
+
+# ---------------------------------------------------------------------------
+# Reentrant plans: merged-scan fixpoint
+# ---------------------------------------------------------------------------
+
+#: small cache of float index vectors for the prefix scans
+_IDX: dict = {}
+
+
+def _idx(Q: int) -> np.ndarray:
+    got = _IDX.get(Q)
+    if got is None:
+        if len(_IDX) > 64:
+            _IDX.clear()
+        got = _IDX[Q] = np.arange(Q, dtype=float)
+    return got
+
+
+def _ready_col(v: int, ends: np.ndarray, Q: int, t_start: float,
+               fb_at: dict) -> np.ndarray:
+    """Ready times of visit ``v``'s tasks from the current end estimates:
+    chain predecessor completions, max'd with any window feedback."""
+    if v == 0:
+        a = np.full(Q, float(t_start))
+    else:
+        a = ends[:, v - 1].copy()
+    fb = fb_at.get(v)
+    if fb is not None:
+        bv, w = fb
+        np.maximum(a[w:], ends[:Q - w, bv], out=a[w:])
+    return a
+
+
+class _MergedGroup:
+    """Precomputed state for one reentrant resource's merged scan.
+
+    ``arr[i]`` (stream ``i`` = visit ``vs[i]``) holds ready times; tasks are
+    ordered by (effective arrival, micro-batch, stream position) — the
+    within-stream cummax keeps each stream in micro-batch order even while
+    the surrounding fixpoint is still settling — then served back-to-back
+    with one vectorized scan (time-space for constant capacity, work-space
+    for a shared trace, scalar for the fixed-latency-on-trace corner).
+    """
+
+    __slots__ = ("vs", "streams", "mbs", "pos", "kind", "d", "w", "trace",
+                 "sv", "last")
+
+    def __init__(self, vs, serves, Q):
+        self.vs = vs
+        k = len(vs)
+        self.streams = np.repeat(np.arange(k), Q)
+        self.mbs = np.tile(np.arange(Q), k)
+        self.pos = self.mbs * k + self.streams   # unique (m, stream) rank
+        sv = [serves[v] for v in vs]
+        self.sv = sv
+        self.trace = None
+        self.d = self.w = None
+        if all(s.const_d is not None for s in sv):
+            self.kind = "const"
+            self.d = np.array([s.const_d for s in sv])[self.streams]
+        elif all(s.fixed == 0.0 and s.work > 0.0 for s in sv):
+            self.kind = "work"
+            self.trace = next(s.trace for s in sv if s.trace is not None)
+            self.w = np.array([s.work for s in sv])[self.streams]
+        else:
+            self.kind = "scalar"
+        self.last = None
+
+    def advance(self, arr: np.ndarray, starts, ends, Q):
+        """One merged scan from ready times ``arr``; writes the member
+        columns of ``starts``/``ends``.  Skips the sort + scan when the
+        ready times match the previous sweep exactly (outputs would too),
+        and reuses the previous sweep's service order while it is still
+        consistent with the new arrivals — orders settle sweeps before
+        the times do."""
+        if self.last is not None and np.array_equal(arr, self.last[0]):
+            return
+        cached = None if self.last is None else self.last[1]
+        eff = np.maximum.accumulate(arr, axis=1)   # within-stream FIFO order
+        flat = eff.ravel()                         # index = i * Q + m
+        order = None
+        if cached is not None:
+            a_s = flat[cached]
+            d = np.diff(a_s)
+            tie = np.diff(self.pos[cached])
+            if bool(np.all((d > 0) | ((d == 0) & (tie > 0)))):
+                order = cached
+        if order is None:
+            order = np.lexsort((self.streams, self.mbs, flat))
+            a_s = flat[order]
+        self.last = (arr, order)
+        if self.kind == "const":
+            d = self.d[order]
+            C = np.cumsum(d)
+            ends_s = C + np.maximum.accumulate(a_s - (C - d))
+        elif self.kind == "work":
+            w = self.w[order]
+            C = np.cumsum(w)
+            tr = self.trace
+            target = C + np.maximum.accumulate(tr.work_done_many(a_s)
+                                               - (C - w))
+            ends_s = tr.finish_many(target)
+        else:
+            n = len(a_s)
+            ends_s = np.empty(n)
+            prev = -math.inf
+            st_order = self.streams[order]
+            for t in range(n):
+                s = a_s[t] if a_s[t] > prev else prev
+                prev = ends_s[t] = self.sv[st_order[t]].end_at(s)
+        starts_s = _shift_starts(a_s, ends_s)
+        n = len(flat)
+        st_flat = np.empty(n)
+        en_flat = np.empty(n)
+        st_flat[order] = starts_s
+        en_flat[order] = ends_s
+        for i, v in enumerate(self.vs):
+            starts[:, v] = st_flat[i * Q:(i + 1) * Q]
+            ends[:, v] = en_flat[i * Q:(i + 1) * Q]
+
+
+def fixpoint_advance(table, serves, windows, Q: int, t_start: float,
+                     max_sweeps: int | None = None):
+    """Exact schedule for reentrant tables: iterate merged-scan sweeps to
+    the self-consistent FIFO schedule.
+
+    Sweeps are chaotic Gauss-Seidel over the per-resource groups (sorted by
+    last visit, so a non-reentrant table degenerates to the exact
+    chain-ordered single pass); dirty-column tracking skips any group whose
+    inputs did not change last sweep, so late sweeps cost almost nothing.
+    Returns ``(starts, ends, sweeps)`` on convergence (every column
+    reproduced itself exactly), or ``None`` if the cap is hit — the caller
+    falls back to the event engine (``engine="auto"``) or raises
+    (``engine="vectorized"``).
+    """
+    R = len(serves)
+    fb_at = _feedback_map(table, windows, Q)
+    raw = sorted(table.resource_visits().values(), key=lambda vs: vs[-1])
+    groups = [(vs, _MergedGroup(vs, serves, Q) if len(vs) > 1 else None)
+              for vs in raw]
+    starts = np.empty((Q, R))
+    ends = np.full((Q, R), -math.inf)
+    # init: relaxed lower bound — every visit its own resource, window
+    # feedback reads -inf (absent) on this first chain-ordered pass
+    for v in range(R):
+        a = _ready_col(v, ends, Q, t_start, fb_at)
+        starts[:, v], ends[:, v] = column_advance(serves[v], a)
+    if max_sweeps is None:
+        max_sweeps = 2 * Q + 2 * R + 8
+    prev = np.empty_like(ends)
+    for sweep in range(1, max_sweeps + 1):
+        np.copyto(prev, ends)
+        for vs, grp in groups:
+            if grp is None:
+                v = vs[0]
+                a = _ready_col(v, ends, Q, t_start, fb_at)
+                starts[:, v], ends[:, v] = column_advance(serves[v], a)
+            else:
+                arr = np.empty((len(vs), Q))
+                for i, v in enumerate(vs):
+                    arr[i] = _ready_col(v, ends, Q, t_start, fb_at)
+                grp.advance(arr, starts, ends, Q)
+        if np.array_equal(ends, prev):
+            return starts, ends, sweep
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Stacked plan axis: many same-structure plans per fixpoint
+# ---------------------------------------------------------------------------
+
+def stack_eligible(serves) -> bool:
+    """True when every visit's serving model fits a stacked scan: constant
+    duration, or a trace with no fixed latency (the work-space scan).  The
+    per-plan scalar corner (fixed > 0 on a varying trace) stays unstacked."""
+    return all(s.const_d is not None
+               or (s.fixed == 0.0 and s.work > 0.0) for s in serves)
+
+
+def stacked_fixpoint(table, serves_list, windows_list, Qs, t_start: float,
+                     max_sweeps: int | None = None):
+    """Merged-scan fixpoint with a leading plan axis.
+
+    ``serves_list[p]`` are plan ``p``'s per-visit :class:`VisitServe` models
+    over ONE shared visit structure (identical ``table.resources`` — e.g. a
+    micro-batch refinement sweep: same split, different ``b``), and
+    ``windows_list[p]`` its admission windows.  All plans advance through
+    one set of (P, Q, R) numpy sweeps.  Shorter plans are padded to the
+    largest micro-batch count: padded tasks keep their real durations in
+    the *column* scans (trailing rows never influence earlier ones) but are
+    zeroed out in the *merged* scans, where a zero-duration task's
+    prefix-scan term is always dominated by its successor's — inert — so
+    each plan's rows stay bit-identical to its single-plan run.  Returns
+    per-plan ``(Q_p,)`` completion-time vectors of the last visit, or
+    ``None`` if some plan's fixpoint failed to converge.
+    """
+    P = len(serves_list)
+    R = len(table.resources)
+    # a reentrant resource whose visits MIX serving kinds (a traced visit
+    # co-located with a zero-work/constant one) needs the single-plan
+    # scalar merged scan — the stacked branches below pick one kind per
+    # group, so such structures are declined (per-plan fallback)
+    for vs in table.resource_visits().values():
+        if len(vs) > 1:
+            kinds = {serves_list[0][v].const_d is None for v in vs}
+            if len(kinds) != 1:
+                return None
+    Qs = list(Qs)
+    Q = max(Qs)
+    mcol = np.arange(Q)
+    d_vis = np.zeros((P, R))         # const total durations per (plan, visit)
+    w_vis = np.zeros((P, R))         # work units for work-space visits
+    use_work = np.zeros(R, dtype=bool)
+    traces = [None] * R
+    for v in range(R):
+        if serves_list[0][v].const_d is None:
+            use_work[v] = True
+            traces[v] = serves_list[0][v].trace
+            for p in range(P):
+                w_vis[p, v] = serves_list[p][v].work
+        else:
+            for p in range(P):
+                d_vis[p, v] = serves_list[p][v].const_d
+    pad = mcol[None, :] >= np.asarray(Qs)[:, None]          # (P, Q)
+    live = ~pad
+    # window feedback: same (fp, bp) visit pairs, per-plan windows
+    never = Q + 1
+    fb_at = {}
+    for j in range(table.num_stages):
+        ws = np.array([windows_list[p][j]
+                       if windows_list[p][j] is not None else never
+                       for p in range(P)], dtype=np.intp)
+        if (ws <= Q).any():
+            fb_at[int(table.fp_visit[j])] = (int(table.bp_visit[j]), ws)
+    p_col = np.arange(P)[:, None]
+
+    def ready(v, ends):
+        if v == 0:
+            a = np.full((P, Q), float(t_start))
+        else:
+            a = ends[:, :, v - 1].copy()
+        got = fb_at.get(v)
+        if got is not None:
+            bv, ws = got
+            src = mcol[None, :] - ws[:, None]               # (P, Q)
+            ok = src >= 0
+            vals = ends[p_col, np.where(ok, src, 0), bv]
+            np.maximum(a, np.where(ok, vals, -math.inf), out=a)
+        return a
+
+    idx = np.arange(Q, dtype=float)[None, :]
+
+    def column(v, a, ends):
+        # same per-plan arithmetic as column_advance, broadcast over plans
+        if use_work[v]:
+            w = w_vis[:, v:v + 1]
+            tr = traces[v]
+            A = tr.work_done_many(a)
+            target = (idx + 1.0) * w + np.maximum.accumulate(A - idx * w,
+                                                             axis=1)
+            ends[:, :, v] = tr.finish_many(target)
+        else:
+            d = d_vis[:, v:v + 1]
+            ends[:, :, v] = (idx + 1.0) * d + \
+                np.maximum.accumulate(a - idx * d, axis=1)
+
+    groups = sorted(table.resource_visits().values(), key=lambda vs: vs[-1])
+    merged = {}
+    for vs in groups:
+        if len(vs) < 2:
+            continue
+        k = len(vs)
+        # tie-break rank aligned with the micro-batch-major task flattening:
+        # equal arrivals order by micro-batch, then stream position — the
+        # same rule as the single-plan merged scan
+        pos = np.tile(np.arange(k * Q), P)
+        plan_key = np.repeat(np.arange(P), k * Q)
+        # per-task durations/works, micro-batch-major, padded tasks zeroed
+        # (inert in the scans)
+        src = w_vis if use_work[vs[0]] else d_vis
+        per = np.stack([src[:, v:v + 1] * live for v in vs],
+                       axis=2).reshape(P, Q * k)
+        merged[vs[-1]] = [vs, pos, plan_key, per, None]
+
+    def advance_group(grp, ends):
+        vs, pos, plan_key, per, last = grp
+        k = len(vs)
+        arr = np.empty((P, k, Q))
+        for i, v in enumerate(vs):
+            arr[:, i, :] = ready(v, ends)
+        if last is not None and np.array_equal(arr, last[0]):
+            return                   # inputs unchanged -> outputs unchanged
+        cached = None if last is None else last[1]
+        eff = np.maximum.accumulate(arr, axis=2)
+        # stream-major (k, Q) -> task-flat with micro-batch-major tie-break
+        flat = eff.transpose(0, 2, 1).reshape(P, k * Q)
+        order = None
+        if cached is not None:       # reuse the settled service order
+            a_s = flat.ravel()[cached].reshape(P, k * Q)
+            d = np.diff(a_s, axis=1)
+            tie = np.diff(pos[cached].reshape(P, k * Q), axis=1)
+            if bool(np.all((d > 0) | ((d == 0) & (tie > 0)))):
+                order = cached
+        if order is None:
+            order = np.lexsort((pos, flat.ravel(), plan_key))
+            a_s = flat.ravel()[order].reshape(P, k * Q)
+        grp[4] = (arr, order)
+        per_s = per.ravel()[order].reshape(P, k * Q)
+        C = np.cumsum(per_s, axis=1)
+        if use_work[vs[0]]:
+            tr = traces[vs[0]]
+            target = C + np.maximum.accumulate(
+                tr.work_done_many(a_s) - (C - per_s), axis=1)
+            e_s = np.where(per_s > 0.0, tr.finish_many(target), a_s)
+        else:
+            e_s = C + np.maximum.accumulate(a_s - (C - per_s), axis=1)
+        e_flat = np.empty(P * k * Q)
+        e_flat[order] = e_s.ravel()
+        e = e_flat.reshape(P, Q, k)
+        for i, v in enumerate(vs):
+            ends[:, :, v] = e[:, :, i]
+
+    ends = np.full((P, Q, R), -math.inf)
+    for v in range(R):                       # relaxed chain-ordered init
+        column(v, ready(v, ends), ends)
+    if max_sweeps is None:
+        max_sweeps = 2 * Q + 2 * R + 8
+    prev = np.empty_like(ends)
+    for _ in range(max_sweeps):
+        np.copyto(prev, ends)
+        for vs in groups:
+            m = merged.get(vs[-1]) if len(vs) > 1 else None
+            if m is None:
+                column(vs[0], ready(vs[0], ends), ends)
+            else:
+                advance_group(m, ends)
+        if np.array_equal(ends, prev):
+            return [ends[p, :Qs[p], -1].copy() for p in range(P)]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Stacked plan axis: many constant-capacity plans per scan
+# ---------------------------------------------------------------------------
+
+def stacked_fifo(ds: np.ndarray, Q: int, t_start: float) -> np.ndarray:
+    """FIFO completion times for ``P`` constant-capacity plans at once.
+
+    ``ds``: (P, R_max) per-visit durations, right-padded with 0.0
+    (zero-duration visits pass arrivals through unchanged).  Returns the
+    (P, Q) completion times of each plan's last visit — bit-identical per
+    plan to the single-plan scan (the recurrence is elementwise along the
+    plan axis).
+    """
+    P, Rm = ds.shape
+    idx = np.arange(Q, dtype=float)[None, :]
+    prev = np.full((P, Q), float(t_start))
+    for v in range(Rm):
+        dv = ds[:, v:v + 1]
+        prev = (idx + 1.0) * dv + np.maximum.accumulate(prev - idx * dv,
+                                                        axis=1)
+    return prev
+
+
+def stacked_windowed(ds: np.ndarray, fb: tuple, Q: int,
+                     t_start: float) -> np.ndarray:
+    """Windowed-admission completion times for ``P`` constant-capacity
+    plans at once (micro-batch-major, the PR 2 windowed recurrence with a
+    leading plan axis).
+
+    ``fb`` carries the flattened feedback edges across all plans:
+    ``(plan_idx, fp_visit, bp_visit, window)`` integer arrays.  Returns the
+    (P, Q) last-visit completion times; visit padding as in
+    :func:`stacked_fifo`.
+    """
+    P, Rm = ds.shape
+    p_idx, fp_v, bp_v, w_v = fb
+    D = np.cumsum(ds, axis=1)
+    Dsh = np.concatenate((np.zeros((P, 1)), D[:, :-1]), axis=1)
+    ends = np.empty((P, Q, Rm))
+    for m in range(Q):
+        if m == 0:
+            r = np.full((P, Rm), float(t_start))
+        else:
+            r = ends[:, m - 1, :].copy()
+            sel = w_v <= m
+            if sel.any():
+                ps, fs, bs, ws = p_idx[sel], fp_v[sel], bp_v[sel], w_v[sel]
+                np.maximum.at(r, (ps, fs), ends[ps, m - ws, bs])
+        ends[:, m, :] = D + np.maximum.accumulate(r - Dsh, axis=1)
+    return ends[:, :, -1]

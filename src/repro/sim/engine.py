@@ -17,14 +17,22 @@ may enter each stage.  Two engines execute the task set:
   structure-of-arrays ``VisitTable``: because micro-batches are identical
   jobs, service start/end times obey the max-plus recurrence
 
-      end[m, v] = d_v + max(end[m, v-1], end[m-1, v], end[m-w_j, bp_j])
+      end[m, v] = serve_v(max(end[m, v-1], end[m-1, v], end[m-w_j, bp_j]))
 
   which collapses into ``numpy`` prefix-max scans (per *visit* for FIFO, per
-  *micro-batch* for windowed policies).  Exact — and ~1000x faster — when
-  capacities are constant over time and the plan places every submodel on a
-  distinct node (each resource visited once per micro-batch); a
-  10k-micro-batch x 100-node scenario advances in well under a second.
-  ``engine="auto"`` picks it whenever those preconditions hold.
+  *micro-batch* for windowed policies).  Constant capacities keep the PR 2
+  closed-form time-space scans; piecewise-constant traces run the same scans
+  in *cumulative-work* coordinates (segmented scans split at the trace
+  breakpoints); reentrant/co-located placements iterate per-resource
+  merged scans to the unique self-consistent FIFO schedule — see
+  :mod:`repro.sim.advance`.  ``engine="auto"`` therefore picks the
+  vectorized engine for every piecewise-constant scenario; only an instance
+  that can stall forever (zero trailing capacity on a used resource) is
+  event-engine-only, and an explicit ``engine="vectorized"`` request then
+  raises naming the violated precondition instead of silently falling back.
+  A 10k-micro-batch x 100-node constant chain advances in ~0.15 s; the same
+  chain under Gauss-Markov traces stays >= 10x ahead of the heap
+  (BENCH_sim.json).  ``SimReport.engine_reason`` records which kernel ran.
 
 Consistency guarantee (the standing ``sim.validate`` cross-check): on a
 deterministic network whose plan places every submodel on a distinct node,
@@ -83,6 +91,9 @@ from repro.core.latency import (SplitSolution, bp_work, bwd_bytes, fp_work,
                                 fwd_bytes, num_fills)
 from repro.core.network import EdgeNetwork
 from repro.core.profiles import ModelProfile
+from .advance import (VisitServe, fifo_pass, fixpoint_advance,
+                      stack_eligible, stacked_fifo, stacked_fixpoint,
+                      stacked_windowed, windowed_pass)
 from .events import Task, Timeline, TraceRecord, VisitTable
 from .policies import AdmissionPolicy, resolve_policy
 from .scenario import NetworkScenario, PiecewiseTrace, constant
@@ -216,6 +227,7 @@ class SimReport:
     resource_busy: dict          # resource -> busy fraction of the run
     policy: str = "fifo"         # admission policy that produced the run
     engine: str = "event"        # which engine ran ("event" | "vectorized")
+    engine_reason: str = ""      # why that engine / which kernel path ran
     timeline: Timeline | None = None   # dense SoA timeline (vectorized runs)
     _records: list | None = None       # eager records (event runs)
 
@@ -374,51 +386,60 @@ class PipelineSimulator:
 # Vectorized engine: heap-free batched event advancement
 # ---------------------------------------------------------------------------
 
-def _constant_durations(table: VisitTable, net: EdgeNetwork,
-                        scenario: NetworkScenario | None) -> np.ndarray | None:
-    """Per-visit service seconds when every relevant capacity is constant
-    over time; ``None`` when some trace actually varies (heap territory)."""
-    caps = np.empty(len(table))
+def _serve_models(table: VisitTable, net: EdgeNetwork,
+                  scenario: NetworkScenario | None):
+    """``(serves, why)``: the per-visit serving models, plus the violated
+    vectorized-engine precondition as a string (``None`` when eligible).
+
+    Since the trace and reentrant generalizations, the only remaining
+    precondition is *finite service*: a visit whose resource has zero
+    constant capacity, or whose trace ends at zero capacity, can stall
+    forever — the unbounded-``inf`` bookkeeping is heap territory.  The
+    single gate shared by :func:`vectorizable`, :func:`simulate_plan` and
+    :func:`simulate_plans` so they can never drift.
+    """
+    serves = []
+    why = None
     for v, res in enumerate(table.resources):
-        tr = resource_trace(net, scenario, res)
-        if not tr.is_constant():
-            return None
-        caps[v] = tr.values[0]
-    with np.errstate(divide="ignore", invalid="ignore"):
-        served = np.where(table.work > 0.0,
-                          np.where(caps > 0.0, table.work / caps, math.inf),
-                          0.0)
-    return table.fixed + served
-
-
-def _vectorized_inputs(profile: ModelProfile, net: EdgeNetwork,
-                       sol: SplitSolution, b: int,
-                       scenario: NetworkScenario | None):
-    """``(table, durations)`` when the vectorized engine is *exact* for this
-    instance — distinct placements (each resource visited once per
-    micro-batch), all capacities constant in time, every duration finite —
-    else ``(table, None)``.  The single gate shared by :func:`vectorizable`
-    and :func:`simulate_plan` so the two can never drift."""
-    table = build_visit_table(profile, net, sol, b)
-    if table.is_reentrant():
-        return table, None
-    d = _constant_durations(table, net, scenario)
-    if d is None or not np.all(np.isfinite(d)):
-        return table, None
-    return table, d
+        s = VisitServe(resource_trace(net, scenario, res), table.work[v],
+                       table.fixed[v])
+        if why is None and not s.finite():
+            why = (f"resource {res!r} cannot finish its work (zero trailing "
+                   "capacity stalls forever)")
+        serves.append(s)
+    return serves, why
 
 
 def vectorizable(profile: ModelProfile, net: EdgeNetwork, sol: SplitSolution,
                  b: int, scenario: NetworkScenario | None = None) -> bool:
-    """True when the vectorized engine is *exact* for this instance (see
-    :func:`_vectorized_inputs` for the preconditions)."""
-    return _vectorized_inputs(profile, net, sol, b, scenario)[1] is not None
+    """True when the vectorized engine covers this instance — piecewise-
+    constant (including constant) capacities with finite service.
+    Reentrant/co-located placements are handled by the merged-scan fixpoint
+    (see :mod:`repro.sim.advance`); only an instance where some visit can
+    stall forever on zero trailing capacity is event-engine-only."""
+    table = build_visit_table(profile, net, sol, b)
+    return _serve_models(table, net, scenario)[1] is None
+
+
+def _empty_report(table: VisitTable, policy: AdmissionPolicy,
+                  t_start: float, b: int, reason: str) -> SimReport:
+    """Zero-micro-batch run, matching the event engine's empty report."""
+    empty = np.empty((0, len(table)))
+    return SimReport(mb_complete=np.empty(0), t_start=t_start, b=b,
+                     num_microbatches=0, resource_busy={},
+                     policy=policy.name, engine="vectorized",
+                     engine_reason=reason,
+                     timeline=Timeline(table=table, starts=empty,
+                                       ends=empty))
 
 
 def _vectorized_run(table: VisitTable, durations: np.ndarray, Q: int,
                     policy: AdmissionPolicy, t_start: float, b: int
                     ) -> SimReport:
-    """Batched event advancement over the SoA task table.
+    """Batched event advancement over the SoA task table — the constant-
+    capacity, distinct-placement scans (the PR 2 kernels, kept verbatim as
+    the bit-stable fast path; :mod:`repro.sim.advance` holds the trace and
+    reentrant generalizations).
 
     Identical jobs through a chain of dedicated FIFO resources obey
 
@@ -439,12 +460,6 @@ def _vectorized_run(table: VisitTable, durations: np.ndarray, Q: int,
     ends = np.empty((Q, R))
     rmat = np.empty((Q, R))      # per-task ready time from non-chain deps
 
-    if Q == 0:                   # empty run, matching the event engine
-        return SimReport(mb_complete=np.empty(0), t_start=t_start, b=b,
-                         num_microbatches=0, resource_busy={},
-                         policy=policy.name, engine="vectorized",
-                         timeline=Timeline(table=table, starts=rmat,
-                                           ends=ends))
     if all(w is None for w in windows):
         # FIFO: visit-major sweep; e_v[m] = (m+1) d_v + cummax(a[m] - m d_v)
         idx = np.arange(Q, dtype=float)
@@ -485,10 +500,64 @@ def _vectorized_run(table: VisitTable, durations: np.ndarray, Q: int,
     span = float(mb_complete[-1]) - t_start if Q else 0.0
     busy = {res: (Q * d[v] / span if span > 0 else 0.0)
             for v, res in enumerate(table.resources)}
+    windowed = any(w is not None for w in windows)
+    reason = ("vectorized: constant-capacity windowed scan" if windowed
+              else "vectorized: constant-capacity column scans")
     return SimReport(mb_complete=mb_complete, t_start=t_start, b=b,
                      num_microbatches=Q, resource_busy=busy,
                      policy=policy.name, engine="vectorized",
+                     engine_reason=reason,
                      timeline=Timeline(table=table, starts=starts, ends=ends))
+
+
+def _report_from_matrices(table: VisitTable, starts: np.ndarray,
+                          ends: np.ndarray, Q: int, policy: AdmissionPolicy,
+                          t_start: float, b: int, reason: str) -> SimReport:
+    """Assemble a report from dense (Q, R) start/end matrices.  Busy
+    fractions are summed per resource (reentrant tables visit a resource
+    several times per micro-batch)."""
+    mb_complete = ends[:, -1].copy()
+    span = float(mb_complete[-1]) - t_start if Q else 0.0
+    busy: dict = {}
+    service = (ends - starts).sum(axis=0)
+    for v, res in enumerate(table.resources):
+        busy[res] = busy.get(res, 0.0) + float(service[v])
+    busy = {res: (t / span if span > 0 else 0.0) for res, t in busy.items()}
+    return SimReport(mb_complete=mb_complete, t_start=t_start, b=b,
+                     num_microbatches=Q, resource_busy=busy,
+                     policy=policy.name, engine="vectorized",
+                     engine_reason=reason,
+                     timeline=Timeline(table=table, starts=starts, ends=ends))
+
+
+def _run_vectorized(table: VisitTable, serves, Q: int,
+                    policy: AdmissionPolicy, t_start: float,
+                    b: int) -> SimReport | None:
+    """Dispatch one eligible instance to the right kernel.  Returns ``None``
+    only when the reentrant fixpoint failed to converge (the caller decides
+    between event-engine fallback and raising)."""
+    S = table.num_stages
+    windows = [policy.window(S, j) for j in range(S)]
+    windowed = any(w is not None for w in windows)
+    if not table.is_reentrant():
+        if all(s.const_d is not None for s in serves):
+            d = np.array([s.const_d for s in serves])
+            return _vectorized_run(table, d, Q, policy, t_start, b)
+        if not windowed:
+            starts, ends = fifo_pass(serves, Q, t_start)
+            reason = "vectorized: segmented trace column scans"
+        else:
+            starts, ends = windowed_pass(serves, table, windows, Q, t_start)
+            reason = "vectorized: trace micro-batch-major scan"
+        return _report_from_matrices(table, starts, ends, Q, policy, t_start,
+                                     b, reason)
+    got = fixpoint_advance(table, serves, windows, Q, t_start)
+    if got is None:
+        return None
+    starts, ends, sweeps = got
+    return _report_from_matrices(
+        table, starts, ends, Q, policy, t_start, b,
+        f"vectorized: reentrant merged-scan fixpoint ({sweeps} sweeps)")
 
 
 def simulate_plan(profile: ModelProfile, net: EdgeNetwork,
@@ -508,9 +577,13 @@ def simulate_plan(profile: ModelProfile, net: EdgeNetwork,
     bound to ``(profile, net, sol, b)`` here, and a plan whose budget cannot
     hold even one live micro-batch is refused with ``ValueError``.
     ``engine`` picks the executor: "event" (default; exact everywhere,
-    bit-identical FIFO timelines), "vectorized" (batched numpy advancement;
-    raises unless exact for this instance — see :func:`vectorizable`), or
-    "auto" (vectorized when exact, event otherwise).
+    bit-identical FIFO timelines), "vectorized" (heap-free batched
+    advancement — constant *and* piecewise-constant traces, distinct *and*
+    reentrant placements; raises naming the violated precondition when it
+    cannot run the instance — see :func:`vectorizable`), or "auto"
+    (vectorized whenever it covers the instance, event otherwise).  The
+    report's ``engine_reason`` records which kernel ran, or why the event
+    engine was selected.
     """
     if num_microbatches is None:
         if B is None:
@@ -525,18 +598,179 @@ def simulate_plan(profile: ModelProfile, net: EdgeNetwork,
             f"plan is memory-infeasible under the {pol.name!r} admission "
             f"policy at b={b}: some stage cannot hold even one live "
             "micro-batch within its node's memory budget")
+    event_reason = "event: requested"
     if engine in ("vectorized", "auto"):
-        table, d = _vectorized_inputs(profile, net, sol, b, scenario)
-        if d is not None:
-            return _vectorized_run(table, d, num_microbatches, pol,
-                                   t_start, b)
+        table = build_visit_table(profile, net, sol, b)
+        serves, why = _serve_models(table, net, scenario)
+        if why is None:
+            if num_microbatches == 0:
+                return _empty_report(table, pol, t_start, b,
+                                     "vectorized: empty run")
+            rep = _run_vectorized(table, serves, num_microbatches, pol,
+                                  t_start, b)
+            if rep is not None:
+                return rep
+            why = ("reentrant merged-scan fixpoint did not converge "
+                   "on this instance")
         if engine == "vectorized":
             raise ValueError(
-                "vectorized engine requires constant finite capacities and "
-                "distinct placements; use engine='auto' or 'event'")
+                f"vectorized engine cannot run this instance: {why}; "
+                "use engine='auto' or 'event'")
+        event_reason = f"event: {why}"
     tasks = build_tasks(profile, net, sol, b, num_microbatches)
-    return PipelineSimulator(net, tasks, b=b, scenario=scenario,
-                             t_start=t_start, policy=pol).run()
+    rep = PipelineSimulator(net, tasks, b=b, scenario=scenario,
+                            t_start=t_start, policy=pol).run()
+    rep.engine_reason = event_reason
+    return rep
+
+
+def simulate_plans(profile: ModelProfile, net: EdgeNetwork, plans, *,
+                   B: int | None = None,
+                   num_microbatches: list | None = None,
+                   scenario: NetworkScenario | None = None,
+                   t_start: float = 0.0,
+                   policy: AdmissionPolicy | str = "fifo",
+                   engine: str = "auto") -> list:
+    """Batched :func:`simulate_plan` over many candidate plans.
+
+    ``plans`` is a sequence of ``(sol, b)`` pairs sharing one mini-batch
+    ``B`` (or explicit per-plan ``num_microbatches``); the return is the
+    list of :class:`SimReport`, one per plan, identical to looping
+    ``simulate_plan`` — that identity is asserted in tests.  Plans whose
+    instance is constant-capacity and non-reentrant are *stacked along a
+    leading plan axis* through :func:`repro.sim.advance.stacked_fifo` /
+    :func:`~repro.sim.advance.stacked_windowed` (one set of numpy scans for
+    the whole group, mirroring the planner's threshold-batched kernel);
+    everything else — traces, reentrant fixpoints, event-engine fallbacks —
+    runs per plan.  Stacked reports carry ``timeline=None`` (completion
+    times only): they exist to score candidates, not to be inspected.
+
+    This is the ``CostModel.evaluate_many`` hot path: a micro-batch
+    refinement sweep evaluates tens of ``(cuts, placement, b)`` candidates,
+    and per-call python overhead — task construction, policy binding aside,
+    kernel dispatch — was the dominant cost of sim-in-the-loop planning.
+    """
+    plans = list(plans)
+    if num_microbatches is None:
+        if B is None:
+            raise ValueError("pass B or num_microbatches")
+        qs = [1 + num_fills(B, b) for _, b in plans]
+    else:
+        qs = list(num_microbatches)
+        if len(qs) != len(plans):
+            raise ValueError("num_microbatches must align with plans")
+    base_pol = resolve_policy(policy)
+    bound = base_pol.bind_many(profile, net, plans)
+    preps = []
+    for (sol, b), Q, pol in zip(plans, qs, bound):
+        if not pol.schedulable():
+            raise ValueError(
+                f"plan is memory-infeasible under the {pol.name!r} "
+                f"admission policy at b={b}")
+        table = build_visit_table(profile, net, sol, b)
+        serves, why = _serve_models(table, net, scenario)
+        windows = [pol.window(table.num_stages, j)
+                   for j in range(table.num_stages)]
+        stackable = (engine in ("auto", "vectorized") and why is None
+                     and Q > 0 and not table.is_reentrant()
+                     and all(s.const_d is not None for s in serves))
+        preps.append((sol, b, Q, pol, table, serves, windows, stackable,
+                      why))
+
+    reports: list = [None] * len(plans)
+    # reentrant / traced plans sharing one visit structure: the stacked
+    # merged-scan fixpoint advances the whole group at once
+    fix_grps: dict = {}
+    for i, p in enumerate(preps):
+        sol, b, Q, pol, table, serves, windows, stackable, why = p
+        if (engine in ("auto", "vectorized") and not stackable and Q > 0
+                and why is None and stack_eligible(serves)):
+            fix_grps.setdefault(table.resources, []).append(i)
+    for grp in fix_grps.values():
+        if len(grp) < 2:
+            continue
+        i0 = grp[0]
+        got = stacked_fixpoint(preps[i0][4],
+                               [preps[i][5] for i in grp],
+                               [preps[i][6] for i in grp],
+                               [preps[i][2] for i in grp], t_start)
+        if got is None:
+            continue                 # per-plan fallback below
+        for g, i in enumerate(grp):
+            sol, b, Q, pol = preps[i][:4]
+            reports[i] = SimReport(
+                mb_complete=got[g], t_start=t_start, b=b,
+                num_microbatches=Q, resource_busy={}, policy=pol.name,
+                engine="vectorized",
+                engine_reason=(f"vectorized: stacked merged-scan fixpoint "
+                               f"({len(grp)} plans)"))
+    fifo_grp = [i for i, p in enumerate(preps)
+                if p[7] and all(w is None for w in p[6])]
+    win_grp = [i for i, p in enumerate(preps)
+               if p[7] and not all(w is None for w in p[6])]
+    for grp, kind in ((fifo_grp, "fifo"), (win_grp, "windowed")):
+        if len(grp) < 2:
+            continue                     # single plans keep the full report
+        Qm = max(preps[i][2] for i in grp)
+        Rm = max(len(preps[i][4]) for i in grp)
+        ds = np.zeros((len(grp), Rm))
+        for g, i in enumerate(grp):
+            serves = preps[i][5]
+            ds[g, :len(serves)] = [s.const_d for s in serves]
+        if kind == "fifo":
+            last = stacked_fifo(ds, Qm, t_start)
+        else:
+            p_idx, fp_v, bp_v, w_v = [], [], [], []
+            for g, i in enumerate(grp):
+                table, windows = preps[i][4], preps[i][6]
+                for j, w in enumerate(windows):
+                    if w is not None:
+                        p_idx.append(g)
+                        fp_v.append(int(table.fp_visit[j]))
+                        bp_v.append(int(table.bp_visit[j]))
+                        w_v.append(int(w))
+            fb = tuple(np.asarray(a, dtype=np.intp)
+                       for a in (p_idx, fp_v, bp_v, w_v))
+            last = stacked_windowed(ds, fb, Qm, t_start)
+        for g, i in enumerate(grp):
+            sol, b, Q, pol = preps[i][:4]
+            reports[i] = SimReport(
+                mb_complete=last[g, :Q].copy(), t_start=t_start, b=b,
+                num_microbatches=Q, resource_busy={}, policy=pol.name,
+                engine="vectorized",
+                engine_reason=(f"vectorized: stacked plan axis "
+                               f"({len(grp)} plans, {kind})"))
+    # everything left runs per plan, reusing the prepped table / serve
+    # models / bound policy (mirroring simulate_plan's dispatch without
+    # paying the construction again)
+    for i, p in enumerate(preps):
+        if reports[i] is not None:
+            continue
+        sol, b, Q, pol, table, serves, windows, stackable, why = p
+        event_reason = "event: requested"
+        if engine in ("vectorized", "auto") and why is None:
+            if Q == 0:
+                reports[i] = _empty_report(table, pol, t_start, b,
+                                           "vectorized: empty run")
+                continue
+            rep = _run_vectorized(table, serves, Q, pol, t_start, b)
+            if rep is not None:
+                reports[i] = rep
+                continue
+            why = ("reentrant merged-scan fixpoint did not converge "
+                   "on this instance")
+        if engine == "vectorized":
+            raise ValueError(
+                f"vectorized engine cannot run this instance: {why}; "
+                "use engine='auto' or 'event'")
+        if engine != "event":
+            event_reason = f"event: {why}"
+        tasks = build_tasks(profile, net, sol, b, Q)
+        rep = PipelineSimulator(net, tasks, b=b, scenario=scenario,
+                                t_start=t_start, policy=pol).run()
+        rep.engine_reason = event_reason
+        reports[i] = rep
+    return reports
 
 
 # ---------------------------------------------------------------------------

@@ -91,9 +91,26 @@ class VisitTable:
 
     def is_reentrant(self) -> bool:
         """True when some resource appears at two visits (co-located
-        submodels) — FIFO service order then interleaves micro-batches and
-        only the heap engine is exact."""
+        submodels, e.g. client FP+BP split across revisits) — FIFO service
+        then interleaves the visit streams and the vectorized engine runs
+        its merged-scan fixpoint instead of the independent column scans."""
         return len(set(self.resources)) != len(self.resources)
+
+    def resource_visits(self) -> dict:
+        """Per-resource visit ordering: ``{resource: (visit, ...)}`` with
+        visits in chain order.  The grouping the vectorized engine's
+        reentrant path advances — each resource serves the *merge* of its
+        visit streams (each stream internally in micro-batch order), so the
+        tuple is exactly the set of streams to merge.  Cached on first use
+        (the table is frozen)."""
+        got = getattr(self, "_resource_visits", None)
+        if got is None:
+            groups: dict = {}
+            for v, res in enumerate(self.resources):
+                groups.setdefault(res, []).append(v)
+            got = {res: tuple(vs) for res, vs in groups.items()}
+            object.__setattr__(self, "_resource_visits", got)
+        return got
 
 
 @dataclasses.dataclass(frozen=True)

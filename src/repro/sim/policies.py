@@ -72,6 +72,13 @@ class AdmissionPolicy:
         """
         return self
 
+    def bind_many(self, profile, net, plans) -> list:
+        """:meth:`bind` for many ``(sol, b)`` plans at once.  Plan-dependent
+        policies override this with a batched derivation (one claims pass
+        per distinct split instead of one per candidate) —
+        ``simulate_plans``' binding hot path."""
+        return [self.bind(profile, net, sol, b) for sol, b in plans]
+
     def schedulable(self) -> bool:
         """False when some window is 0 — admitting even one micro-batch
         would exceed a budget, so execution must be refused (a 0-window
@@ -190,6 +197,27 @@ class MemoryBudgeted(AdmissionPolicy):
         pol._windows = tuple(node_budget_windows(profile, net, sol, b,
                                                  self.memory_model))
         return pol
+
+    def bind_many(self, profile, net, plans) -> list:
+        """Batched :meth:`bind`: one Eq. (11) claims pass per distinct
+        split serves every micro-batch size
+        (``cost_model.node_budget_windows_many``) — identical windows to
+        one-at-a-time binding."""
+        from repro.core.cost_model import node_budget_windows_many
+        by_sol: dict = {}
+        for i, (sol, b) in enumerate(plans):
+            by_sol.setdefault((sol.cuts, sol.placement), []).append(i)
+        out: list = [None] * len(plans)
+        for idxs in by_sol.values():
+            sol = plans[idxs[0]][0]
+            wss = node_budget_windows_many(profile, net, sol,
+                                           [plans[i][1] for i in idxs],
+                                           self.memory_model)
+            for i, ws in zip(idxs, wss):
+                pol = MemoryBudgeted(self.memory_model)
+                pol._windows = tuple(ws)
+                out[i] = pol
+        return out
 
     def schedulable(self) -> bool:
         if self._windows is None:

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import functools
 import math
 
 import numpy as np
@@ -40,7 +41,15 @@ from repro.core.network import EdgeNetwork
 @dataclasses.dataclass(frozen=True)
 class PiecewiseTrace:
     """value(t) = values[i] on [times[i], times[i+1]); last value holds
-    forever.  ``times`` is strictly increasing with ``times[0] == 0.0``."""
+    forever.  ``times`` is strictly increasing with ``times[0] == 0.0``.
+
+    ``__post_init__`` precomputes the breakpoint arrays and the
+    cumulative-work prefix ``cumwork[i] = integral of the trace over
+    [0, times[i])`` once per trace, so :meth:`value_at` and
+    :meth:`time_to_complete` are a bisect instead of a linear walk and the
+    vectorized engine's segmented scans (:meth:`work_done_many` /
+    :meth:`finish_many`) are ``np.searchsorted`` lookups.
+    """
     times: tuple
     values: tuple
 
@@ -51,8 +60,21 @@ class PiecewiseTrace:
             raise ValueError("trace must start at t = 0")
         if any(b <= a for a, b in zip(self.times, self.times[1:])):
             raise ValueError("times must be strictly increasing")
+        if not math.isfinite(self.times[-1]):
+            raise ValueError("breakpoints must be finite (the last value "
+                             "holds forever, so an inf breakpoint is "
+                             "expressed by dropping it)")
         if any(v < 0 for v in self.values):
             raise ValueError("capacities must be non-negative")
+        times_arr = np.asarray(self.times, dtype=float)
+        values_arr = np.asarray(self.values, dtype=float)
+        cumwork = np.zeros(len(times_arr))
+        if len(times_arr) > 1:
+            np.cumsum(values_arr[:-1] * np.diff(times_arr), out=cumwork[1:])
+        # frozen dataclass: the derived caches are not fields
+        object.__setattr__(self, "times_arr", times_arr)
+        object.__setattr__(self, "values_arr", values_arr)
+        object.__setattr__(self, "cumwork", cumwork)
 
     def value_at(self, t: float) -> float:
         i = bisect.bisect_right(self.times, t) - 1
@@ -71,29 +93,79 @@ class PiecewiseTrace:
     def is_constant(self) -> bool:
         return len(set(self.values)) == 1
 
+    def drains(self) -> bool:
+        """True when any positive amount of work eventually completes from
+        any start time — i.e. the trailing capacity is positive.  The
+        vectorized engine's eligibility gate (a trailing-zero trace stalls
+        forever, which only the event engine reports exactly as ``inf``)."""
+        return self.values[-1] > 0.0
+
+    # -- cumulative-work coordinates (the segmented-scan primitives) --------
+    def work_done(self, t: float) -> float:
+        """Integral of the trace over [0, t) (extrapolating ``values[0]``
+        left of 0, matching the historical integration semantics)."""
+        if math.isinf(t):
+            return math.inf if self.values[-1] > 0.0 \
+                else float(self.cumwork[-1])
+        i = max(bisect.bisect_right(self.times, t) - 1, 0)
+        return float(self.cumwork[i]) + self.values[i] * (t - self.times[i])
+
+    def finish_time(self, target: float) -> float:
+        """Smallest ``t`` with ``work_done(t) >= target`` (``inf`` when the
+        trace's total capacity never reaches ``target``)."""
+        if target <= 0.0:
+            return 0.0
+        j = bisect.bisect_left(self.cumwork, target)
+        if j < len(self.cumwork):
+            return self.times[j - 1] + \
+                (target - float(self.cumwork[j - 1])) / self.values[j - 1]
+        v = self.values[-1]
+        if v <= 0.0:
+            return math.inf
+        return self.times[-1] + (target - float(self.cumwork[-1])) / v
+
+    def work_done_many(self, t: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`work_done` over an array of times."""
+        t = np.asarray(t, dtype=float)
+        i = np.clip(np.searchsorted(self.times_arr, t, side="right") - 1,
+                    0, None)
+        return self.cumwork[i] + self.values_arr[i] * (t - self.times_arr[i])
+
+    def finish_many(self, target: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`finish_time` over an array of work targets.
+
+        Assumes every positive target is reachable (``drains()`` — the
+        vectorized engine gates on it); non-positive targets map to 0.
+        """
+        target = np.asarray(target, dtype=float)
+        j = np.searchsorted(self.cumwork, target, side="left")
+        pos = np.clip(j, 1, len(self.cumwork)) - 1
+        with np.errstate(divide="ignore", invalid="ignore"):
+            out = self.times_arr[pos] + \
+                (target - self.cumwork[pos]) / self.values_arr[pos]
+        return np.where(target <= 0.0, 0.0, out)
+
     def time_to_complete(self, t0: float, work: float) -> float:
         """Seconds after ``t0`` until the integral of the trace covers
         ``work``; ``inf`` if capacity stays zero before the work drains."""
         if work <= 0.0:
             return 0.0
-        i = max(bisect.bisect_right(self.times, t0) - 1, 0)
-        t, remaining = t0, work
-        while True:
-            v = self.values[i]
-            seg_end = self.times[i + 1] if i + 1 < len(self.times) else math.inf
-            if v > 0.0:
-                need = remaining / v
-                if t + need <= seg_end:
-                    return t + need - t0
-                remaining -= v * (seg_end - t)
-            elif seg_end == math.inf:
-                return math.inf
-            t = seg_end
-            i += 1
+        t = self.finish_time(self.work_done(t0) + work)
+        if math.isinf(t):
+            return math.inf
+        return t - t0
+
+
+@functools.lru_cache(maxsize=4096)
+def _constant_cached(value: float) -> PiecewiseTrace:
+    return PiecewiseTrace((0.0,), (value,))
 
 
 def constant(value: float) -> PiecewiseTrace:
-    return PiecewiseTrace((0.0,), (float(value),))
+    """Constant-capacity trace.  Instances are immutable and cached — the
+    engine asks for the same node/link constants once per visit per run,
+    and the breakpoint-array precompute is not free."""
+    return _constant_cached(float(value))
 
 
 def piecewise(times, values) -> PiecewiseTrace:

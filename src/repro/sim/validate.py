@@ -132,15 +132,33 @@ def cross_validate_many(trials: int = 20, *, seed: int = 0,
 
 def compare_engines(profile: ModelProfile, net: EdgeNetwork,
                     sol: SplitSolution, b: int, num_microbatches: int, *,
-                    policy="fifo") -> float:
+                    policy="fifo", scenario=None) -> float:
     """Max relative gap between heap-engine and vectorized-engine micro-batch
     completion times for one instance — the standing engine-equivalence
-    check (must be ulp-level wherever the vectorized engine is eligible)."""
+    check (must be ulp-level wherever the vectorized engine is eligible:
+    constant *and* piecewise-constant traces via ``scenario``, distinct
+    *and* reentrant placements, every admission policy)."""
     ev = simulate_plan(profile, net, sol, b,
                        num_microbatches=num_microbatches, policy=policy,
-                       engine="event")
+                       scenario=scenario, engine="event")
     vec = simulate_plan(profile, net, sol, b,
                         num_microbatches=num_microbatches, policy=policy,
-                        engine="vectorized")
+                        scenario=scenario, engine="vectorized")
     denom = np.maximum(np.abs(ev.mb_complete), 1e-30)
     return float(np.max(np.abs(ev.mb_complete - vec.mb_complete) / denom))
+
+
+def random_reentrant_solution(rng: np.random.Generator,
+                              profile: ModelProfile,
+                              net: EdgeNetwork) -> SplitSolution:
+    """A random feasible solution whose placements may repeat (co-located
+    submodels) — the reentrant regime the merged-scan fixpoint covers."""
+    I = profile.num_layers
+    cap = min(I, 6)
+    K = int(rng.integers(2, cap + 1))
+    inner = np.sort(rng.choice(np.arange(1, I), size=K - 1, replace=False))
+    cuts = tuple(int(c) for c in inner) + (I,)
+    servers = rng.integers(1, len(net.nodes), size=K - 1)
+    sol = SplitSolution(cuts, (0,) + tuple(int(s) for s in servers))
+    validate_solution(sol, profile, net)
+    return sol

@@ -1,0 +1,70 @@
+"""ISSUE 5 acceptance: the trace-aware vectorized engine must beat the heap
+engine >= 10x on a trace-scenario chain with identical completion times, and
+the sim-in-the-loop (SimMakespan) solve overhead must be well below the
+PR 4 baseline recorded in BENCH_costmodel.json (6.77x mean), with the
+sim-refined gain intact.  The full grids live in the repo-root
+BENCH_sim.json (``make bench-sim``)."""
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.bench_sim import (JSON_PATH, PR4_MEAN_OVERHEAD_X,
+                                  reentrant_instance, trace_instance)
+from repro.core import SimMakespan, bcd_solve
+from repro.sim import simulate_plan
+
+
+def test_trace_scenario_vectorized_10x_over_heap():
+    """A 2k-micro-batch Gauss-Markov chain (the acceptance scenario at
+    CI-test size; bench_sim runs the 10k cell): segmented-scan FIFO must
+    be >= 10x the heap engine, timelines equal to float noise.  Measured
+    ~100x, so timing noise has generous headroom."""
+    prof, net, sol, b, Q, scen = trace_instance(8, 2_000)
+    t0 = time.perf_counter()
+    ev = simulate_plan(prof, net, sol, b, num_microbatches=Q, scenario=scen,
+                       engine="event")
+    t_heap = time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        vec = simulate_plan(prof, net, sol, b, num_microbatches=Q,
+                            scenario=scen, engine="vectorized")
+        best = min(best, time.perf_counter() - t0)
+    assert vec.engine == "vectorized"
+    assert "trace" in vec.engine_reason
+    gap = np.max(np.abs(ev.mb_complete - vec.mb_complete)
+                 / np.maximum(np.abs(ev.mb_complete), 1e-30))
+    assert gap < 1e-9
+    assert t_heap / best >= 10.0, (t_heap, best)
+
+
+def test_sim_makespan_overhead_reduced_vs_pr4():
+    """One reentrant cell of the BENCH grid: the sim-refined solve must
+    cost well under the PR 4 mean overhead (6.77x) relative to today's
+    closed form.  Measured ~3-4x, asserted loosely at < 5.5x for CI."""
+    prof, net = reentrant_instance(22)
+    bcd_solve(prof, net, B=32, b0=4, K=5,
+              cost_model=SimMakespan())          # warm caches / numpy
+    t0 = time.perf_counter()
+    cf = bcd_solve(prof, net, B=32, b0=4, K=5)
+    t_cf = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sim = bcd_solve(prof, net, B=32, b0=4, K=5, cost_model=SimMakespan())
+    t_sim = time.perf_counter() - t0
+    assert cf.feasible and sim.feasible
+    assert t_sim / t_cf < PR4_MEAN_OVERHEAD_X * 0.8, (t_sim, t_cf)
+
+
+def test_bench_sim_json_tracks_acceptance():
+    """The perf trajectory file exists and records the acceptance bars:
+    >= 10x on the 10k-micro-batch trace scenario and a solve overhead
+    below 75% of PR 4's 6.77x, with the sim-refined gain preserved."""
+    assert os.path.isfile(JSON_PATH), "run `make bench-sim` to record"
+    with open(JSON_PATH) as f:
+        data = json.load(f)
+    assert data["trace_10k_min_speedup_x"] >= 10.0
+    assert data["mean_solve_overhead_x"] < PR4_MEAN_OVERHEAD_X * 0.75
+    assert data["mean_sim_refined_gain"] >= 0.5   # PR 4 recorded 0.5846

@@ -11,9 +11,10 @@ import pytest
 
 from repro.core import (ClosedForm, SimMakespan, bcd_solve, budget_feasible,
                         exhaustive_joint, feasibility_box, make_edge_network,
-                        node_budget_windows, random_profile,
-                        stage_memory_claims, total_latency, ours, sim_refined,
-                        EdgeNetwork, Node, SplitSolution, uniform_profile)
+                        node_budget_windows, node_budget_windows_many,
+                        random_profile, stage_memory_claims, total_latency,
+                        ours, sim_refined, EdgeNetwork, Node, SplitSolution,
+                        uniform_profile)
 from repro.core.cost_model import resolve_cost_model
 from repro.pipeline.schedule import memory_highwater
 from repro.sim import (MemoryBudgeted, activation_occupancy, resolve_policy,
@@ -315,6 +316,83 @@ def test_tightening_memory_never_widens_feasible_box(seed):
         box = feasibility_box(prof, tight, sol, B=32, T_1=1e9)
         assert box <= prev_box
         prev_box = box
+
+
+# ---------------------------------------------------------------------------
+# Batched scoring: evaluate_many == looped evaluate, batched windows, memo
+# ---------------------------------------------------------------------------
+
+def _candidate_grid(seed, B=32):
+    """A mixed candidate set: the closed-form plan's split over a range of
+    b (the refinement-sweep shape), plus an infeasible b=0 probe."""
+    prof, net = reentrant_instance(seed)
+    plan = bcd_solve(prof, net, B=B, b0=4, K=5)
+    cands = [(plan.solution, b) for b in range(1, 11)] + [(plan.solution, 0)]
+    return prof, net, cands, B
+
+
+@pytest.mark.parametrize("seed", [22, 24, 3])
+def test_evaluate_many_identity_with_looped_evaluate(seed):
+    """CostModel.evaluate_many must return exactly what looping evaluate
+    returns — for the sim model that holds the stacked plan axis and the
+    per-plan kernels to the same floats."""
+    prof, net, cands, B = _candidate_grid(seed)
+    for cm in (ClosedForm(), SimMakespan()):
+        cs = cands if isinstance(cm, SimMakespan) else cands[:-1]
+        looped = [cm.evaluate(prof, net, sol, b, B) for sol, b in cs]
+        batched = cm.evaluate_many(prof, net, cs, B)
+        assert looped == batched, cm.name
+
+
+@pytest.mark.parametrize("seed", [22, 27, 5])
+def test_node_budget_windows_many_identity(seed):
+    prof, net = reentrant_instance(seed)
+    plan = bcd_solve(prof, net, B=32, b0=4, K=5)
+    sol = plan.solution
+    bs = list(range(1, 33))
+    many = node_budget_windows_many(prof, net, sol, bs)
+    for b, ws in zip(bs, many):
+        assert ws == node_budget_windows(prof, net, sol, b)
+    sm = SimMakespan()
+    assert sm.memory_feasible_many(prof, net, sol, bs) \
+        == [sm.memory_feasible(prof, net, sol, b) for b in bs]
+
+
+def test_memoized_cost_model_caches_and_forwards():
+    from repro.core import memoized_cost_model
+    prof, net, cands, B = _candidate_grid(22)
+    inner = SimMakespan()
+    calls = {"n": 0}
+    orig = inner.evaluate_many
+
+    def counting(profile, network, cs, BB):
+        calls["n"] += len(cs)
+        return orig(profile, network, cs, BB)
+
+    inner.evaluate_many = counting
+    cm = memoized_cost_model(inner)
+    assert cm.name == "sim_makespan"
+    first = cm.evaluate_many(prof, net, cands, B)
+    n_first = calls["n"]
+    again = cm.evaluate_many(prof, net, cands, B)
+    assert again == first
+    assert calls["n"] == n_first          # all hits the second time
+    assert cm.evaluate(prof, net, *cands[0], B) == first[0]
+    # ClosedForm passes through unwrapped; wrapping is idempotent
+    cf = ClosedForm()
+    assert memoized_cost_model(cf) is cf
+    assert memoized_cost_model(cm) is cm
+
+
+def test_memory_policy_bind_many_matches_bind():
+    prof, net = reentrant_instance(24)
+    plan = bcd_solve(prof, net, B=32, b0=4, K=5)
+    sol = plan.solution
+    plans = [(sol, b) for b in (1, 2, 3, 5)]
+    pols = MemoryBudgeted().bind_many(prof, net, plans)
+    for (s, b), pol in zip(plans, pols):
+        one = MemoryBudgeted().bind(prof, net, s, b)
+        assert pol._windows == one._windows
 
 
 # ---------------------------------------------------------------------------

@@ -401,29 +401,199 @@ def test_engines_agree_under_both_policies():
     assert hits >= 8        # the generator yields distinct placements
 
 
-def test_vectorized_engine_preconditions():
+def test_vectorized_engine_covers_reentrant_and_traces():
+    """The ISSUE 5 generalizations: co-located (reentrant) placements run
+    the merged-scan fixpoint and time-varying scenarios the segmented trace
+    scans — both vectorized, both matching the heap engine exactly."""
     prof = uniform_profile(8, fp=1.0, bp=2.0, act=1.0)
     net = make_edge_network(num_servers=3, num_clients=1, seed=0)
     colocated = SplitSolution(cuts=(2, 4, 6, 8), placement=(0, 1, 2, 1))
-    assert not vectorizable(prof, net, colocated, 4)
-    with pytest.raises(ValueError, match="vectorized engine requires"):
-        simulate_plan(prof, net, colocated, 4, B=16, engine="vectorized")
-    # auto falls back to the heap engine and still matches Eq. (12) solo
-    rep = simulate_plan(prof, net, colocated, 4, num_microbatches=1,
-                        engine="auto")
-    assert rep.engine == "event"
-    assert rep.L_t == pytest.approx(fill_latency(prof, net, colocated, 4),
-                                    rel=1e-9)
-    # a time-varying scenario also forces the heap path under "auto"
+    assert vectorizable(prof, net, colocated, 4)
+    rep = simulate_plan(prof, net, colocated, 4, B=16, engine="vectorized")
+    assert rep.engine == "vectorized"
+    assert "fixpoint" in rep.engine_reason
+    assert compare_engines(prof, net, colocated, 4, 8) < 1e-9
+    # solo micro-batch still matches Eq. (12) exactly (no contention)
+    solo = simulate_plan(prof, net, colocated, 4, num_microbatches=1,
+                         engine="vectorized")
+    assert solo.L_t == pytest.approx(fill_latency(prof, net, colocated, 4),
+                                     rel=1e-9)
+    # a time-varying scenario stays vectorized under "auto" as well
     distinct = SplitSolution(cuts=(2, 4, 8), placement=(0, 1, 2))
     scen = NetworkScenario().with_straggler(1, 0.0, 1.0, 2.0)
     rep = simulate_plan(prof, net, distinct, 4, num_microbatches=2,
                         scenario=scen, engine="auto")
-    assert rep.engine == "event"
-    # ... but an all-constant scenario does not
+    assert rep.engine == "vectorized"
+    assert "trace" in rep.engine_reason
+    assert compare_engines(prof, net, distinct, 4, 6, scenario=scen) < 1e-9
+    # ... and an all-constant scenario uses the constant-capacity scans
     rep = simulate_plan(prof, net, distinct, 4, num_microbatches=2,
                         scenario=NetworkScenario(), engine="auto")
     assert rep.engine == "vectorized"
+    assert "constant-capacity" in rep.engine_reason
+
+
+def test_vectorized_raises_with_violated_precondition():
+    """No silent fallback under engine='vectorized': the error names the
+    violated precondition (here: a used resource that can never finish),
+    while engine='auto' records why the event engine ran."""
+    prof = uniform_profile(4, fp=1.0, bp=1.0, act=1.0)
+    nodes = [Node("c", f=1.0, t0=0.0, t1=0.0, b_th=0, is_client=True),
+             Node("s", f=1.0, t0=0.0, t1=0.0, b_th=0)]
+    net = EdgeNetwork(nodes=nodes, rate=np.zeros((2, 2)), num_clients=1)
+    sol = SplitSolution(cuts=(2, 4), placement=(0, 1))
+    assert not vectorizable(prof, net, sol, 1)
+    with pytest.raises(ValueError, match="cannot finish its work"):
+        simulate_plan(prof, net, sol, 1, num_microbatches=2,
+                      engine="vectorized")
+    rep = simulate_plan(prof, net, sol, 1, num_microbatches=1,
+                        engine="auto")
+    assert rep.engine == "event"
+    assert "cannot finish its work" in rep.engine_reason
+    # a dead *trace* (outage that never lifts) is detected the same way
+    net2 = EdgeNetwork(nodes=nodes, rate=np.full((2, 2), 10.0),
+                       num_clients=1)
+    dead = NetworkScenario(link_mult={(0, 1): constant(0.0)})
+    assert not vectorizable(prof, net2, sol, 1, scenario=dead)
+    with pytest.raises(ValueError, match="zero trailing capacity"):
+        simulate_plan(prof, net2, sol, 1, num_microbatches=2, scenario=dead,
+                      engine="vectorized")
+
+
+def test_engine_reason_reported():
+    prof, net, sol, b, B = random_instance(5)
+    assert simulate_plan(prof, net, sol, b, B=B).engine_reason \
+        == "event: requested"
+    assert "column scans" in simulate_plan(
+        prof, net, sol, b, B=B, engine="auto").engine_reason
+    assert "windowed scan" in simulate_plan(
+        prof, net, sol, b, B=B, engine="auto", policy="1f1b").engine_reason
+
+
+# ---------------------------------------------------------------------------
+# Randomized parity grid: traces x reentrant placements x policies
+# ---------------------------------------------------------------------------
+
+def _grid_instance(seed: int, reentrant: bool, cv: float, model: str):
+    """One randomized instance for the engine-parity grid."""
+    from repro.core.profiles import random_profile
+    from repro.sim import random_chain_solution, random_reentrant_solution
+    rng = np.random.default_rng(seed)
+    prof = random_profile(rng, int(rng.integers(5, 11)))
+    net = make_edge_network(num_servers=int(rng.integers(2, 5)),
+                            num_clients=int(rng.integers(1, 4)), seed=seed)
+    if reentrant:
+        sol = random_reentrant_solution(rng, prof, net)
+    else:
+        sol = random_chain_solution(rng, prof, net)
+    b = int(rng.integers(1, 9))
+    Q = int(rng.integers(2, 14))
+    scen = None
+    if cv > 0:
+        maker = (piecewise_cv_scenario if model == "piecewise"
+                 else gauss_markov_scenario)
+        scen = maker(net, cv, rng, dt=0.02, horizon=5.0)
+    return prof, net, sol, b, Q, scen
+
+
+@pytest.mark.parametrize("reentrant", [False, True])
+@pytest.mark.parametrize("cv,model", [(0.0, "piecewise"),
+                                      (0.3, "piecewise"),
+                                      (0.3, "gauss_markov")])
+def test_engine_parity_grid(reentrant, cv, model):
+    """Heap vs vectorized on randomized piecewise traces x reentrant plans
+    x all three admission policies: identical completion times to float
+    noise (the ISSUE 5 acceptance grid)."""
+    hits = 0
+    for seed in range(6):
+        prof, net, sol, b, Q, scen = _grid_instance(
+            101 * seed + 13, reentrant, cv, model)
+        for pol in ("fifo", "1f1b", "memory"):
+            try:
+                gap = compare_engines(prof, net, sol, b, Q, policy=pol,
+                                      scenario=scen)
+            except ValueError:
+                continue          # memory-infeasible under the budget
+            assert gap < 1e-9, (seed, pol, gap)
+            hits += 1
+    assert hits >= 10
+
+
+def test_engine_parity_hypothesis():
+    """Property-based twin of the parity grid (skips without hypothesis)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), reentrant=st.booleans(),
+           cv=st.sampled_from([0.0, 0.25, 0.5]),
+           pol=st.sampled_from(["fifo", "1f1b", "memory"]),
+           model=st.sampled_from(["piecewise", "gauss_markov"]))
+    def run(seed, reentrant, cv, pol, model):
+        prof, net, sol, b, Q, scen = _grid_instance(seed, reentrant, cv,
+                                                    model)
+        try:
+            gap = compare_engines(prof, net, sol, b, Q, policy=pol,
+                                  scenario=scen)
+        except ValueError:
+            return                # memory-infeasible under the budget
+        assert gap < 1e-9
+
+    run()
+
+
+def test_simulate_plans_mixed_kind_reentrant_group_exact():
+    """A reentrant resource whose visits mix serving kinds (a zero-work
+    visit co-located with a traced one) must not be silently mis-served by
+    the stacked fixpoint — the batched path declines such structures and
+    the per-plan merged scan (scalar kind) stays exact."""
+    import dataclasses
+    from repro.sim import simulate_plans
+    prof = uniform_profile(8, fp=1.0, bp=2.0, act=1.0)
+    fp = np.ones(8)
+    fp[6:] = 0.0                   # stage at layers 7-8: zero FP work
+    prof = dataclasses.replace(prof, fp_work=fp)
+    nodes = [Node("c", f=1.0, t0=0.0, t1=0.0, b_th=0, is_client=True)]
+    nodes += [Node(f"s{i}", f=1.0, t0=0.0, t1=0.0, b_th=0)
+              for i in (1, 2)]
+    rate = np.full((3, 3), 10.0)
+    np.fill_diagonal(rate, 0.0)
+    net = EdgeNetwork(nodes=nodes, rate=rate, num_clients=1)
+    sol = SplitSolution(cuts=(2, 4, 6, 8), placement=(0, 1, 2, 1))
+    rng = np.random.default_rng(7)
+    scen = gauss_markov_scenario(net, 0.4, rng, dt=0.05, horizon=500.0)
+    plans = [(sol, b) for b in (1, 2, 3)]
+    loop = [simulate_plan(prof, net, s, b, B=9, scenario=scen,
+                          engine="auto") for s, b in plans]
+    bat = simulate_plans(prof, net, plans, B=9, scenario=scen,
+                         engine="auto")
+    ev = [simulate_plan(prof, net, s, b, B=9, scenario=scen,
+                        engine="event") for s, b in plans]
+    for lr, br, er in zip(loop, bat, ev):
+        assert np.array_equal(lr.mb_complete, br.mb_complete)
+        gap = np.max(np.abs(er.mb_complete - br.mb_complete)
+                     / np.maximum(np.abs(er.mb_complete), 1e-30))
+        assert gap < 1e-9
+
+
+def test_simulate_plans_matches_looped_simulate_plan():
+    """The batched multi-plan path (stacked plan axis + stacked fixpoint)
+    returns exactly the per-plan reports' completion times."""
+    from repro.sim import simulate_plans
+    prof = uniform_profile(8, fp=1.0, bp=2.0, act=1.0)
+    net = make_edge_network(num_servers=3, num_clients=1, seed=0)
+    sols = [SplitSolution(cuts=(2, 4, 8), placement=(0, 1, 2)),     # chain
+            SplitSolution(cuts=(2, 4, 6, 8), placement=(0, 1, 2, 1))]  # re.
+    for sol in sols:
+        plans = [(sol, b) for b in (1, 2, 3, 4)]
+        for pol in ("fifo", "1f1b"):
+            loop = [simulate_plan(prof, net, s, b, B=12, policy=pol,
+                                  engine="auto") for s, b in plans]
+            bat = simulate_plans(prof, net, plans, B=12, policy=pol,
+                                 engine="auto")
+            for lr, br in zip(loop, bat):
+                assert np.array_equal(lr.mb_complete, br.mb_complete)
 
 
 def test_highwater_never_exceeds_schedule_claims():

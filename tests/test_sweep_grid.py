@@ -23,10 +23,14 @@ def test_grid_smoke_emits_csv():
     with open(path) as f:
         got = list(csv.reader(f))
     assert got[0][0] == "topology" and len(got) == 5
-    # deterministic cells run vectorized, noisy cells fall back to events
-    by = {(r[1], r[2]): r[3] for r in rows}
-    assert by[(0.0, "fifo")] == "vectorized"
-    assert by[(0.2, "fifo")] == "event"
+    # every cell — deterministic AND fluctuation — now runs vectorized:
+    # the trace generalization removed the heap fallback (run_grid itself
+    # asserts the cv > 0 cells' coverage; checked per cell here too)
+    by = {(r[1], r[2]): (r[3], r[4]) for r in rows}
+    assert by[(0.0, "fifo")][0] == "vectorized"
+    assert by[(0.2, "fifo")][0] == "vectorized"
+    assert "trace" in by[(0.2, "fifo")][1]
+    assert by[(0.2, "1f1b")][0] == "vectorized"
 
 
 def test_scale_smoke_emits_csv():
