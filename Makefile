@@ -9,7 +9,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify verify-ci verify-docs test dev-deps sim-check bench \
         bench-planner bench-costmodel bench-sim bench-fig6b bench-sweep \
-        example-sim
+        bench-obs example-sim
 
 verify:
 	$(PYTHON) -m pytest -x -q
@@ -58,7 +58,13 @@ bench-costmodel:
 bench-sim:
 	$(PYTHON) -m benchmarks.bench_sim
 
-bench: bench-planner bench-costmodel bench-sim bench-fig6b bench-sweep
+bench: bench-planner bench-costmodel bench-sim bench-fig6b bench-sweep \
+       bench-obs
+
+# telemetry overhead on the 10k-micro-batch acceptance chain: asserts the
+# enabled-mode slowdown stays < 5% and disabled mode is a true no-op
+bench-obs:
+	$(PYTHON) -m benchmarks.bench_obs
 
 bench-fig6b:
 	$(PYTHON) -m benchmarks.fig6b_traces

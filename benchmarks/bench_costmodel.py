@@ -121,4 +121,9 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid for CI (no BENCH_costmodel.json rewrite)")
     args = ap.parse_args()
+    from repro import obs
+
+    from .common import dump_registry
+    obs.enable()
     run(smoke=args.smoke)
+    dump_registry("bench_costmodel")

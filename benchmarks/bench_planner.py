@@ -116,4 +116,9 @@ if __name__ == "__main__":
                     help="tiny grid for CI (no BENCH_planner.json rewrite)")
     ap.add_argument("--b-step", type=int, default=None)
     args = ap.parse_args()
+    from repro import obs
+
+    from .common import dump_registry
+    obs.enable()
     run(smoke=args.smoke, b_step=args.b_step)
+    dump_registry("bench_planner")

@@ -217,4 +217,9 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="small grids for CI (no BENCH_sim.json rewrite)")
     args = ap.parse_args()
+    from repro import obs
+
+    from .common import dump_registry
+    obs.enable()
     run(smoke=args.smoke)
+    dump_registry("bench_sim")

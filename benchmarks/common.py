@@ -38,6 +38,19 @@ def emit(name: str, rows: list, header: list):
     print()
 
 
+def dump_registry(name: str):
+    """Dump the telemetry registry (counters + span summaries) next to the
+    CSVs.  No-op (returns None) when ``repro.obs`` is disabled, so drivers
+    can call it unconditionally."""
+    from repro import obs
+    if not obs.enabled():
+        return None
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = obs.dump(os.path.join(RESULTS_DIR, f"{name}_counters.json"))
+    print(f"# {name} telemetry -> {path}")
+    return path
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -139,9 +139,14 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid for CI smoke testing")
     args = ap.parse_args()
+    from repro import obs
+
+    from .common import dump_registry
+    obs.enable()
     if args.smoke:
         run_grid(topologies=("mesh",), cvs=(0.0, 0.2), B=64, b0=8)
         run_scale(cells=((10, 200),), repeats=1)
     else:
         run_grid()
         run_scale()
+    dump_registry("sweep_grid")

@@ -8,12 +8,17 @@
    high-water marks vs the GPipe-like FIFO default)
 4. re-run under a straggler window and a link outage
 5. drive the elastic ft.Coordinator from *simulated* time (mid-run replan)
-6. write the deterministic timeline as results/sim/pipeline_trace.json
-   (load it at chrome://tracing or https://ui.perfetto.dev)
+6. decompose per-resource idle time (fill/bubble/drain — the Fig. 2
+   bubbles, quantified) via obs.UtilizationReport
+7. write the deterministic timeline as results/sim/pipeline_trace.json
+   with counter tracks, micro-batch flow arrows, and wall-clock solver
+   spans (load it at chrome://tracing or https://ui.perfetto.dev)
 """
 
+import json
 import os
 
+from repro import obs
 from repro.core import make_edge_network, ours, vgg16_profile
 from repro.ft import Straggler
 from repro.sim import (NetworkScenario, ReplanTrigger, simulate_plan,
@@ -21,6 +26,9 @@ from repro.sim import (NetworkScenario, ReplanTrigger, simulate_plan,
                        stage_activation_highwater, write_chrome_trace)
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results", "sim")
+
+# telemetry on for the whole walkthrough: planner/BCD/sim spans + counters
+obs.enable()
 
 # 1. plan ---------------------------------------------------------------------
 profile = vgg16_profile(work_units="bytes")
@@ -84,7 +92,25 @@ print(f"\nreplan: straggler fires at t={seg.cutoff:.5f}s after "
       f"{seg.completed} micro-batches; coordinator action="
       f"{seg.outcome.action!r}; total makespan={rr.makespan:.5f}s")
 
-# 6. Chrome trace -------------------------------------------------------------
-path = write_chrome_trace(rep.records, os.path.join(OUT,
-                                                    "pipeline_trace.json"))
-print(f"\nChrome trace -> {os.path.abspath(path)}")
+# 6. idle-time decomposition --------------------------------------------------
+util = rep.utilization()
+print(f"\nidle accounting over [0, {util.span:.5f}]s: "
+      f"{100 * util.idle_fraction_total:.1f}% idle "
+      f"({100 * util.bubble_fraction:.1f}% bubbles, "
+      f"{100 * util.fill_drain_fraction:.1f}% fill/drain)")
+for node, frac in sorted(util.node_idle_fraction().items()):
+    print(f"  node {node}: {100 * (1 - frac):5.1f}% utilized")
+
+# 7. Chrome trace (+ counter tracks, flows, wall-clock solver spans) ----------
+path = write_chrome_trace(rep.records,
+                          os.path.join(OUT, "pipeline_trace.json"),
+                          counter_tracks=True, flow_events=True,
+                          wall_spans=obs.wall_spans())
+with open(path) as f:
+    problems = obs.validate_chrome_trace(json.load(f))
+print(f"\nChrome trace -> {os.path.abspath(path)} "
+      f"({'valid' if not problems else problems})")
+
+# telemetry summary: what the planner/simulator did, by the numbers
+counters = obs.get_registry().snapshot()
+print("counters:", json.dumps(counters, indent=2, sort_keys=True))

@@ -9,7 +9,7 @@ import importlib
 
 _SUBMODULES = frozenset({
     "checkpoint", "compression", "configs", "core", "data", "ft", "kernels",
-    "launch", "models", "optim", "pipeline", "sim", "utils",
+    "launch", "models", "obs", "optim", "pipeline", "sim", "utils",
 })
 
 # convenience re-exports: the simulation subsystem's full public API.
@@ -27,6 +27,7 @@ _SIM_EXPORTS = frozenset({
     "simulate_plan", "simulate_plans", "vectorizable",
     "SegmentReport", "ReplanSimReport", "simulate_with_replanning",
     "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
+    "compare_utilization",
     "random_chain_solution", "random_instance", "random_reentrant_solution",
 })
 

@@ -38,6 +38,8 @@ import dataclasses
 import math
 import time
 
+from repro import obs
+
 from . import latency as L
 from .cost_model import ClosedForm, memoized_cost_model, resolve_cost_model
 from .latency import SplitSolution
@@ -112,6 +114,20 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
     once per solve and reused across every BCD iteration — pass one in to
     amortize it further (e.g. across multi-start restarts).
     """
+    with obs.span("bcd.solve", B=B, b0=b0,
+                  cost_model=getattr(cost_model, "name", cost_model)):
+        return _bcd_solve(profile, net, B, b0=b0, theta=theta,
+                          max_iters=max_iters, K=K,
+                          memory_model=memory_model, refine_b=refine_b,
+                          solver=solver, planner=planner,
+                          cost_model=cost_model)
+
+
+def _bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
+               b0: int = 20, theta: float = 0.01, max_iters: int = 12,
+               K: int | None = None, memory_model: str = "paper",
+               refine_b: bool = True, solver: str | None = None,
+               planner: Planner | None = None, cost_model=None) -> Plan:
     t_start = time.perf_counter()
     # per-solve memo: iterate scores repeat once the alternation stabilizes,
     # and the warm start + refinement sweeps revisit the same candidates —
@@ -142,18 +158,21 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
         iters = 0
         for tau in range(1, max_iters + 1):
             iters = tau
-            msp = planner.solve(b, B, K=K, solver=solver)
-            if not msp.feasible:
-                # shrink b: memory may be the blocker at this size
-                if b > 1:
-                    b = max(1, b // 2)
-                    continue
-                return infeasible_plan(tau)
-            mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
-                                    memory_model=memory_model, cost_model=cm)
-            if mb.b > 0:
-                b = mb.b
-            obj = cm.evaluate(profile, net, msp.solution, b, B)
+            obs.inc("bcd.iterations")
+            with obs.span("bcd.iterate", tau=tau, b=b):
+                msp = planner.solve(b, B, K=K, solver=solver)
+                if not msp.feasible:
+                    # shrink b: memory may be the blocker at this size
+                    if b > 1:
+                        b = max(1, b // 2)
+                        continue
+                    return infeasible_plan(tau)
+                mb = optimal_microbatch(profile, net, msp.solution, B,
+                                        msp.T_1, memory_model=memory_model,
+                                        cost_model=cm)
+                if mb.b > 0:
+                    b = mb.b
+                obj = cm.evaluate(profile, net, msp.solution, b, B)
             # ties move forward, tracking the paper's always-move
             # alternation, whose objective is non-increasing anyway
             if best is None or obj <= best[2]:
@@ -194,17 +213,20 @@ def bcd_solve(profile: ModelProfile, net: EdgeNetwork, B: int,
         infeasible_at = None            # tau of a b == 1 infeasible solve
         for tau in range(1, max_iters + 1):
             iters = tau
-            msp = planner.solve(b, B, K=K, solver=solver)
-            if not msp.feasible:
-                if b > 1:
-                    b = max(1, b // 2)
-                    continue
-                infeasible_at = tau
-                break
-            mb = optimal_microbatch(profile, net, msp.solution, B, msp.T_1,
-                                    memory_model=memory_model, cost_model=cm)
-            if mb.b > 0:
-                b = mb.b
+            obs.inc("bcd.iterations")
+            with obs.span("bcd.iterate", tau=tau, b=b):
+                msp = planner.solve(b, B, K=K, solver=solver)
+                if not msp.feasible:
+                    if b > 1:
+                        b = max(1, b // 2)
+                        continue
+                    infeasible_at = tau
+                    break
+                mb = optimal_microbatch(profile, net, msp.solution, B,
+                                        msp.T_1, memory_model=memory_model,
+                                        cost_model=cm)
+                if mb.b > 0:
+                    b = mb.b
             iterates.append((tau, msp.solution, b))
             if len(iterates) >= 2 and iterates[-1][1:] == iterates[-2][1:]:
                 break

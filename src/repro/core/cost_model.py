@@ -41,6 +41,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro import obs
+
 from . import latency as L
 from .latency import SplitSolution, memory_split, memory_split_per_sample
 from .network import EdgeNetwork
@@ -269,8 +271,9 @@ class SimMakespan(CostModel):
         if b < 1 or not self.memory_feasible(profile, net, sol, b):
             return math.inf
         from repro.sim.engine import simulate_plan  # deferred: no hard dep
-        rep = simulate_plan(profile, net, sol, b, B=B, policy=self.policy,
-                            engine=self.engine)
+        with obs.span("cost_model.sim_evaluate", b=b, B=B):
+            rep = simulate_plan(profile, net, sol, b, B=B, policy=self.policy,
+                                engine=self.engine)
         return rep.L_t
 
     def evaluate_many(self, profile, net, cands, B) -> list:
@@ -293,8 +296,10 @@ class SimMakespan(CostModel):
         live.sort()
         if not live:
             return out
-        reps = simulate_plans(profile, net, [cands[i] for i in live], B=B,
-                              policy=self.policy, engine=self.engine)
+        with obs.span("cost_model.sim_evaluate_many", n=len(live), B=B):
+            reps = simulate_plans(profile, net, [cands[i] for i in live],
+                                  B=B, policy=self.policy,
+                                  engine=self.engine)
         for i, rep in zip(live, reps):
             out[i] = rep.L_t
         return out
@@ -339,8 +344,11 @@ class _MemoCostModel(CostModel):
         key = (sol.cuts, sol.placement, b, B)
         got = self._eval.get(key)
         if got is None:
+            obs.inc("cost_model.memo_eval_miss")
             got = self._eval[key] = self.inner.evaluate(profile, net, sol,
                                                         b, B)
+        else:
+            obs.inc("cost_model.memo_eval_hit")
         return got
 
     def evaluate_many(self, profile, net, cands, B) -> list:
@@ -352,6 +360,8 @@ class _MemoCostModel(CostModel):
                 miss.append(i)
             else:
                 out[i] = got
+        obs.inc("cost_model.memo_eval_hit", len(cands) - len(miss))
+        obs.inc("cost_model.memo_eval_miss", len(miss))
         if miss:
             vals = self.inner.evaluate_many(profile, net,
                                             [cands[i] for i in miss], B)
@@ -365,8 +375,11 @@ class _MemoCostModel(CostModel):
         key = (sol.cuts, sol.placement, b)
         got = self._mem.get(key)
         if got is None:
+            obs.inc("cost_model.memo_mem_miss")
             got = self._mem[key] = self.inner.memory_feasible(profile, net,
                                                               sol, b)
+        else:
+            obs.inc("cost_model.memo_mem_hit")
         return got
 
     def memory_feasible_many(self, profile, net, sol, bs) -> list:
@@ -378,6 +391,8 @@ class _MemoCostModel(CostModel):
                 miss.append(i)
             else:
                 out[i] = got
+        obs.inc("cost_model.memo_mem_hit", len(bs) - len(miss))
+        obs.inc("cost_model.memo_mem_miss", len(miss))
         if miss:
             vals = self.inner.memory_feasible_many(
                 profile, net, sol, [bs[i] for i in miss])

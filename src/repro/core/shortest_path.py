@@ -51,6 +51,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro import obs
+
 from . import latency as L
 from .latency import SplitSolution
 from .msp_graph import GraphFactory, MSPGraph, build_graph
@@ -491,8 +493,11 @@ class Planner:
     def graph(self, b: int) -> MSPGraph:
         g = self._graphs.get(b)
         if g is None:
+            obs.inc("planner.graph_cache_miss")
             g = self.factory.graph(b)
             self._graphs[b] = g
+        else:
+            obs.inc("planner.graph_cache_hit")
         return g
 
     def _dp(self, b: int, K: int, rc, rp) -> _LayeredDP:
@@ -500,10 +505,13 @@ class Planner:
         g = self.graph(b)
         dp = self._dps.get(key)
         if dp is None:
+            obs.inc("planner.dp_cache_miss")
             dp = _LayeredDP(g, K, rc, rp)
             self._dps[key] = dp
-        elif dp.g is not g:
-            dp.rebind(g)
+        else:
+            obs.inc("planner.dp_cache_hit")
+            if dp.g is not g:
+                dp.rebind(g)
         return dp
 
     def default_K(self, K: int | None) -> int:
@@ -546,17 +554,21 @@ class Planner:
         key = (b, B, K, rc, rp, solver, backend)
         hit = self._solved.get(key)
         if hit is not None:
+            obs.inc("planner.solve_memo_hit")
             return hit
-        dp = self._dp(b, K, rc, rp)
-        g = self.graph(b)
-        xi = L.num_fills(B, b)
-        if solver == "scan":
-            res = self._solve_scan(dp, g, b, B, xi)
-        elif solver == "batched":
-            res = self._solve_batched(dp, g, b, B, xi, backend)
-        else:
-            raise ValueError(
-                f"unknown solver {solver!r} (want 'scan'|'batched')")
+        obs.inc("planner.solve_memo_miss")
+        with obs.span("planner.solve", b=b, B=B, solver=solver):
+            dp = self._dp(b, K, rc, rp)
+            g = self.graph(b)
+            xi = L.num_fills(B, b)
+            if solver == "scan":
+                res = self._solve_scan(dp, g, b, B, xi)
+            elif solver == "batched":
+                res = self._solve_batched(dp, g, b, B, xi, backend)
+            else:
+                raise ValueError(
+                    f"unknown solver {solver!r} (want 'scan'|'batched')")
+        obs.inc("planner.dp_sweeps", res.thresholds_scanned)
         self._solved[key] = res
         return res
 
@@ -652,8 +664,15 @@ class Planner:
         ONE multi-slice sweep across all b.  Results are bit-identical to
         ``[self.solve(b, B, K, solver="batched") for b in bs]`` (asserted in
         tests/test_msp.py)."""
-        K = self.default_K(K)
         bs = list(bs)
+        with obs.span("planner.solve_many", n=len(bs), B=B):
+            results = self._solve_many(bs, B, K)
+        obs.inc("planner.dp_sweeps",
+                sum(r.thresholds_scanned for r in results))
+        return results
+
+    def _solve_many(self, bs: list, B: int, K: int | None = None) -> list:
+        K = self.default_K(K)
         S = len(bs)
         N, I = len(self.net.nodes), self.profile.num_layers
         I1 = I + 1

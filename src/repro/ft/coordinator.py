@@ -21,7 +21,9 @@ pipeline stays feasible).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
+import time
 
 import numpy as np
 
@@ -29,6 +31,7 @@ from repro.core import (EdgeNetwork, ModelProfile, Plan, bcd_solve,
                         optimal_microbatch, total_latency, pipeline_interval,
                         fill_latency, num_fills)
 from repro.core.cost_model import resolve_cost_model
+from repro import obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +52,9 @@ class Straggler:
     slowdown: float              # f_n -> f_n / slowdown
 
 
+logger = logging.getLogger("repro.ft.coordinator")
+
+
 @dataclasses.dataclass
 class ReplanOutcome:
     event: object
@@ -56,6 +62,25 @@ class ReplanOutcome:
     new_plan: Plan
     action: str                  # "microbatch" | "replan" | "none"
     remapped_stages: bool
+    solve_seconds: float = 0.0   # wall-clock spent replanning
+    sim_time: float | None = None  # simulated time the event fired (if driven)
+
+    @property
+    def new_latency(self) -> float:
+        return self.new_plan.objective
+
+    def log_record(self) -> dict:
+        """Structured replan record — what the coordinator logs and what a
+        replanning-cadence sweep aggregates."""
+        return {
+            "event": type(self.event).__name__,
+            "action": self.action,
+            "remapped_stages": self.remapped_stages,
+            "old_latency": self.old_latency,
+            "new_latency": self.new_latency,
+            "solve_seconds": self.solve_seconds,
+            "sim_time": self.sim_time,
+        }
 
 
 class Coordinator:
@@ -81,25 +106,40 @@ class Coordinator:
         self.events: list = []
 
     # -- event application ----------------------------------------------------
-    def apply(self, event) -> ReplanOutcome:
-        old_L = self._current_latency()
-        if isinstance(event, NodeFailure):
-            self.net = self.net.degraded([event.server])
-            outcome = self._full_replan(event, old_L)
-        elif isinstance(event, RateChange):
-            rate = self.net.rate.copy()
-            rate[event.n_from, event.n_to] *= event.factor
-            self.net = dataclasses.replace(self.net, rate=rate)
-            outcome = self._full_replan(event, old_L)
-        elif isinstance(event, Straggler):
-            self.net = dataclasses.replace(
-                self.net,
-                nodes=[dataclasses.replace(n, f=n.f / event.slowdown)
-                       if i == event.node else n
-                       for i, n in enumerate(self.net.nodes)])
-            outcome = self._straggler_mitigation(event, old_L)
-        else:
-            raise TypeError(event)
+    def apply(self, event, *, sim_time: float | None = None) -> ReplanOutcome:
+        """Mutate the network per ``event`` and replan.  ``sim_time`` is the
+        simulated instant the event fired (recorded on the outcome when the
+        coordinator is driven by ``sim.simulate_with_replanning``)."""
+        with obs.span("ft.apply", event=type(event).__name__):
+            t0 = time.perf_counter()
+            old_L = self._current_latency()
+            if isinstance(event, NodeFailure):
+                self.net = self.net.degraded([event.server])
+                outcome = self._full_replan(event, old_L)
+            elif isinstance(event, RateChange):
+                rate = self.net.rate.copy()
+                rate[event.n_from, event.n_to] *= event.factor
+                self.net = dataclasses.replace(self.net, rate=rate)
+                outcome = self._full_replan(event, old_L)
+            elif isinstance(event, Straggler):
+                self.net = dataclasses.replace(
+                    self.net,
+                    nodes=[dataclasses.replace(n, f=n.f / event.slowdown)
+                           if i == event.node else n
+                           for i, n in enumerate(self.net.nodes)])
+                outcome = self._straggler_mitigation(event, old_L)
+            else:
+                raise TypeError(event)
+            outcome.solve_seconds = time.perf_counter() - t0
+            outcome.sim_time = sim_time
+        obs.inc("ft.replans")
+        obs.inc(f"ft.action[{outcome.action}]")
+        logger.info(
+            "replan: event=%s action=%s remapped=%s old_latency=%.6g "
+            "new_latency=%.6g solve_s=%.4f sim_time=%s",
+            type(event).__name__, outcome.action, outcome.remapped_stages,
+            outcome.old_latency, outcome.new_latency, outcome.solve_seconds,
+            "-" if sim_time is None else f"{sim_time:.6g}")
         self.events.append(outcome)
         return outcome
 

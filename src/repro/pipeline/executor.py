@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import Plan, breakdown
 from repro.core.latency import SplitSolution
 from repro.models import vgg as vgg_lib
@@ -100,11 +101,17 @@ class SplitLearningExecutor:
         return split_vgg_params(self.full_params, self.plan.solution.cuts)
 
     def _forward_chain(self, params_list, x):
-        """Client -> servers with link hooks at every cut (Eqs. 5/6)."""
+        """Client -> servers with link hooks at every cut (Eqs. 5/6).
+
+        The per-stage spans time eager execution; under ``jax.jit`` they
+        fire once per trace and measure *trace construction* per stage —
+        compile-side telemetry, by design.
+        """
         acts = [x]
-        for stage, sp in zip(self.stages, params_list):
-            x = stage.forward(sp, x)
-            x = self.hooks.fwd(x)
+        for k, (stage, sp) in enumerate(zip(self.stages, params_list)):
+            with obs.span("executor.stage_fwd", stage=k):
+                x = stage.forward(sp, x)
+                x = self.hooks.fwd(x)
             acts.append(x)
         return x, acts
 
@@ -128,10 +135,21 @@ class SplitLearningExecutor:
         # would recompile the whole fwd+bwd scan each call
         step = self._jitted_grads.get(q)
         if step is None:
-            step = jax.jit(
-                lambda p, b: microbatch_grads(self.loss, p, b, q))
-            self._jitted_grads[q] = step
-        loss, grads = step(params_list, batch)
+            obs.inc("executor.jit_compile")
+            with obs.span("executor.compile", q=q,
+                          stages=len(params_list)):
+                step = jax.jit(
+                    lambda p, b: microbatch_grads(self.loss, p, b, q))
+                self._jitted_grads[q] = step
+        else:
+            obs.inc("executor.jit_cache_hit")
+        obs.inc("executor.train_rounds")
+        with obs.span("executor.step", q=q, B=B):
+            loss, grads = step(params_list, batch)
+            if obs.enabled():
+                # async dispatch would end the span at enqueue time;
+                # only force the sync while actually measuring
+                jax.block_until_ready((loss, grads))
         if momentum:
             vel = getattr(self, "_velocity", None)
             # a replan can change the cuts (different stage grouping/leaf

@@ -31,8 +31,9 @@ from .engine import (PipelineSimulator, SimReport, build_tasks,
                      vectorizable, SegmentReport, ReplanSimReport,
                      simulate_with_replanning)
 from .validate import (CrossCheck, cross_validate, cross_validate_many,
-                       compare_engines, random_chain_solution,
-                       random_instance, random_reentrant_solution)
+                       compare_engines, compare_utilization,
+                       random_chain_solution, random_instance,
+                       random_reentrant_solution)
 
 __all__ = [
     "Task", "Timeline", "TraceRecord", "VisitTable", "write_chrome_trace",
@@ -45,5 +46,6 @@ __all__ = [
     "simulate_plan", "simulate_plans", "vectorizable",
     "SegmentReport", "ReplanSimReport", "simulate_with_replanning",
     "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
+    "compare_utilization",
     "random_chain_solution", "random_instance", "random_reentrant_solution",
 ]

@@ -91,6 +91,11 @@ from repro.core.latency import (SplitSolution, bp_work, bwd_bytes, fp_work,
                                 fwd_bytes, num_fills)
 from repro.core.network import EdgeNetwork
 from repro.core.profiles import ModelProfile
+from repro.obs import (accumulate_service, busy_fractions, resource_traces,
+                       service_from_records, utilization_from_records,
+                       utilization_from_timeline)
+from repro.obs import inc as obs_inc
+from repro.obs import span as obs_span
 from .advance import (VisitServe, fifo_pass, fixpoint_advance,
                       stack_eligible, stacked_fifo, stacked_fixpoint,
                       stacked_windowed, windowed_pass)
@@ -186,12 +191,11 @@ def build_visit_table(profile: ModelProfile, net: EdgeNetwork,
 # ---------------------------------------------------------------------------
 
 class _Resource:
-    __slots__ = ("busy", "queue", "busy_time")
+    __slots__ = ("busy", "queue")
 
     def __init__(self):
         self.busy = False
         self.queue = deque()
-        self.busy_time = 0.0
 
 
 def resource_trace(net: EdgeNetwork, scenario: NetworkScenario | None,
@@ -265,6 +269,42 @@ class SimReport:
 
     def intervals(self) -> np.ndarray:
         return np.diff(self.mb_complete)
+
+    def utilization(self, *, net: EdgeNetwork | None = None,
+                    scenario: NetworkScenario | None = None,
+                    traces: dict | None = None):
+        """Per-resource busy/idle/blocked decomposition of this run — an
+        ``obs.UtilizationReport`` (fill/bubble/drain split, per-node and
+        per-link idle fractions; the paper's Sec. I "resource idleness"
+        measured from the executed schedule).
+
+        Built straight from the dense SoA ``timeline`` on vectorized runs
+        and from the eager ``TraceRecord``s on event runs — the two paths
+        are parity-checked in ``sim.validate``.  Pass ``traces`` (resource
+        -> capacity trace), or ``net`` together with ``scenario`` to derive
+        them, to split occupancy into busy vs blocked (zero-capacity
+        outage) time.  Stacked plan-axis scoring reports carry completion
+        times only and cannot be decomposed.
+        """
+        if self.timeline is not None:
+            if traces is None and scenario is not None:
+                if net is None:
+                    raise ValueError("pass net together with scenario")
+                traces = resource_traces(net, scenario,
+                                         set(self.timeline.table.resources))
+            return utilization_from_timeline(self.timeline, self.t_start,
+                                             self.makespan, traces=traces)
+        if self._records is not None:
+            if traces is None and scenario is not None:
+                if net is None:
+                    raise ValueError("pass net together with scenario")
+                traces = resource_traces(net, scenario,
+                                         {r.resource for r in self._records})
+            return utilization_from_records(self._records, self.t_start,
+                                            self.makespan, traces=traces)
+        raise ValueError(
+            "this report carries completion times only (stacked plan-axis "
+            "scoring path); re-simulate with simulate_plan for a timeline")
 
 
 class PipelineSimulator:
@@ -360,7 +400,6 @@ class PipelineSimulator:
                 records.append(TraceRecord(task.microbatch, task.stage,
                                            task.kind, task.resource, t0, now))
                 res.busy = False
-                res.busy_time += now - t0
                 if res.queue:
                     start(res.queue.popleft(), now)
                 for s in succs.get(tid, ()):
@@ -373,8 +412,9 @@ class PipelineSimulator:
         n_mb = 1 + max(mb_done) if mb_done else 0
         mb_complete = np.array([mb_done[m] for m in range(n_mb)])
         span = (float(mb_complete[-1]) - self.t_start) if n_mb else 0.0
-        busy = {r: (res.busy_time / span if span > 0 else 0.0)
-                for r, res in resources.items()}
+        # per-visit-stream sums folded by the shared obs helpers, so both
+        # engines accumulate resource occupancy identically (ISSUE 6 fix)
+        busy = busy_fractions(service_from_records(records), span)
         return SimReport(mb_complete=mb_complete,
                          t_start=self.t_start, b=self.b,
                          num_microbatches=n_mb, resource_busy=busy,
@@ -498,8 +538,9 @@ def _vectorized_run(table: VisitTable, durations: np.ndarray, Q: int,
     starts = np.maximum(chain_prev, rmat)
     mb_complete = ends[:, -1].copy()
     span = float(mb_complete[-1]) - t_start if Q else 0.0
-    busy = {res: (Q * d[v] / span if span > 0 else 0.0)
-            for v, res in enumerate(table.resources)}
+    # constant capacities: per-visit service is exactly Q * d_v — O(R),
+    # no (Q, R) reduction — folded through the shared obs accumulation
+    busy = busy_fractions(accumulate_service(table.resources, Q * d), span)
     windowed = any(w is not None for w in windows)
     reason = ("vectorized: constant-capacity windowed scan" if windowed
               else "vectorized: constant-capacity column scans")
@@ -518,11 +559,8 @@ def _report_from_matrices(table: VisitTable, starts: np.ndarray,
     several times per micro-batch)."""
     mb_complete = ends[:, -1].copy()
     span = float(mb_complete[-1]) - t_start if Q else 0.0
-    busy: dict = {}
     service = (ends - starts).sum(axis=0)
-    for v, res in enumerate(table.resources):
-        busy[res] = busy.get(res, 0.0) + float(service[v])
-    busy = {res: (t / span if span > 0 else 0.0) for res, t in busy.items()}
+    busy = busy_fractions(accumulate_service(table.resources, service), span)
     return SimReport(mb_complete=mb_complete, t_start=t_start, b=b,
                      num_microbatches=Q, resource_busy=busy,
                      policy=policy.name, engine="vectorized",
@@ -555,6 +593,8 @@ def _run_vectorized(table: VisitTable, serves, Q: int,
     if got is None:
         return None
     starts, ends, sweeps = got
+    obs_inc("sim.fixpoint_runs")
+    obs_inc("sim.fixpoint_sweeps", sweeps)
     return _report_from_matrices(
         table, starts, ends, Q, policy, t_start, b,
         f"vectorized: reentrant merged-scan fixpoint ({sweeps} sweeps)")
@@ -585,6 +625,23 @@ def simulate_plan(profile: ModelProfile, net: EdgeNetwork,
     report's ``engine_reason`` records which kernel ran, or why the event
     engine was selected.
     """
+    with obs_span("sim.simulate_plan", engine=engine):
+        rep = _simulate_plan(profile, net, sol, b, B=B,
+                             num_microbatches=num_microbatches,
+                             scenario=scenario, t_start=t_start,
+                             policy=policy, engine=engine)
+    obs_inc("sim.dispatch." + rep.engine)
+    obs_inc("sim.engine_reason[" + rep.engine_reason.split(" (")[0] + "]")
+    return rep
+
+
+def _simulate_plan(profile: ModelProfile, net: EdgeNetwork,
+                   sol: SplitSolution, b: int, *, B: int | None = None,
+                   num_microbatches: int | None = None,
+                   scenario: NetworkScenario | None = None,
+                   t_start: float = 0.0,
+                   policy: AdmissionPolicy | str = "fifo",
+                   engine: str = "event") -> SimReport:
     if num_microbatches is None:
         if B is None:
             raise ValueError("pass B or num_microbatches")
@@ -650,6 +707,25 @@ def simulate_plans(profile: ModelProfile, net: EdgeNetwork, plans, *,
     and per-call python overhead — task construction, policy binding aside,
     kernel dispatch — was the dominant cost of sim-in-the-loop planning.
     """
+    plans = list(plans)
+    with obs_span("sim.simulate_plans", n=len(plans)):
+        reports = _simulate_plans(profile, net, plans, B=B,
+                                  num_microbatches=num_microbatches,
+                                  scenario=scenario, t_start=t_start,
+                                  policy=policy, engine=engine)
+    for rep in reports:
+        obs_inc("sim.dispatch." + rep.engine)
+        obs_inc("sim.engine_reason[" + rep.engine_reason.split(" (")[0] + "]")
+    return reports
+
+
+def _simulate_plans(profile: ModelProfile, net: EdgeNetwork, plans, *,
+                    B: int | None = None,
+                    num_microbatches: list | None = None,
+                    scenario: NetworkScenario | None = None,
+                    t_start: float = 0.0,
+                    policy: AdmissionPolicy | str = "fifo",
+                    engine: str = "auto") -> list:
     plans = list(plans)
     if num_microbatches is None:
         if B is None:
@@ -858,7 +934,7 @@ def simulate_with_replanning(profile: ModelProfile, net: EdgeNetwork, B: int,
             return ReplanSimReport(rep.makespan, segments, coord)
         done = int(np.searchsorted(rep.mb_complete, trig.time, side="right"))
         samples_left = max(0, samples_left - done * plan.b)
-        outcome = coord.apply(trig.event)
+        outcome = coord.apply(trig.event, sim_time=trig.time)
         segments.append(SegmentReport(plan, rep, done, trig.time, trig,
                                       outcome))
         t = trig.time + remap_penalty

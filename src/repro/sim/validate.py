@@ -148,6 +148,51 @@ def compare_engines(profile: ModelProfile, net: EdgeNetwork,
     return float(np.max(np.abs(ev.mb_complete - vec.mb_complete) / denom))
 
 
+def compare_utilization(profile: ModelProfile, net: EdgeNetwork,
+                        sol: SplitSolution, b: int, num_microbatches: int, *,
+                        policy="fifo", scenario=None) -> float:
+    """Max absolute gap (normalized by the run horizon) between the two
+    engines' ``UtilizationReport`` decompositions for one instance — the
+    standing idle-accounting parity check.
+
+    The event engine's report is reconstructed from eager ``TraceRecord``s
+    and the vectorized engine's directly from the dense SoA ``Timeline``,
+    so this exercises two genuinely independent interval extractions of
+    what must be the same schedule: per-resource service, fill, bubble,
+    drain (and blocked, when a ``scenario`` provides traces) are compared
+    field by field.
+    """
+    traces = None
+    if scenario is not None:
+        from repro.obs import resource_traces
+        from .engine import build_visit_table
+        table = build_visit_table(profile, net, sol, b)
+        traces = resource_traces(net, scenario, set(table.resources))
+    ev = simulate_plan(profile, net, sol, b,
+                       num_microbatches=num_microbatches, policy=policy,
+                       scenario=scenario, engine="event")
+    vec = simulate_plan(profile, net, sol, b,
+                        num_microbatches=num_microbatches, policy=policy,
+                        scenario=scenario, engine="vectorized")
+    ue = ev.utilization(traces=traces)
+    uv = vec.utilization(traces=traces)
+    if set(ue.resources) != set(uv.resources):
+        raise AssertionError(
+            f"resource sets differ: {set(ue.resources) ^ set(uv.resources)}")
+    scale = max(ue.span, uv.span, 1e-30)
+    worst = abs(ue.span - uv.span) / scale
+    for res, a in ue.resources.items():
+        c = uv.resources[res]
+        for field in ("busy", "blocked", "fill", "bubble", "drain",
+                      "first_start", "last_end"):
+            worst = max(worst,
+                        abs(getattr(a, field) - getattr(c, field)) / scale)
+        if a.num_tasks != c.num_tasks:
+            raise AssertionError(
+                f"{res}: task counts differ {a.num_tasks} != {c.num_tasks}")
+    return float(worst)
+
+
 def random_reentrant_solution(rng: np.random.Generator,
                               profile: ModelProfile,
                               net: EdgeNetwork) -> SplitSolution:

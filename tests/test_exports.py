@@ -50,7 +50,7 @@ def test_dir_covers_all():
     assert set(repro.__all__) <= set(dir(repro))
 
 
-@pytest.mark.parametrize("mod", ["core", "sim", "pipeline", "ft"])
+@pytest.mark.parametrize("mod", ["core", "sim", "pipeline", "ft", "obs"])
 def test_submodule_all_names_resolve(mod):
     m = importlib.import_module(f"repro.{mod}")
     for name in getattr(m, "__all__", ()):

@@ -1,0 +1,321 @@
+"""ISSUE 6 telemetry layer: idle/bubble accounting vs the Eq. (12)-(14)
+closed form, event-vs-vectorized ``UtilizationReport`` parity, the unified
+``resource_busy`` regression, disabled-mode no-op guarantees, and the
+generalized Chrome-trace export."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import EdgeNetwork, Node, SplitSolution, uniform_profile
+from repro.core.latency import (fill_latency, pipeline_interval,
+                                total_latency)
+from repro.sim import (compare_utilization, simulate_plan, simulate_plans,
+                       write_chrome_trace)
+from repro.sim.scenario import NetworkScenario, gauss_markov_scenario
+from repro.sim.validate import random_instance, random_reentrant_solution
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    """Telemetry state is process-global: leave it as we found it."""
+    obs.reset()
+    yield
+    obs.reset()
+    obs.disable()
+
+
+def _chain():
+    """Deterministic 2-stage chain whose bottleneck is the FIRST chain
+    resource (client FP): every downstream resource then shows the
+    steady-state bubble ``(Q-1) * (T_i - d_v)`` of Eq. (13)."""
+    prof = uniform_profile(4, fp=1.0, bp=0.5, act=1.0)
+    nodes = [Node("c", f=0.5, t0=0.0, t1=0.0, b_th=0, is_client=True),
+             Node("s", f=2.0, t0=0.0, t1=0.0, b_th=0)]
+    net = EdgeNetwork(nodes=nodes,
+                      rate=np.array([[0.0, 10.0], [10.0, 0.0]]),
+                      num_clients=1)
+    sol = SplitSolution(cuts=(2, 4), placement=(0, 1))
+    return prof, net, sol
+
+
+# ---------------------------------------------------------------------------
+# idle accounting vs the closed form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["event", "vectorized"])
+def test_bubble_identity_closed_form(engine):
+    """On the deterministic chain, per-resource bubbles equal
+    ``(Q-1) * (T_i - d_v)`` and idle totals reconcile with Eqs. (12)-(14)
+    to float precision."""
+    prof, net, sol, b, Q = *_chain(), 2, 8
+    rep = simulate_plan(prof, net, sol, b, num_microbatches=Q,
+                        engine=engine)
+    u = rep.utilization()
+    # the simulated run is the closed form (standing sim.validate check)
+    B = b * Q                                   # => num_fills == Q - 1
+    assert rep.T_f == pytest.approx(fill_latency(prof, net, sol, b),
+                                    rel=1e-12)
+    assert rep.T_i == pytest.approx(pipeline_interval(prof, net, sol, b),
+                                    rel=1e-12)
+    assert rep.L_t == pytest.approx(total_latency(prof, net, sol, b, B),
+                                    rel=1e-12)
+    # constant capacities: per-task service is constant per resource
+    d = {res: ru.service / Q for res, ru in u.resources.items()}
+    T_i = pipeline_interval(prof, net, sol, b)
+    assert max(d.values()) == pytest.approx(T_i, rel=1e-12)
+    assert d[("fp", 0)] == pytest.approx(T_i, rel=1e-12), \
+        "fixture must keep the bottleneck at the first chain resource"
+    for res, ru in u.resources.items():
+        # Eq. (13)'s bottleneck interval, shadowed per resource
+        assert ru.bubble == pytest.approx((Q - 1) * (T_i - d[res]),
+                                          rel=1e-9, abs=1e-12), res
+        # per-resource idle reconciles with Eq. (14): span is L_t and
+        # occupancy is Q * d_v, so idle = L_t - Q * d_v exactly
+        assert ru.idle == pytest.approx(rep.L_t - Q * d[res], rel=1e-12)
+        # the decomposition is exhaustive: span = service + idle
+        assert u.span - ru.service == pytest.approx(ru.idle, rel=1e-12)
+        assert ru.blocked == 0.0
+    # the bottleneck never bubbles in steady state
+    assert u.resources[("fp", 0)].bubble == 0.0
+    assert 0.0 < u.bubble_fraction < 1.0
+    assert 0.0 < u.fill_drain_fraction < 1.0
+    assert u.idle_fraction_total == pytest.approx(
+        u.bubble_fraction + u.fill_drain_fraction, rel=1e-12)
+
+
+def test_rollups_group_by_node_and_link():
+    prof, net, sol = _chain()
+    u = simulate_plan(prof, net, sol, 2, num_microbatches=5,
+                      engine="auto").utilization()
+    nodes = u.node_idle_fraction()
+    links = u.link_idle_fraction()
+    assert set(nodes) == {0, 1}
+    assert set(links) == {(0, 1), (1, 0)}
+    assert all(0.0 <= v <= 1.0 for v in nodes.values())
+    assert all(0.0 <= v <= 1.0 for v in links.values())
+
+
+def test_blocked_time_under_outage():
+    """A zero-capacity window on the forward link shows up as blocked (not
+    busy) time, and busy + blocked still equals total occupancy."""
+    prof, net, sol = _chain()
+    # first forward transfer starts at t = 8 (client FP of mb0 takes 8s):
+    # cut the link mid-flight so the transfer stalls inside the window
+    scen = NetworkScenario().with_outage(0, 1, 8.05, 9.0)
+    rep = simulate_plan(prof, net, sol, 2, num_microbatches=4,
+                        scenario=scen, engine="event")
+    u = rep.utilization(net=net, scenario=scen)
+    ru = u.resources[("fwd", 0, 1)]
+    assert ru.blocked > 0.0
+    assert ru.busy > 0.0
+    assert ru.service == pytest.approx(ru.busy + ru.blocked, rel=1e-12)
+    # resources with constant capacity never report blocked time
+    assert u.resources[("fp", 0)].blocked == 0.0
+    # and the decomposition still closes
+    assert u.span - ru.service == pytest.approx(ru.idle, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# engine parity (deterministic grid + hypothesis twin)
+# ---------------------------------------------------------------------------
+
+def _parity_case(seed: int, reentrant: bool, traced: bool, policy: str):
+    prof, net, sol, b, _B = random_instance(seed)
+    if reentrant:
+        sol = random_reentrant_solution(np.random.default_rng(seed), prof,
+                                        net)
+    scen = None
+    if traced:
+        scen = gauss_markov_scenario(net, 0.4, np.random.default_rng(seed),
+                                     dt=0.37, horizon=60.0)
+    return compare_utilization(prof, net, sol, b, 6, policy=policy,
+                               scenario=scen)
+
+
+def test_utilization_parity_grid():
+    """Event-reconstructed and timeline-reconstructed reports agree field
+    by field on the randomized grid (the ISSUE 6 acceptance check)."""
+    hits = 0
+    for seed in range(10):
+        for reentrant in (False, True):
+            for traced in (False, True):
+                for pol in ("fifo", "1f1b"):
+                    try:
+                        gap = _parity_case(seed, reentrant, traced, pol)
+                    except ValueError:
+                        continue       # infeasible draw (e.g. co-location)
+                    assert gap < 1e-9, (seed, reentrant, traced, pol, gap)
+                    hits += 1
+    assert hits >= 30
+
+
+def test_utilization_parity_hypothesis():
+    """Property-based twin of the parity grid (skips without hypothesis)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), reentrant=st.booleans(),
+           traced=st.booleans(), pol=st.sampled_from(["fifo", "1f1b"]))
+    def run(seed, reentrant, traced, pol):
+        try:
+            gap = _parity_case(seed, reentrant, traced, pol)
+        except ValueError:
+            return
+        assert gap < 1e-9
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# resource_busy unification (the ISSUE 6 bugfix regression)
+# ---------------------------------------------------------------------------
+
+def test_resource_busy_unified_across_engines_trace_scaled():
+    """Both engines must report the same busy fractions through the shared
+    interval accounting, including on trace-scaled resources — and the
+    coarse ``resource_busy`` must equal the decomposition's occupancy
+    fractions exactly."""
+    for seed in (0, 3, 5):
+        prof, net, sol, b, _B = random_instance(seed)
+        scen = gauss_markov_scenario(net, 0.5, np.random.default_rng(seed),
+                                     dt=0.31, horizon=80.0)
+        ev = simulate_plan(prof, net, sol, b, num_microbatches=6,
+                           scenario=scen, engine="event")
+        vec = simulate_plan(prof, net, sol, b, num_microbatches=6,
+                            scenario=scen, engine="vectorized")
+        assert set(ev.resource_busy) == set(vec.resource_busy)
+        for res in ev.resource_busy:
+            assert ev.resource_busy[res] == pytest.approx(
+                vec.resource_busy[res], rel=1e-12, abs=1e-12), (seed, res)
+        for rep in (ev, vec):
+            frac = rep.utilization().service_fractions()
+            for res in rep.resource_busy:
+                assert frac[res] == pytest.approx(rep.resource_busy[res],
+                                                  rel=1e-12, abs=1e-12)
+
+
+def test_stacked_scoring_report_refuses_utilization():
+    prof, net, sol, b, _B = random_instance(1)
+    reps = simulate_plans(prof, net, [(sol, b), (sol, max(1, b - 1))],
+                          num_microbatches=[5, 5], engine="auto")
+    stacked = [r for r in reps if r.timeline is None and r._records is None]
+    if not stacked:
+        pytest.skip("instance did not take the stacked plan axis")
+    with pytest.raises(ValueError, match="stacked"):
+        stacked[0].utilization()
+
+
+# ---------------------------------------------------------------------------
+# disabled-mode is a true no-op; counters/spans record when enabled
+# ---------------------------------------------------------------------------
+
+def test_disabled_mode_is_noop():
+    prof, net, sol = _chain()
+    snap = obs.get_registry().snapshot()
+    assert not obs.enabled()
+    simulate_plan(prof, net, sol, 2, num_microbatches=4, engine="auto")
+    obs.inc("should.not.appear")
+    assert obs.get_registry().snapshot() == snap == {}
+    assert obs.wall_spans() == []
+    # the disabled span is one shared singleton — nothing is allocated
+    assert obs.span("a", x=1) is obs.span("b", y=2)
+
+
+def test_counters_and_spans_record_when_enabled():
+    prof, net, sol = _chain()
+    with obs.enabled_scope() as reg:
+        simulate_plan(prof, net, sol, 2, num_microbatches=4, engine="auto")
+        snap = reg.snapshot()
+        assert snap.get("sim.dispatch.vectorized", 0) == 1
+        assert any(k.startswith("sim.engine_reason[") for k in snap)
+        names = [s.name for s in obs.wall_spans()]
+        assert "sim.simulate_plan" in names
+    assert not obs.enabled()          # scope restored
+    obs.reset()
+    assert obs.get_registry().snapshot() == {}
+
+
+def test_planner_and_bcd_counters():
+    from repro.core.bcd import bcd_solve
+    prof, net, sol, b, B = random_instance(2)
+    with obs.enabled_scope() as reg:
+        bcd_solve(prof, net, B)
+        snap = reg.snapshot()
+        assert snap.get("bcd.iterations", 0) >= 1
+        assert snap.get("planner.solve_memo_miss", 0) >= 1
+        assert snap.get("planner.dp_sweeps", 0) >= 1
+        names = {s.name for s in obs.wall_spans()}
+        assert {"bcd.solve", "bcd.iterate", "planner.solve"} <= names
+
+
+def test_coordinator_outcome_timing_fields():
+    from repro.ft.coordinator import Coordinator, Straggler
+    prof, net, sol, b, B = random_instance(4)
+    coord = Coordinator(prof, net, B)
+    out = coord.apply(Straggler(node=1, slowdown=3.0), sim_time=12.5)
+    assert out.sim_time == 12.5
+    assert out.solve_seconds > 0.0
+    rec = out.log_record()
+    assert rec["event"] == "Straggler"
+    assert rec["action"] in ("microbatch", "replan")
+    assert rec["sim_time"] == 12.5
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export (counter tracks, flows, wall-clock solver tracks)
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_extras_validate(tmp_path):
+    prof, net, sol = _chain()
+    with obs.enabled_scope():
+        rep = simulate_plan(prof, net, sol, 2, num_microbatches=3,
+                            engine="event")
+        spans = obs.wall_spans()
+    path = write_chrome_trace(rep.records, str(tmp_path / "trace.json"),
+                              counter_tracks=True, flow_events=True,
+                              wall_spans=spans)
+    data = json.loads(open(path).read())
+    errs = obs.validate_chrome_trace(data)
+    assert errs == [], errs
+    evs = data["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert {"M", "X", "C", "s", "f"} <= phases
+    # flows come in matched s/f pairs, one per (micro-batch, hop) round trip
+    starts = [e for e in evs if e["ph"] == "s"]
+    finishes = [e for e in evs if e["ph"] == "f"]
+    assert len(starts) == len(finishes) == 3     # 3 micro-batches x 1 hop
+    assert {e["id"] for e in starts} == {e["id"] for e in finishes}
+    # wall-clock solver tracks live on their own process
+    pids = {e["pid"] for e in evs}
+    assert obs.SOLVER_PID in pids and obs.SIM_PID in pids
+    sim_x = [e for e in evs if e["ph"] == "X" and e["pid"] == obs.SIM_PID]
+    assert len(sim_x) == len(rep.records)
+
+
+def test_validate_chrome_trace_flags_garbage():
+    assert obs.validate_chrome_trace([]) != []
+    assert obs.validate_chrome_trace({"traceEvents": 3}) != []
+    bad = {"traceEvents": [{"ph": "X", "pid": 0, "tid": "zero", "ts": 1.0,
+                            "dur": -2.0, "name": "x"}]}
+    errs = obs.validate_chrome_trace(bad)
+    assert any("tid" in e for e in errs)
+    assert any("dur" in e for e in errs)
+    good = {"traceEvents": [{"ph": "X", "pid": 0, "tid": 0, "ts": 0.0,
+                             "dur": 1.0, "name": "ok", "args": {}}]}
+    assert obs.validate_chrome_trace(good) == []
+
+
+def test_registry_dump_roundtrip(tmp_path):
+    with obs.enabled_scope():
+        obs.inc("a.counter", 3)
+        with obs.span("a.span"):
+            pass
+        path = obs.dump(str(tmp_path / "counters.json"))
+    data = json.loads(open(path).read())
+    assert data["counters"]["a.counter"] == 3
+    assert data["spans"]["a.span"]["count"] == 1
