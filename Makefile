@@ -7,9 +7,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-ci verify-docs test dev-deps sim-check bench \
-        bench-planner bench-costmodel bench-sim bench-fig6b bench-sweep \
-        bench-obs example-sim
+.PHONY: verify verify-ci verify-docs test dev-deps sim-check fuzz bench \
+        bench-planner bench-costmodel bench-sim bench-robustness \
+        bench-fig6b bench-sweep bench-obs example-sim
 
 verify:
 	$(PYTHON) -m pytest -x -q
@@ -22,7 +22,7 @@ verify-ci: verify
 DOCTEST_MODULES := \
   src/repro/sim/engine.py src/repro/sim/events.py src/repro/sim/policies.py \
   src/repro/sim/scenario.py src/repro/sim/validate.py \
-  src/repro/sim/advance.py \
+  src/repro/sim/advance.py src/repro/sim/fuzz.py src/repro/sim/robustness.py \
   src/repro/core/bcd.py src/repro/core/cost_model.py \
   src/repro/core/microbatch.py \
   src/repro/pipeline/schedule.py
@@ -43,6 +43,11 @@ dev-deps:
 sim-check:
 	$(PYTHON) -m pytest -q tests/test_sim.py
 
+# fixed-seed differential fuzz campaign + CVaR selection smoke: shrunk
+# parity breakers land in tests/corpus/, summary CSVs in results/bench/
+fuzz:
+	$(PYTHON) -m benchmarks.bench_robustness --smoke
+
 # planner scaling grid + the ISSUE-3 acceptance instance; rewrites the
 # repo-root BENCH_planner.json perf-trajectory file
 bench-planner:
@@ -58,8 +63,13 @@ bench-costmodel:
 bench-sim:
 	$(PYTHON) -m benchmarks.bench_sim
 
-bench: bench-planner bench-costmodel bench-sim bench-fig6b bench-sweep \
-       bench-obs
+# 500-case fuzz parity campaign + robust-vs-nominal plan selection;
+# rewrites the repo-root BENCH_robustness.json trajectory file
+bench-robustness:
+	$(PYTHON) -m benchmarks.bench_robustness
+
+bench: bench-planner bench-costmodel bench-sim bench-robustness \
+       bench-fig6b bench-sweep bench-obs
 
 # telemetry overhead on the 10k-micro-batch acceptance chain: asserts the
 # enabled-mode slowdown stays < 5% and disabled mode is a true no-op

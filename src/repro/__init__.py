@@ -18,7 +18,7 @@ _SUBMODULES = frozenset({
 _SIM_EXPORTS = frozenset({
     "Task", "Timeline", "TraceRecord", "VisitTable", "write_chrome_trace",
     "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
-    "iid_piecewise", "NetworkScenario", "ReplanTrigger",
+    "iid_piecewise", "square_wave", "NetworkScenario", "ReplanTrigger",
     "piecewise_cv_scenario", "gauss_markov_scenario",
     "AdmissionPolicy", "FIFO", "OneFOneB", "MemoryBudgeted",
     "resolve_policy",
@@ -29,6 +29,11 @@ _SIM_EXPORTS = frozenset({
     "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
     "compare_utilization",
     "random_chain_solution", "random_instance", "random_reentrant_solution",
+    "FuzzCase", "FuzzConfig", "FuzzSummary", "ParityResult", "check_parity",
+    "fuzz_case", "fuzz_event_stream", "fuzz_scenario", "load_case",
+    "load_corpus", "run_fuzz", "save_case", "shrink_case",
+    "RobustMakespan", "RobustnessReport", "cvar", "scenario_distribution",
+    "score_plan", "score_plans",
 })
 
 # the cost-model seam (ISSUE 4): mirrored from ``repro.core.cost_model``'s

@@ -1,7 +1,7 @@
 """Checkpoint/restart substrate with reshard-on-restore."""
 
 from .store import (CheckpointStore, save_checkpoint, restore_checkpoint,
-                    latest_step)
+                    estimate_restore_seconds, latest_step)
 
 __all__ = ["CheckpointStore", "save_checkpoint", "restore_checkpoint",
-           "latest_step"]
+           "estimate_restore_seconds", "latest_step"]

@@ -38,13 +38,17 @@ def save_checkpoint(directory: str, step: int, tree, *, meta: dict = None,
     background thread (training continues; join via CheckpointStore.wait)."""
     items, _ = _flatten_with_paths(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in items}
-    payload_meta = {"step": step, "time": time.time(), **(meta or {})}
+    payload_meta = {"step": step, "time": time.time(),
+                    "bytes": int(sum(a.nbytes for a in arrays.values())),
+                    **(meta or {})}
 
     def write():
         final = os.path.join(directory, f"step_{step:08d}")
         scratch = final + ".tmp"
         os.makedirs(scratch, exist_ok=True)
+        t0 = time.perf_counter()
         np.savez(os.path.join(scratch, "arrays.npz"), **arrays)
+        payload_meta["write_seconds"] = time.perf_counter() - t0
         with open(os.path.join(scratch, "meta.json"), "w") as f:
             json.dump(payload_meta, f)
         if os.path.exists(final):
@@ -57,6 +61,35 @@ def save_checkpoint(directory: str, step: int, tree, *, meta: dict = None,
     t = threading.Thread(target=write, daemon=True)
     t.start()
     return t
+
+
+def estimate_restore_seconds(directory: str, step: int | None = None, *,
+                             read_bandwidth: float | None = None) -> float:
+    """Predicted wall-clock of ``restore_checkpoint`` for an existing
+    checkpoint, from its recorded metadata — the restore-cost term the
+    elastic coordinator charges when a ``NodeFailure`` forces a resume.
+
+    Every checkpoint written by :func:`save_checkpoint` records its gathered
+    payload size (``bytes``) and the measured serialization time
+    (``write_seconds``).  With ``read_bandwidth`` (bytes/s — e.g. the
+    recovering node's measured disk or link rate) the estimate is
+    ``bytes / read_bandwidth``; without it, the measured write time stands
+    in for the read-back (same payload through the same storage path).
+    Returns 0.0 when no checkpoint exists — nothing to restore.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return 0.0
+    path = os.path.join(directory, f"step_{step:08d}", "meta.json")
+    try:
+        with open(path) as f:
+            meta = json.load(f)
+    except OSError:
+        return 0.0
+    if read_bandwidth is not None and read_bandwidth > 0:
+        return float(meta.get("bytes", 0)) / read_bandwidth
+    return float(meta.get("write_seconds", 0.0))
 
 
 def latest_step(directory: str) -> int | None:

@@ -64,6 +64,7 @@ class ReplanOutcome:
     remapped_stages: bool
     solve_seconds: float = 0.0   # wall-clock spent replanning
     sim_time: float | None = None  # simulated time the event fired (if driven)
+    restore_seconds: float = 0.0  # checkpoint-restore charge (NodeFailure)
 
     @property
     def new_latency(self) -> float:
@@ -80,6 +81,7 @@ class ReplanOutcome:
             "new_latency": self.new_latency,
             "solve_seconds": self.solve_seconds,
             "sim_time": self.sim_time,
+            "restore_seconds": self.restore_seconds,
         }
 
 
@@ -90,17 +92,33 @@ class Coordinator:
     — the initial solve, full replans and the Theorem-1 cheap path — so an
     elastic deployment can replan against the *measured* makespan
     (``repro.core.cost_model.SimMakespan``) instead of Eq. (14).
+
+    ``restore_cost`` is the checkpoint-restore charge of a ``NodeFailure``
+    (resuming means reloading params from the latest checkpoint): a float
+    (seconds), or a zero-argument callable queried at failure time — e.g.
+    ``lambda: checkpoint.estimate_restore_seconds(ckpt_dir)``, which prices
+    the restore from the store's recorded payload size / write timing.  The
+    charge lands on ``ReplanOutcome.restore_seconds`` and is added to the
+    downtime by ``sim.simulate_with_replanning``.
+
+    Every full replan also scores the *ride-out* candidate — the old
+    ``(solution, b)`` carried onto the mutated network (with placement
+    indices remapped across a failure's renumbering) — and keeps it when it
+    beats the fresh BCD solve, so the replanned latency is never worse than
+    simply riding out the failure under the same cost model.
     """
 
     def __init__(self, profile: ModelProfile, net: EdgeNetwork, B: int,
                  *, theta: float = 0.01,
-                 microbatch_gain_threshold: float = 0.95, cost_model=None):
+                 microbatch_gain_threshold: float = 0.95, cost_model=None,
+                 restore_cost=0.0):
         self.profile = profile
         self.net = net
         self.B = B
         self.theta = theta
         self.mb_gain_threshold = microbatch_gain_threshold
         self.cost_model = resolve_cost_model(cost_model)
+        self.restore_cost = restore_cost
         self.plan = bcd_solve(profile, net, B, theta=theta,
                               cost_model=self.cost_model)
         self.events: list = []
@@ -113,9 +131,12 @@ class Coordinator:
         with obs.span("ft.apply", event=type(event).__name__):
             t0 = time.perf_counter()
             old_L = self._current_latency()
+            old_sol, old_b = self.plan.solution, self.plan.b
             if isinstance(event, NodeFailure):
                 self.net = self.net.degraded([event.server])
+                old_sol = self._remap_across_failure(old_sol, event.server)
                 outcome = self._full_replan(event, old_L)
+                outcome.restore_seconds = self._restore_seconds()
             elif isinstance(event, RateChange):
                 rate = self.net.rate.copy()
                 rate[event.n_from, event.n_to] *= event.factor
@@ -130,6 +151,7 @@ class Coordinator:
                 outcome = self._straggler_mitigation(event, old_L)
             else:
                 raise TypeError(event)
+            self._prefer_ride_out(old_sol, old_b, outcome)
             outcome.solve_seconds = time.perf_counter() - t0
             outcome.sim_time = sim_time
         obs.inc("ft.replans")
@@ -150,6 +172,54 @@ class Coordinator:
                                             self.B)
         except Exception:
             return math.inf
+
+    def _restore_seconds(self) -> float:
+        rc = self.restore_cost
+        return float(rc()) if callable(rc) else float(rc)
+
+    @staticmethod
+    def _remap_across_failure(sol, server: int):
+        """The old solution re-expressed in the degraded network's indices
+        (``degraded([server])`` drops one row/column and shifts the rest
+        down), or ``None`` when the failed server hosted a stage — then
+        there is no ride-out: its submodels must move."""
+        if server in sol.placement:
+            return None
+        placement = tuple(n - 1 if n > server else n for n in sol.placement)
+        return dataclasses.replace(sol, placement=placement)
+
+    def _prefer_ride_out(self, old_sol, old_b: int, outcome) -> None:
+        """Score the ride-out candidate — the pre-event ``(solution, b)``
+        on the *mutated* network — and keep it when it strictly beats the
+        fresh solve: the BCD alternation is a heuristic and need not visit
+        the incumbent, but an elastic deployment should never migrate to a
+        plan slower than standing pat.  Mutates ``outcome.new_plan`` (and
+        ``self.plan``) in place; the action stays "replan"/"microbatch"
+        with ``remapped_stages`` downgraded to whether stages still move.
+        """
+        if old_sol is None or old_b < 1:
+            return
+        try:
+            if not self.cost_model.memory_feasible(self.profile, self.net,
+                                                   old_sol, old_b):
+                return
+            ride_L = self.cost_model.evaluate(self.profile, self.net,
+                                              old_sol, old_b, self.B)
+        except Exception:
+            return
+        if not (math.isfinite(ride_L)
+                and ride_L < self.plan.objective * (1.0 - 1e-12)):
+            return
+        obs.inc("ft.ride_out_kept")
+        self.plan = dataclasses.replace(
+            self.plan, solution=old_sol, b=old_b,
+            T_f=fill_latency(self.profile, self.net, old_sol, old_b),
+            T_i=pipeline_interval(self.profile, self.net, old_sol, old_b),
+            L_t=total_latency(self.profile, self.net, old_sol, old_b, self.B),
+            objective=ride_L, feasible=True,
+            cost_model=self.cost_model.name)
+        outcome.new_plan = self.plan
+        outcome.remapped_stages = False
 
     def _full_replan(self, event, old_L) -> ReplanOutcome:
         old_sol = self.plan.solution

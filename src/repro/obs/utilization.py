@@ -180,6 +180,23 @@ class UtilizationReport:
         the ramp phases Eq. (12)/(14) charge once per fill ``xi``."""
         return self._fraction(self._total("fill") + self._total("drain"))
 
+    @property
+    def blocked_fraction_total(self) -> float:
+        """Share of total resource-time spent *blocked* — tasks occupying a
+        resource through a zero-capacity scenario window (an outage holding
+        work hostage, as opposed to the schedule-shaped idle of
+        ``bubble``/``fill``/``drain``).  Nonzero only when the report was
+        built with scenario ``traces``."""
+        return self._fraction(self._total("blocked"))
+
+    def blocked_by_resource(self) -> dict:
+        """Per-resource blocked seconds, worst first — the attribution a
+        robustness report uses to say *where* a failure distribution bites
+        (``sim.robustness.RobustnessReport.top_blocked``)."""
+        items = [(res, ru.blocked) for res, ru in self.resources.items()
+                 if ru.blocked > 0.0]
+        return dict(sorted(items, key=lambda kv: -kv[1]))
+
     def node_idle_fraction(self) -> dict:
         """Idle fraction per node (its fp + bp engines pooled)."""
         return self._group_idle(

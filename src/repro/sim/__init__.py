@@ -15,14 +15,21 @@ engine validates event by event.  ``scenario`` supplies time-varying capacity tr
 replan triggers.  ``validate`` cross-checks the simulated ``T_f``/``T_i``/
 ``L_t`` against ``core.latency`` on deterministic networks — exact to
 numerical tolerance, a standing consistency test — and the two engines
-against each other.
+against each other.  ``fuzz`` composes the scenario primitives into seeded
+production-failure families (regional degradation, flapping links,
+adversarially-timed bottleneck outages, node churn event streams) behind a
+shrinking differential oracle, and ``robustness`` scores plans across those
+distributions (mean/p95/CVaR of makespan, blocked-time attribution) with
+``RobustMakespan`` threading tail risk through the planner's cost-model
+seam.
 """
 
 from .events import (Task, Timeline, TraceRecord, VisitTable,
                      write_chrome_trace)
 from .scenario import (PiecewiseTrace, constant, piecewise, gauss_markov,
-                       iid_piecewise, NetworkScenario, ReplanTrigger,
-                       piecewise_cv_scenario, gauss_markov_scenario)
+                       iid_piecewise, square_wave, NetworkScenario,
+                       ReplanTrigger, piecewise_cv_scenario,
+                       gauss_markov_scenario)
 from .policies import (AdmissionPolicy, FIFO, OneFOneB, MemoryBudgeted,
                        resolve_policy, activation_occupancy,
                        stage_activation_highwater)
@@ -34,11 +41,16 @@ from .validate import (CrossCheck, cross_validate, cross_validate_many,
                        compare_engines, compare_utilization,
                        random_chain_solution, random_instance,
                        random_reentrant_solution)
+from .fuzz import (FuzzCase, FuzzConfig, FuzzSummary, ParityResult,
+                   check_parity, fuzz_case, fuzz_event_stream, fuzz_scenario,
+                   load_case, load_corpus, run_fuzz, save_case, shrink_case)
+from .robustness import (RobustMakespan, RobustnessReport, cvar,
+                         scenario_distribution, score_plan, score_plans)
 
 __all__ = [
     "Task", "Timeline", "TraceRecord", "VisitTable", "write_chrome_trace",
     "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
-    "iid_piecewise", "NetworkScenario", "ReplanTrigger",
+    "iid_piecewise", "square_wave", "NetworkScenario", "ReplanTrigger",
     "piecewise_cv_scenario", "gauss_markov_scenario",
     "AdmissionPolicy", "FIFO", "OneFOneB", "MemoryBudgeted", "resolve_policy",
     "activation_occupancy", "stage_activation_highwater",
@@ -48,4 +60,9 @@ __all__ = [
     "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
     "compare_utilization",
     "random_chain_solution", "random_instance", "random_reentrant_solution",
+    "FuzzCase", "FuzzConfig", "FuzzSummary", "ParityResult", "check_parity",
+    "fuzz_case", "fuzz_event_stream", "fuzz_scenario", "load_case",
+    "load_corpus", "run_fuzz", "save_case", "shrink_case",
+    "RobustMakespan", "RobustnessReport", "cvar", "scenario_distribution",
+    "score_plan", "score_plans",
 ]

@@ -891,9 +891,13 @@ def simulate_with_replanning(profile: ModelProfile, net: EdgeNetwork, B: int,
     in-flight ones are discarded (they re-run after the remap), the event is
     applied to the coordinator — mutating its network and replanning per the
     paper's BCD — and the remaining samples resume at
-    ``trigger.time + remap_penalty`` under the new plan.  The physical
-    effect of each event (slower node, changed rate, lost server) takes hold
-    from its trigger time via the coordinator's mutated network.
+    ``trigger.time + remap_penalty + outcome.restore_seconds`` under the new
+    plan: a ``NodeFailure`` additionally pays the checkpoint-restore charge
+    the coordinator's ``restore_cost`` prices (see
+    ``repro.checkpoint.estimate_restore_seconds``), since resuming after a
+    lost server means reloading params from the latest checkpoint.  The
+    physical effect of each event (slower node, changed rate, lost server)
+    takes hold from its trigger time via the coordinator's mutated network.
 
     ``policy``/``engine`` are forwarded to each segment's ``simulate_plan``.
 
@@ -937,7 +941,7 @@ def simulate_with_replanning(profile: ModelProfile, net: EdgeNetwork, B: int,
         outcome = coord.apply(trig.event, sim_time=trig.time)
         segments.append(SegmentReport(plan, rep, done, trig.time, trig,
                                       outcome))
-        t = trig.time + remap_penalty
+        t = trig.time + remap_penalty + outcome.restore_seconds
     if samples_left > 0:
         plan = coord.plan
         if plan.feasible and plan.b > 0:

@@ -1,0 +1,286 @@
+"""Plan robustness under failure distributions: tail-risk (CVaR) scoring and
+the :class:`RobustMakespan` cost model.
+
+The paper's Eqs. (12)-(14) optimize *expected* latency on a known network;
+an edge deployment cares at least as much about the tail — the makespan when
+the region degrades, a link flaps, or the bottleneck stage goes dark
+mid-round.  This module runs a plan across a *distribution* of fuzzed
+scenarios (:func:`repro.sim.fuzz.fuzz_scenario` families) through the
+multi-plan stacked engine and reports
+
+* **mean / p95 / CVaR_alpha of the makespan** — CVaR_alpha ("expected
+  shortfall") is the mean of the worst ``ceil((1-alpha) * n)`` makespans:
+  the expected latency *given* that one of the (1-alpha)-tail scenarios hit;
+* **per-resource blocked-time attribution** — which node/link the tail
+  scenarios starve, from ``obs.UtilizationReport``'s blocked decomposition
+  (the Fig. 2 idle taxonomy, under failures instead of steady state).
+
+:class:`RobustMakespan` threads the risk objective through the planner's
+``CostModel`` seam, so ``bcd_solve`` / ``exhaustive_joint`` trade expected
+speed against tail latency: ``risk_aversion=1`` selects plans by pure
+CVaR, ``0`` by the mean over the distribution, anything between mixes.
+
+>>> import numpy as np
+>>> cvar([1.0, 2.0, 3.0, 10.0], alpha=0.75)
+10.0
+>>> cvar([1.0, 2.0, 3.0, 10.0], alpha=0.5)
+6.5
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, SimMakespan
+from repro.core.network import EdgeNetwork
+from .engine import build_visit_table, simulate_plan, simulate_plans
+from .fuzz import FuzzConfig, fuzz_scenario
+from .scenario import NetworkScenario
+
+__all__ = ["cvar", "scenario_distribution", "RobustnessReport",
+           "score_plan", "score_plans", "RobustMakespan"]
+
+
+def cvar(values, alpha: float = 0.95) -> float:
+    """Conditional value-at-risk: the mean of the worst
+    ``ceil((1 - alpha) * n)`` values.  ``alpha=0`` is the plain mean,
+    ``alpha -> 1`` the maximum."""
+    if not 0.0 <= alpha < 1.0:
+        raise ValueError("need 0 <= alpha < 1")
+    arr = np.sort(np.asarray(values, dtype=float))
+    if arr.size == 0:
+        raise ValueError("cvar of an empty sample")
+    k = int(math.ceil((1.0 - alpha) * arr.size))
+    return float(arr[-k:].mean())
+
+
+def scenario_distribution(net: EdgeNetwork, n: int, *, seed: int = 0,
+                          config: FuzzConfig | None = None, profile=None,
+                          sol=None, b: int | None = None,
+                          num_microbatches: int = 4) -> tuple:
+    """``n`` seeded fuzzed scenarios over ``net`` — the failure distribution
+    every candidate plan is scored against (one *fixed* tuple, so scores are
+    comparable across plans).  Passing a reference plan scales windows to
+    its closed-form run length and arms the ``adversarial`` family against
+    *its* bottleneck — the natural choice is the nominal (closed-form)
+    selection, making the distribution a worst-case probe of the default
+    plan."""
+    config = config or FuzzConfig()
+    rng = np.random.default_rng(seed)
+    return tuple(fuzz_scenario(rng, net, config, profile=profile, sol=sol,
+                               b=b, num_microbatches=num_microbatches)
+                 for _ in range(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustnessReport:
+    """Tail-risk profile of one plan across a scenario distribution."""
+    makespans: tuple             # measured L_t, one per scenario
+    nominal: float               # scenario-free makespan of the same plan
+    alpha: float                 # CVaR confidence level
+    blocked: dict | None = None  # resource -> mean blocked seconds, or None
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.makespans))
+
+    @property
+    def p95(self) -> float:
+        return float(np.quantile(np.asarray(self.makespans), 0.95))
+
+    @property
+    def cvar(self) -> float:
+        return cvar(self.makespans, self.alpha)
+
+    @property
+    def worst(self) -> float:
+        return float(np.max(self.makespans))
+
+    @property
+    def tail_inflation(self) -> float:
+        """CVaR relative to the failure-free run — how much of the nominal
+        speed the tail scenarios take back."""
+        return self.cvar / self.nominal if self.nominal > 0 else math.inf
+
+    def top_blocked(self, k: int = 3) -> list:
+        """The ``k`` resources losing the most time to zero-capacity windows
+        (``[(resource, mean_blocked_seconds)]``), worst first."""
+        if not self.blocked:
+            return []
+        items = sorted(self.blocked.items(), key=lambda kv: -kv[1])
+        return [(res, t) for res, t in items[:k] if t > 0.0]
+
+
+def _blocked_attribution(profile, net, sol, b, reports, scenarios) -> dict:
+    """Mean per-resource blocked seconds across the distribution's runs."""
+    from repro.obs import resource_traces
+    table = build_visit_table(profile, net, sol, b)
+    resources = set(table.resources)
+    total: dict = {}
+    for rep, scen in zip(reports, scenarios):
+        traces = resource_traces(net, scen, resources)
+        for res, u in rep.utilization(traces=traces).resources.items():
+            total[res] = total.get(res, 0.0) + u.blocked
+    return {res: t / len(reports) for res, t in total.items()}
+
+
+def score_plan(profile, net, sol, b: int, *, B: int | None = None,
+               num_microbatches: int | None = None, scenarios,
+               policy="fifo", engine: str = "auto", alpha: float = 0.95,
+               attribution: bool = True) -> RobustnessReport:
+    """Run one plan across ``scenarios`` and report its tail risk.  With
+    ``attribution=True`` each run keeps its timeline and the report carries
+    mean per-resource blocked time (where the failures actually bit)."""
+    scenarios = tuple(scenarios)
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    kw = dict(B=B, num_microbatches=num_microbatches, policy=policy,
+              engine=engine)
+    nominal = simulate_plan(profile, net, sol, b, **kw)
+    if attribution:
+        reports = [simulate_plan(profile, net, sol, b, scenario=s, **kw)
+                   for s in scenarios]
+        blocked = _blocked_attribution(profile, net, sol, b, reports,
+                                       scenarios)
+    else:
+        reports = [
+            simulate_plans(profile, net, [(sol, b)], B=B,
+                           num_microbatches=None if num_microbatches is None
+                           else [num_microbatches],
+                           scenario=s, policy=policy, engine=engine)[0]
+            for s in scenarios]
+        blocked = None
+    return RobustnessReport(makespans=tuple(r.L_t for r in reports),
+                            nominal=nominal.L_t, alpha=alpha,
+                            blocked=blocked)
+
+
+def score_plans(profile, net, cands, *, B: int, scenarios, policy="fifo",
+                engine: str = "auto", alpha: float = 0.95) -> list:
+    """Batched :func:`score_plan` (no attribution): for each scenario, ONE
+    ``simulate_plans`` call scores every candidate on the stacked plan axis;
+    the per-candidate reports aggregate across scenarios."""
+    cands = list(cands)
+    scenarios = tuple(scenarios)
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    nominal = simulate_plans(profile, net, cands, B=B, policy=policy,
+                             engine=engine)
+    cols = [simulate_plans(profile, net, cands, B=B, scenario=s,
+                           policy=policy, engine=engine)
+            for s in scenarios]
+    return [RobustnessReport(
+                makespans=tuple(col[i].L_t for col in cols),
+                nominal=nominal[i].L_t, alpha=alpha)
+            for i in range(len(cands))]
+
+
+class RobustMakespan(CostModel):
+    """Distributionally-robust objective for the planner seam:
+
+        objective = (1 - risk_aversion) * mean(L_t over scenarios)
+                    + risk_aversion * CVaR_alpha(L_t over scenarios)
+
+    measured by the simulator under an admission policy (memory-budgeted by
+    default, like :class:`~repro.core.cost_model.SimMakespan`, whose memory
+    predicate this model reuses — the Eq. (24) feasible-b box is a
+    *capacity* property, not a scenario property).
+
+    The scenario distribution is either passed explicitly (``scenarios=`` —
+    what the benchmark does, so nominal- and robust-selected plans face the
+    *same* failures) or lazily fuzzed on first evaluation against a network
+    (seeded; windows scaled to the first-scored candidate, which under
+    ``bcd_solve`` is the closed-form warm start — i.e. the distribution
+    probes the default plan's weak spots).  Distributions are cached per
+    network object: the elastic coordinator re-solves on *mutated* networks
+    and must not reuse traces keyed to the old indices.
+    """
+
+    name = "robust_makespan"
+
+    def __init__(self, *, scenarios=None, n_scenarios: int = 12,
+                 alpha: float = 0.95, risk_aversion: float = 1.0,
+                 seed: int = 0, config: FuzzConfig | None = None,
+                 policy="memory", engine: str = "auto",
+                 memory_model: str = "refined"):
+        if not 0.0 <= risk_aversion <= 1.0:
+            raise ValueError("need 0 <= risk_aversion <= 1")
+        self.scenarios = None if scenarios is None else tuple(scenarios)
+        self.n_scenarios = n_scenarios
+        self.alpha = alpha
+        self.risk_aversion = risk_aversion
+        self.seed = seed
+        self.config = config or FuzzConfig()
+        self._sim = SimMakespan(policy=policy, engine=engine,
+                                memory_model=memory_model)
+        self._dist_cache: list = []      # [(net, scenarios)], small FIFO
+
+    # -- the distribution ---------------------------------------------------
+    def distribution(self, profile, net, sol=None, b=None,
+                     B: int | None = None) -> tuple:
+        """The scenario tuple this model scores against ``net`` — explicit
+        ``scenarios`` if given, else the cached lazily-fuzzed one."""
+        if self.scenarios is not None:
+            return self.scenarios
+        for cached_net, scens in self._dist_cache:
+            if cached_net is net:
+                return scens
+        Q = 4
+        if b and B:
+            Q = max(1, 1 + math.ceil((B - b) / b))
+        scens = scenario_distribution(net, self.n_scenarios, seed=self.seed,
+                                      config=self.config, profile=profile,
+                                      sol=sol, b=b, num_microbatches=Q)
+        self._dist_cache.append((net, scens))
+        del self._dist_cache[:-4]
+        return scens
+
+    def _risk(self, makespans) -> float:
+        lam = self.risk_aversion
+        return ((1.0 - lam) * float(np.mean(makespans))
+                + lam * cvar(makespans, self.alpha))
+
+    # -- the CostModel surface ---------------------------------------------
+    def evaluate(self, profile, net, sol, b, B) -> float:
+        return self.evaluate_many(profile, net, [(sol, b)], B)[0]
+
+    def evaluate_many(self, profile, net, cands, B) -> list:
+        cands = list(cands)
+        out = [math.inf] * len(cands)
+        live = [i for i, (sol, b) in enumerate(cands)
+                if b >= 1 and self._sim.memory_feasible(profile, net, sol, b)]
+        if not live:
+            return out
+        s0, b0 = cands[live[0]]
+        scens = self.distribution(profile, net, s0, b0, B)
+        cols = [simulate_plans(profile, net, [cands[i] for i in live], B=B,
+                               scenario=s, policy=self._sim.policy,
+                               engine=self._sim.engine)
+                for s in scens]
+        for j, i in enumerate(live):
+            out[i] = self._risk([col[j].L_t for col in cols])
+        return out
+
+    def memory_feasible(self, profile, net, sol, b) -> bool:
+        return self._sim.memory_feasible(profile, net, sol, b)
+
+    def memory_feasible_many(self, profile, net, sol, bs) -> list:
+        return self._sim.memory_feasible_many(profile, net, sol, bs)
+
+    def report(self, profile, net, sol, b, B) -> RobustnessReport:
+        """Full :class:`RobustnessReport` (with blocked-time attribution)
+        for one plan under this model's distribution."""
+        return score_plan(profile, net, sol, b, B=B,
+                          scenarios=self.distribution(profile, net, sol, b,
+                                                      B),
+                          policy=self._sim.policy, engine=self._sim.engine,
+                          alpha=self.alpha)
+
+    def __repr__(self):
+        src = f"n_scenarios={self.n_scenarios}, seed={self.seed}" \
+            if self.scenarios is None else f"scenarios={len(self.scenarios)}"
+        return (f"RobustMakespan({src}, alpha={self.alpha}, "
+                f"risk_aversion={self.risk_aversion})")

@@ -210,6 +210,35 @@ def _window(start: float, end: float, inside: float) -> PiecewiseTrace:
     return piecewise((0.0, start, end), (1.0, inside, 1.0))
 
 
+def square_wave(start: float, end: float, *, period: float,
+                duty: float = 0.5, low: float = 0.0,
+                high: float = 1.0) -> PiecewiseTrace:
+    """Flapping-link multiplier: alternates ``high`` (for ``duty * period``)
+    and ``low`` within ``[start, end)``, 1 outside — the square-wave model
+    of a link that repeatedly drops and recovers.  The trace always returns
+    to 1 at ``end``, so it drains (finite makespans) by construction.
+
+    >>> square_wave(0.0, 2.0, period=1.0, duty=0.5, low=0.0)
+    PiecewiseTrace(times=(0.0, 0.5, 1.0, 1.5, 2.0), values=(1.0, 0.0, 1.0, 0.0, 1.0))
+    """
+    if not 0.0 <= start <= end:
+        raise ValueError("need 0 <= start <= end")
+    if period <= 0.0 or not 0.0 < duty < 1.0:
+        raise ValueError("need period > 0 and 0 < duty < 1")
+    if start == end:
+        return constant(1.0)
+    times = [0.0] if start == 0.0 else [0.0, start]
+    values = [high] if start == 0.0 else [1.0, high]
+    t = start
+    up = True
+    while t < end:
+        t = min(t + (duty if up else 1.0 - duty) * period, end)
+        up = not up
+        times.append(t)
+        values.append((high if up else low) if t < end else 1.0)
+    return piecewise(tuple(times), tuple(values))
+
+
 def iid_piecewise(rng: np.random.Generator, cv: float, *, dt: float,
                   horizon: float, mean: float = 1.0,
                   floor: float = 0.05) -> PiecewiseTrace:
@@ -304,6 +333,49 @@ class NetworkScenario:
             lm = s._compose(s.link_mult, (c, a), _window(start, end, 0.0))
             s = dataclasses.replace(s, link_mult=lm)
         return s
+
+    def with_flapping(self, a: int, c: int, start: float, end: float, *,
+                      period: float, duty: float = 0.5, low: float = 0.0,
+                      both_directions: bool = True) -> "NetworkScenario":
+        """Link (a, c) flaps as a square wave on [start, end): up at full
+        rate for ``duty * period``, down at ``low`` x for the rest of each
+        period.  ``low=0`` models hard drops (transfers stall and resume)."""
+        wave = square_wave(start, end, period=period, duty=duty, low=low)
+        lm = self._compose(self.link_mult, (a, c), wave)
+        s = dataclasses.replace(self, link_mult=lm)
+        if both_directions:
+            lm = s._compose(s.link_mult, (c, a), wave)
+            s = dataclasses.replace(s, link_mult=lm)
+        return s
+
+    def with_region_degradation(self, nodes, links, start: float, end: float,
+                                factor: float) -> "NetworkScenario":
+        """Correlated regional degradation: every node in ``nodes`` and every
+        directed link in ``links`` is scaled by the SAME ``factor`` on
+        [start, end) — the one-shared-cause failure mode (congested backhaul,
+        regional power event) that independent per-resource noise never
+        produces.  Callers pass the affected link pairs explicitly (e.g. all
+        links touching the region's nodes) so the scenario stays
+        network-agnostic."""
+        if factor <= 0.0:
+            raise ValueError("degradation factor must be positive "
+                             "(use with_outage for hard zero-capacity)")
+        win = _window(start, end, factor)
+        nm = dict(self.node_mult)
+        for n in nodes:
+            nm[n] = nm[n] * win if n in nm else win
+        lm = dict(self.link_mult)
+        for key in links:
+            a, c = key
+            lm[(a, c)] = lm[(a, c)] * win if (a, c) in lm else win
+        return dataclasses.replace(self, node_mult=nm, link_mult=lm)
+
+    def drains(self) -> bool:
+        """True when every multiplier trace ends at positive capacity — no
+        resource can stall forever, so makespans stay finite (the fuzzer's
+        standing guarantee; see ``repro.sim.fuzz``)."""
+        return all(tr.drains() for tr in self.node_mult.values()) and \
+            all(tr.drains() for tr in self.link_mult.values())
 
     def with_replan(self, time: float, event) -> "NetworkScenario":
         trig = ReplanTrigger(time, event)

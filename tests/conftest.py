@@ -7,6 +7,13 @@ import pytest
 from repro.core import make_edge_network, vgg16_profile, random_profile
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running checks (wall-clock measurements); deselect "
+        "with -m 'not slow'")
+
+
 @pytest.fixture
 def vgg_profile():
     return vgg16_profile(work_units="bytes")

@@ -3,14 +3,16 @@ restore-into-different-sharding (single-device here; multi-device reshard
 covered in test_spmd.py's subprocess)."""
 
 import os
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (CheckpointStore, latest_step,
-                              restore_checkpoint, save_checkpoint)
+from repro.checkpoint import (CheckpointStore, estimate_restore_seconds,
+                              latest_step, restore_checkpoint,
+                              save_checkpoint)
 
 
 def _tree(seed=0):
@@ -57,6 +59,52 @@ def test_missing_leaf_raises(tmp_path):
     with pytest.raises(KeyError):
         restore_checkpoint(str(tmp_path), 0, jax.eval_shape(
             lambda: {"a": jnp.zeros((2,)), "extra": jnp.zeros((1,))}))
+
+
+def test_meta_records_restore_cost_inputs(tmp_path):
+    """Every checkpoint carries the payload size and measured write time
+    the restore-cost estimate is priced from."""
+    t = _tree()
+    save_checkpoint(str(tmp_path), 2, t)
+    _restored, meta = restore_checkpoint(str(tmp_path), 2,
+                                         jax.eval_shape(lambda: t))
+    want_bytes = sum(np.asarray(a).nbytes for a in jax.tree.leaves(t))
+    assert meta["bytes"] == want_bytes
+    assert meta["write_seconds"] > 0.0
+
+
+def test_estimate_restore_seconds(tmp_path):
+    tree = {"w": jnp.ones((64, 64), jnp.float32)}
+    save_checkpoint(str(tmp_path), 5, tree)
+    # bandwidth model: bytes / read_bandwidth, exactly
+    assert estimate_restore_seconds(str(tmp_path), read_bandwidth=1e6) == \
+        pytest.approx(64 * 64 * 4 / 1e6)
+    # write-time proxy: positive, and equal to the recorded meta field
+    _restored, meta = restore_checkpoint(str(tmp_path), 5,
+                                         jax.eval_shape(lambda: tree))
+    assert estimate_restore_seconds(str(tmp_path)) == meta["write_seconds"]
+    # nothing to restore -> nothing to charge
+    assert estimate_restore_seconds(str(tmp_path / "empty")) == 0.0
+
+
+@pytest.mark.slow
+def test_restore_estimate_tracks_measured_wallclock(tmp_path):
+    """Cross-check the priced restore cost against a measured
+    ``restore_checkpoint`` wall-clock on a multi-MB payload.  Wall-clock
+    ratios on shared CI hardware are noisy, so the bound is deliberately
+    loose — this guards against the estimate being orders of magnitude off
+    (e.g. priced in the wrong unit), not against scheduler jitter."""
+    tree = {f"layer{i}": jnp.ones((256, 1024), jnp.float32)
+            for i in range(8)}                      # 8 MiB payload
+    save_checkpoint(str(tmp_path), 1, tree)
+    like = jax.eval_shape(lambda: tree)
+    restore_checkpoint(str(tmp_path), 1, like)      # warm the page cache
+    t0 = time.perf_counter()
+    restore_checkpoint(str(tmp_path), 1, like)
+    measured = time.perf_counter() - t0
+    est = estimate_restore_seconds(str(tmp_path))
+    assert est > 0.0 and measured > 0.0
+    assert measured / 100.0 <= est <= measured * 100.0, (est, measured)
 
 
 def test_trainer_restart_resumes(tmp_path):

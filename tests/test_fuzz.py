@@ -1,0 +1,176 @@
+"""The chaos fuzzer as test infrastructure: determinism, the standing
+event-vs-vectorized differential oracle, the zero-trailing-capacity
+auto-fallback regression, shrinking, and corpus replay.
+
+The big (>= 500 case) campaign runs in ``benchmarks/bench_robustness.py``
+(CI smoke runs a fixed-seed slice); here the oracle runs a tier-1-sized
+slice plus every minimized repro committed under ``tests/corpus/``.
+"""
+
+import dataclasses
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.sim import fuzz as F
+from repro.sim.engine import simulate_plan
+from repro.sim.scenario import NetworkScenario, PiecewiseTrace, square_wave
+
+CORPUS_DIR = os.path.join(os.path.dirname(__file__), "corpus")
+
+
+# ---------------------------------------------------------------------------
+# Determinism + the fuzzer's own invariants
+# ---------------------------------------------------------------------------
+
+def test_fuzz_case_deterministic():
+    for seed in (0, 3, 17, 1234):
+        a, b = F.fuzz_case(seed), F.fuzz_case(seed)
+        assert a == b
+        prof_a, net_a, sol_a = F.case_instance(a)
+        prof_b, net_b, sol_b = F.case_instance(b)
+        assert sol_a == sol_b and len(net_a.nodes) == len(net_b.nodes)
+        np.testing.assert_array_equal(net_a.rate, net_b.rate)
+
+
+def test_fuzzed_scenarios_always_drain_by_default():
+    """The default config guarantees finite makespans by construction:
+    every family's trace returns to positive capacity."""
+    for seed in range(60):
+        case = F.fuzz_case(seed)
+        assert case.scenario.drains(), seed
+
+
+def test_fuzz_families_all_reachable():
+    """Over a modest seed range every failure family appears (the sampler
+    is not silently skipping one)."""
+    kinds = set()
+    for seed in range(80):
+        case = F.fuzz_case(seed)
+        for tr in case.scenario.node_mult.values():
+            kinds.add("node")
+        for tr in case.scenario.link_mult.values():
+            kinds.add("link")
+            if len(tr.times) > 6:
+                kinds.add("dense")         # flapping / drift breakpoints
+            if 0.0 in tr.values:
+                kinds.add("outage")
+    assert {"node", "link", "dense", "outage"} <= kinds, kinds
+
+
+def test_differential_oracle_slice():
+    """Tier-1 slice of the standing campaign: fuzzed scenarios replayed
+    through both engines agree to <= 1e-9 and never produce a silent
+    infinite makespan."""
+    summary = F.run_fuzz(40, seed=2)
+    assert summary.ok, summary.failures
+    assert summary.max_gap <= 1e-9
+    assert summary.vectorized > 0          # the oracle exercises both paths
+
+
+# ---------------------------------------------------------------------------
+# Zero-trailing-capacity: the documented event-engine fallback
+# ---------------------------------------------------------------------------
+
+def _dead_link_case(seed: int = 4):
+    """A fuzz case whose scenario kills a link the plan actually uses,
+    forever (zero trailing capacity)."""
+    case = F.fuzz_case(seed)
+    _prof, _net, sol = F.case_instance(case)
+    a, c = sol.placement[0], sol.placement[1]      # first hop is always used
+    dead = PiecewiseTrace((0.0, 0.5), (1.0, 0.0))
+    scen = NetworkScenario(link_mult={(a, c): dead})
+    return dataclasses.replace(case, scenario=scen)
+
+
+def test_zero_trailing_capacity_auto_falls_back_to_event():
+    case = _dead_link_case()
+    prof, net, sol = F.case_instance(case)
+    rep = simulate_plan(prof, net, sol, case.b,
+                        num_microbatches=case.num_microbatches,
+                        scenario=case.scenario, policy=case.policy,
+                        engine="auto")
+    assert rep.engine == "event"
+    assert "zero trailing capacity" in rep.engine_reason
+    assert math.isinf(rep.makespan)        # reported, not silently wrong
+    with pytest.raises(ValueError, match="zero trailing capacity"):
+        simulate_plan(prof, net, sol, case.b,
+                      num_microbatches=case.num_microbatches,
+                      scenario=case.scenario, policy=case.policy,
+                      engine="vectorized")
+
+
+def test_check_parity_flags_dead_case_not_silent():
+    res = F.check_parity(_dead_link_case())
+    assert res.engine == "event"
+    assert not res.finite
+    assert res.gap == 0.0                  # both engines agree it stalls
+
+
+# ---------------------------------------------------------------------------
+# Shrinking + corpus
+# ---------------------------------------------------------------------------
+
+def test_shrink_minimizes_while_predicate_holds():
+    """Shrink against a synthetic oracle (scenario still slows the run);
+    the minimized case must keep failing with strictly simpler content."""
+    case = F.fuzz_case(23)
+    baseline = F.check_parity(dataclasses.replace(
+        case, scenario=NetworkScenario())).makespan
+
+    def failing(c):
+        return F.check_parity(c).makespan > baseline * (1 + 1e-12)
+
+    if not failing(case):
+        pytest.skip("seed 23 scenario did not slow this instance")
+    small = F.shrink_case(case, failing)
+    assert failing(small)
+    n_traces = len(small.scenario.node_mult) + len(small.scenario.link_mult)
+    assert n_traces <= len(case.scenario.node_mult) + \
+        len(case.scenario.link_mult)
+    assert small.num_microbatches <= case.num_microbatches
+    assert small.seed == case.seed         # the instance never changes
+
+
+def test_shrink_requires_failing_start():
+    with pytest.raises(ValueError):
+        F.shrink_case(F.fuzz_case(1), lambda c: False)
+
+
+def test_corpus_roundtrip(tmp_path):
+    case = F.fuzz_case(11)
+    path = F.save_case(case, str(tmp_path), note="roundtrip")
+    loaded = F.load_case(path)
+    assert loaded.scenario == case.scenario
+    assert (loaded.seed, loaded.b, loaded.num_microbatches,
+            loaded.policy) == (case.seed, case.b, case.num_microbatches,
+                               case.policy)
+    assert loaded.note == "roundtrip"
+    [(p, again)] = F.load_corpus(str(tmp_path))
+    assert p == path and again == loaded
+    assert F.load_corpus(str(tmp_path / "missing")) == []
+
+
+def test_corpus_rejects_replan_triggers(tmp_path):
+    case = F.fuzz_case(1)
+    scen = case.scenario.with_replan(1.0, object())
+    with pytest.raises(ValueError):
+        F.save_case(dataclasses.replace(case, scenario=scen),
+                    str(tmp_path))
+
+
+def test_corpus_replay():
+    """CI replays every minimized repro committed under tests/corpus/:
+    parity must hold (or the case must be a documented event-only stall,
+    which both engines agree on)."""
+    corpus = F.load_corpus(CORPUS_DIR)
+    assert corpus, "seed corpus missing"
+    for path, case in corpus:
+        res = F.check_parity(case)
+        if case.scenario.drains():
+            assert res.ok, (path, res)
+        else:
+            assert res.engine == "event" and res.gap == 0.0, (path, res)

@@ -1,0 +1,162 @@
+"""Property-based lockdown of ``sim/scenario.py``'s trace algebra.
+
+The vectorized engine's segmented scans ride entirely on ``PiecewiseTrace``'s
+cumulative-work coordinates — ``work_done_many`` / ``finish_many`` must be
+exact inverses wherever capacity is positive, cumulative work must be
+monotone, and breakpoint-merged products must compose associatively — so
+these invariants get hypothesis coverage instead of a handful of
+hand-picked breakpoints.  (Module skips without hypothesis, like the
+engine-parity twin in test_sim.py.)
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import make_edge_network
+from repro.sim.scenario import (NetworkScenario, PiecewiseTrace, constant,
+                                piecewise, square_wave)
+
+
+@st.composite
+def traces(draw, min_value=0.0, max_value=8.0, max_segments=6):
+    """Random well-formed trace: strictly increasing breakpoints from 0,
+    bounded non-negative values."""
+    n = draw(st.integers(1, max_segments))
+    dts = draw(st.lists(st.floats(0.01, 5.0), min_size=n - 1,
+                        max_size=n - 1))
+    times = tuple(np.concatenate([[0.0], np.cumsum(dts)]))
+    values = tuple(draw(st.lists(st.floats(min_value, max_value),
+                                 min_size=n, max_size=n)))
+    return PiecewiseTrace(times, values)
+
+
+# ---------------------------------------------------------------------------
+# work/finish are inverse coordinate transforms (capacity > 0)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=80, deadline=None)
+@given(tr=traces(min_value=0.05), t=st.floats(0.0, 60.0))
+def test_finish_inverts_work_done(tr, t):
+    w = tr.work_done(t)
+    t_back = tr.finish_time(w)
+    scale = max(1.0, abs(t))
+    assert t_back == pytest.approx(t, rel=1e-9, abs=1e-9 * scale)
+    assert tr.work_done(t_back) == pytest.approx(w, rel=1e-9, abs=1e-12)
+
+
+@settings(max_examples=80, deadline=None)
+@given(tr=traces(min_value=0.05),
+       ws=st.lists(st.floats(-1.0, 100.0), min_size=1, max_size=8))
+def test_work_inverts_finish_many(tr, ws):
+    target = np.asarray(ws)
+    t = tr.finish_many(target)
+    back = tr.work_done_many(t)
+    # non-positive targets clamp to t = 0 (work 0); positive ones roundtrip
+    want = np.maximum(target, 0.0)
+    np.testing.assert_allclose(back, want, rtol=1e-9, atol=1e-9)
+    # vectorized == scalar, element by element
+    for wi, ti in zip(target, t):
+        assert ti == pytest.approx(tr.finish_time(float(wi))
+                                   if wi > 0 else 0.0, rel=1e-12, abs=1e-12)
+
+
+@settings(max_examples=80, deadline=None)
+@given(tr=traces(), ts=st.lists(st.floats(0.0, 60.0), min_size=2,
+                                max_size=10))
+def test_cumulative_work_monotone_and_vectorized_matches_scalar(tr, ts):
+    t = np.sort(np.asarray(ts))
+    w = tr.work_done_many(t)
+    assert np.all(np.diff(w) >= -1e-12), "cumulative work must be monotone"
+    for ti, wi in zip(t, w):
+        assert wi == pytest.approx(tr.work_done(float(ti)), rel=1e-12,
+                                   abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# breakpoint-merge product: commutative, associative, unit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=80, deadline=None)
+@given(a=traces(), b=traces())
+def test_product_commutes_exactly(a, b):
+    assert a * b == b * a            # IEEE multiplication commutes
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=traces(), b=traces(), c=traces(),
+       ts=st.lists(st.floats(0.0, 60.0), min_size=1, max_size=6))
+def test_product_associative(a, b, c, ts):
+    left = (a * b) * c
+    right = a * (b * c)
+    assert left.times == right.times        # same merged breakpoint set
+    np.testing.assert_allclose(left.values, right.values, rtol=1e-9,
+                               atol=1e-12)
+    for t in ts:                            # and pointwise off-breakpoint
+        assert left.value_at(t) == pytest.approx(right.value_at(t),
+                                                 rel=1e-9, abs=1e-12)
+
+
+@settings(max_examples=80, deadline=None)
+@given(a=traces())
+def test_product_unit(a):
+    assert a * constant(1.0) == a
+
+
+# ---------------------------------------------------------------------------
+# constructors: coalescing, square waves, scenario composition
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(tr=traces(), dup_at=st.integers(0, 5))
+def test_piecewise_coalesces_duplicates_last_wins(tr, dup_at):
+    i = min(dup_at, len(tr.times) - 1)
+    times = tr.times[:i + 1] + (tr.times[i],) + tr.times[i + 1:]
+    values = tr.values[:i + 1] + (99.0,) + tr.values[i + 1:]
+    out = piecewise(times, values)
+    assert out.times == tr.times
+    assert out.value_at(tr.times[i]) == 99.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(start=st.floats(0.0, 4.0), periods=st.integers(1, 5),
+       period=st.sampled_from([0.25, 0.5, 1.0]),
+       duty=st.sampled_from([0.25, 0.5, 0.75]),
+       low=st.sampled_from([0.0, 0.2]))
+def test_square_wave_properties(start, periods, period, duty, low):
+    end = start + periods * period
+    tr = square_wave(start, end, period=period, duty=duty, low=low)
+    assert tr.drains()
+    assert tr.value_at(end + 0.1) == 1.0
+    if start > 0:
+        assert tr.value_at(start / 2) == 1.0
+    # integral over the flapping window = duty-weighted mean capacity
+    work = tr.work_done(end) - tr.work_done(start)
+    want = periods * period * (duty * 1.0 + (1 - duty) * low)
+    assert work == pytest.approx(want, rel=1e-9, abs=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), factor=st.floats(0.05, 0.9),
+       start=st.floats(0.0, 2.0), dur=st.floats(0.1, 3.0))
+def test_region_degradation_composes_multiplicatively(seed, factor, start,
+                                                      dur):
+    net = make_edge_network(num_servers=3, num_clients=2, seed=seed)
+    nodes = [1, 2]
+    links = [(0, 1), (1, 2)]
+    scen = NetworkScenario().with_region_degradation(
+        nodes, links, start, start + dur, factor)
+    mid, after = start + dur / 2, start + dur + 1.0
+    for n in nodes:
+        assert scen.node_mult[n].value_at(mid) == pytest.approx(factor)
+        assert scen.node_mult[n].value_at(after) == 1.0
+    for lk in links:
+        assert scen.link_mult[lk].value_at(mid) == pytest.approx(factor)
+    assert scen.drains()
+    # stacking a second event multiplies into the same keys
+    again = scen.with_region_degradation(nodes, [], start, start + dur,
+                                         factor)
+    assert again.node_mult[1].value_at(mid) == pytest.approx(factor ** 2)
