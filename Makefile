@@ -8,7 +8,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify verify-ci verify-docs test dev-deps sim-check fuzz bench \
-        bench-planner bench-costmodel bench-sim bench-robustness \
+        bench-planner bench-costmodel bench-sim bench-robustness bench-ft \
         bench-fig6b bench-sweep bench-obs example-sim
 
 verify:
@@ -25,6 +25,7 @@ DOCTEST_MODULES := \
   src/repro/sim/advance.py src/repro/sim/fuzz.py src/repro/sim/robustness.py \
   src/repro/core/bcd.py src/repro/core/cost_model.py \
   src/repro/core/microbatch.py \
+  src/repro/ft/policy.py \
   src/repro/pipeline/schedule.py
 
 # docs job: doctests over the documented APIs + the docs/*.md anchor/link
@@ -68,7 +69,12 @@ bench-sim:
 bench-robustness:
 	$(PYTHON) -m benchmarks.bench_robustness
 
-bench: bench-planner bench-costmodel bench-sim bench-robustness \
+# replan-policy zoo on the fixed-seed flap corpus + the Periodic-cadence vs
+# Gauss-Markov-drift frontier; rewrites the repo-root BENCH_ft.json file
+bench-ft:
+	$(PYTHON) -m benchmarks.bench_ft_policy
+
+bench: bench-planner bench-costmodel bench-sim bench-robustness bench-ft \
        bench-fig6b bench-sweep bench-obs
 
 # telemetry overhead on the 10k-micro-batch acceptance chain: asserts the

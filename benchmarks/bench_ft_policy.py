@@ -1,0 +1,206 @@
+"""Replan-policy benchmark (ISSUE 8): the policy zoo on a fixed-seed flap
+corpus + the replanning cadence-vs-drift frontier.
+
+Two sections:
+
+* **Policy zoo** — fuzzed flappy event streams (fixed seeds, 75% of
+  rate-changes paired with their reversal) replayed through
+  ``simulate_with_replanning`` under every policy via
+  ``repro.ft.evaluate_policies``, with real replan costs charged
+  (``solve_downtime`` + ``remap_penalty``).  Per policy: makespan
+  mean/CVaR, replans issued, events suppressed, downtime, final-plan
+  objective, and the dominant blocked resource.  Acceptance (same contract
+  as ``tests/test_policy.py::test_corpus_hysteresis_vs_eager_vs_rideout``):
+  the debounced+rate-limited Hysteresis issues <= 25% of Eager's replans
+  with a mean end-to-end makespan no worse than Eager's and a final
+  objective no worse than RideOut's.
+
+* **Cadence-vs-CV frontier** — Gauss-Markov capacity drift at a grid of
+  coefficients of variation; a fine stream of ``Resync`` measurement ticks
+  (``periodic_resync_triggers``) is filtered by ``Periodic(cadence)``
+  swept over a cadence grid.  Small cadences chase drift and pay solve
+  downtime per replan; large ones ride out staleness — the frontier the
+  ROADMAP's replanning-cadence item asks for.  Acceptance: replans are
+  monotone non-increasing from the tightest cadence to the loosest, at
+  every cv.
+
+Outputs:
+  results/bench/bench_ft_policy_zoo.csv       per-policy corpus summary
+  results/bench/bench_ft_policy_frontier.csv  cadence x cv grid
+  BENCH_ft.json (repo root)                   summary tracked across PRs
+
+``--smoke`` shrinks both sections for CI but keeps every assertion.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+from repro.ft import (Coordinator, CVaRPreSpill, Hysteresis, Periodic,
+                      RateLimited, RideOut, evaluate_policies)
+from repro.sim import (fuzz_event_stream, gauss_markov_scenario,
+                       periodic_resync_triggers, simulate_plan,
+                       simulate_with_replanning)
+from repro.sim.validate import random_instance
+
+from .common import Timer, emit
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_ft.json")
+
+ALPHA = 0.9
+SOLVE_DOWNTIME = 0.05
+REMAP_PENALTY = 0.01
+
+
+def _flap_corpus(net, n_streams: int, *, horizon=4.0, max_events=5):
+    """Fixed-seed flappy streams: no failures (the zoo compares voluntary
+    replanning), 75% of rate-changes emit their reversal inside the flap
+    window — the stream shape debounce exists for."""
+    return [fuzz_event_stream(np.random.default_rng(1000 + s), net,
+                              horizon=horizon, max_events=max_events,
+                              allow_failure=False, flap_fraction=0.75)
+            for s in range(n_streams)]
+
+
+def run_zoo(smoke: bool = False) -> list:
+    """Every policy over the same corpus; the Hysteresis-vs-Eager-vs-RideOut
+    acceptance contract is asserted on the full corpus too."""
+    n_streams = 4 if smoke else 10
+    prof, net, _sol, _b, B = random_instance(3)
+    streams = _flap_corpus(net, n_streams)
+    policies = {
+        "eager": lambda: None,
+        "ride_out": RideOut,
+        "periodic_0.5": lambda: Periodic(0.5),
+        "hysteresis": lambda: RateLimited(Hysteresis(0.25, cooldown=0.3)),
+        "cvar_pre_spill": lambda: CVaRPreSpill(bound=1.5, n_scenarios=4),
+    }
+    with Timer() as t:
+        reports = evaluate_policies(
+            prof, net, B, streams, policies, alpha=ALPHA,
+            remap_penalty=REMAP_PENALTY, solve_downtime=SOLVE_DOWNTIME,
+            attribution=True)
+    rows = []
+    for name, r in reports.items():
+        top = max(r.blocked.items(), key=lambda kv: kv[1]) \
+            if r.blocked else ("", 0.0)
+        rows.append([name, round(r.mean, 6), round(r.cvar, 6), r.replans,
+                     r.suppressed, round(r.downtime, 4),
+                     round(float(np.mean(r.final_objectives)), 6),
+                     repr(top[0]), round(top[1], 4)])
+    emit("bench_ft_policy_zoo", rows,
+         ["policy", "mean_makespan", f"cvar{ALPHA:g}", "replans",
+          "suppressed", "downtime_s", "mean_final_objective",
+          "top_blocked_resource", "top_blocked_s"])
+    print(f"# zoo: {n_streams} streams in {t.seconds:.1f}s")
+    eager, ride, hyst = (reports["eager"], reports["ride_out"],
+                         reports["hysteresis"])
+    assert eager.replans > 0
+    assert hyst.replans <= 0.25 * eager.replans, \
+        (hyst.replans, eager.replans)
+    assert hyst.mean <= eager.mean * (1 + 1e-9), (hyst.mean, eager.mean)
+    assert np.mean(hyst.final_objectives) <= \
+        np.mean(ride.final_objectives) * (1 + 1e-9)
+    # every delivered event is either a replan or a suppression
+    assert hyst.replans + hyst.suppressed == eager.replans + eager.suppressed
+    return rows
+
+
+def run_frontier(smoke: bool = False) -> list:
+    """Periodic(cadence) x Gauss-Markov cv grid.  Cadences are relative to
+    the drift-free makespan so every cell sees multiple measurement ticks
+    before the batch drains (a 2s cadence on a 1.6s batch never fires)."""
+    prof, net, _sol, _b, B = random_instance(3)
+    base = simulate_plan(prof, net,
+                         Coordinator(prof, net, B).plan.solution,
+                         Coordinator(prof, net, B).plan.b, B=B,
+                         engine="auto").L_t
+    tick = base / 24.0                     # measurement stream granularity
+    cadences = [base / f for f in ((12, 3) if smoke else (12, 6, 3, 1.5))]
+    cvs = (0.2, 0.5) if smoke else (0.1, 0.3, 0.5)
+    n_draws = 2 if smoke else 4
+    rows = []
+    for cv in cvs:
+        replans_by_cadence = []
+        for cadence in cadences:
+            makespans, replans, downtime = [], 0, 0.0
+            for draw in range(n_draws):
+                rng = np.random.default_rng(7_000 + draw)
+                scen = gauss_markov_scenario(net, cv, rng, dt=tick,
+                                             horizon=4.0 * base)
+                trigs = periodic_resync_triggers(net, scen, cadence=tick,
+                                                 horizon=2.0 * base)
+                coord = Coordinator(prof, net, B, policy=Periodic(cadence))
+                rep = simulate_with_replanning(
+                    prof, net, B, trigs, coordinator=coord, scenario=scen,
+                    remap_penalty=REMAP_PENALTY,
+                    solve_downtime=SOLVE_DOWNTIME, engine="auto")
+                makespans.append(rep.makespan)
+                replans += rep.num_replans
+                downtime += rep.downtime
+            replans_by_cadence.append(replans)
+            rows.append([cv, round(cadence, 4), round(cadence / base, 4),
+                         round(float(np.mean(makespans)), 6),
+                         round(float(np.max(makespans)), 6),
+                         replans, round(downtime, 4)])
+        # tighter cadence can never replan *less*: Periodic gates by time
+        assert all(a >= b for a, b in
+                   zip(replans_by_cadence, replans_by_cadence[1:])), \
+            (cv, cadences, replans_by_cadence)
+    emit("bench_ft_policy_frontier", rows,
+         ["cv", "cadence_s", "cadence_rel", "mean_makespan", "max_makespan",
+          "replans", "downtime_s"])
+    return rows
+
+
+def run(smoke: bool = False) -> dict:
+    zoo_header = ["policy", "mean_makespan", f"cvar{ALPHA:g}", "replans",
+                  "suppressed", "downtime_s", "mean_final_objective",
+                  "top_blocked_resource", "top_blocked_s"]
+    frontier_header = ["cv", "cadence_s", "cadence_rel", "mean_makespan",
+                       "max_makespan", "replans", "downtime_s"]
+    zoo = run_zoo(smoke)
+    frontier = run_frontier(smoke)
+    by_policy = {r[0]: r for r in zoo}
+    summary = {
+        "issue": 8,
+        "generated_unix": int(time.time()),
+        "smoke": smoke,
+        "alpha": ALPHA,
+        "solve_downtime": SOLVE_DOWNTIME,
+        "remap_penalty": REMAP_PENALTY,
+        "replan_ratio_hysteresis_vs_eager":
+            round(by_policy["hysteresis"][3]
+                  / max(1, by_policy["eager"][3]), 4),
+        "policy_zoo": [dict(zip(zoo_header, r)) for r in zoo],
+        "frontier": [dict(zip(frontier_header, r)) for r in frontier],
+    }
+    if not smoke:                       # the tracked trajectory file
+        with open(JSON_PATH, "w") as f:
+            json.dump(summary, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {JSON_PATH}")
+    print(json.dumps({k: v for k, v in summary.items()
+                      if k not in ("policy_zoo", "frontier")}, indent=2))
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus/grid for CI (no BENCH_ft.json "
+                         "rewrite)")
+    args = ap.parse_args()
+    from repro import obs
+
+    from .common import dump_registry
+    obs.enable()
+    run(smoke=args.smoke)
+    dump_registry("bench_ft_policy")

@@ -19,7 +19,8 @@ _SIM_EXPORTS = frozenset({
     "Task", "Timeline", "TraceRecord", "VisitTable", "write_chrome_trace",
     "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
     "iid_piecewise", "square_wave", "NetworkScenario", "ReplanTrigger",
-    "piecewise_cv_scenario", "gauss_markov_scenario",
+    "piecewise_cv_scenario", "gauss_markov_scenario", "sampled_network",
+    "periodic_resync_triggers",
     "AdmissionPolicy", "FIFO", "OneFOneB", "MemoryBudgeted",
     "resolve_policy",
     "activation_occupancy", "stage_activation_highwater",
@@ -33,7 +34,7 @@ _SIM_EXPORTS = frozenset({
     "fuzz_case", "fuzz_event_stream", "fuzz_scenario", "load_case",
     "load_corpus", "run_fuzz", "save_case", "shrink_case",
     "RobustMakespan", "RobustnessReport", "cvar", "scenario_distribution",
-    "score_plan", "score_plans",
+    "importance_scenario_distribution", "score_plan", "score_plans",
 })
 
 # the cost-model seam (ISSUE 4): mirrored from ``repro.core.cost_model``'s

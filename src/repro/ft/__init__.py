@@ -1,8 +1,18 @@
 """Fault tolerance & elasticity: failure detection -> BCD re-plan -> resume,
-and straggler mitigation via Theorem-1 micro-batch re-solving."""
+straggler mitigation via Theorem-1 micro-batch re-solving, and pluggable
+replanning *policies* (debounce, rate-limiting, cadence, tail-risk
+pre-spill) deciding when the coordinator should act at all."""
 
 from .coordinator import (Coordinator, NodeFailure, RateChange, Straggler,
-                          ReplanOutcome)
+                          Resync, ReplanOutcome)
+from .policy import (PolicyDecision, ReplanPolicy, Eager, RideOut, Periodic,
+                     Hysteresis, RateLimited, CVaRPreSpill,
+                     resolve_replan_policy, event_deviation,
+                     PolicyEvalReport, evaluate_policies)
 
 __all__ = ["Coordinator", "NodeFailure", "RateChange", "Straggler",
-           "ReplanOutcome"]
+           "Resync", "ReplanOutcome",
+           "PolicyDecision", "ReplanPolicy", "Eager", "RideOut", "Periodic",
+           "Hysteresis", "RateLimited", "CVaRPreSpill",
+           "resolve_replan_policy", "event_deviation",
+           "PolicyEvalReport", "evaluate_policies"]

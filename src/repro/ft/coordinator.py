@@ -52,6 +52,18 @@ class Straggler:
     slowdown: float              # f_n -> f_n / slowdown
 
 
+@dataclasses.dataclass(frozen=True)
+class Resync:
+    """A measured capacity snapshot (e.g. ``sim.sampled_network`` at a
+    periodic measurement tick).  Replanning against it re-solves on the
+    *snapshot* while the coordinator's base network stays untouched — the
+    snapshot already folds in whatever scenario multipliers produced it, so
+    adopting it as ``coord.net`` would double-apply them when the driving
+    simulation re-applies its traces.  Absorbing a Resync is a true no-op:
+    nothing mutates, the incumbent rides on."""
+    net: EdgeNetwork
+
+
 logger = logging.getLogger("repro.ft.coordinator")
 
 
@@ -60,11 +72,15 @@ class ReplanOutcome:
     event: object
     old_latency: float
     new_plan: Plan
-    action: str                  # "microbatch" | "replan" | "none"
+    action: str                  # "microbatch" | "replan" | "absorb"
     remapped_stages: bool
     solve_seconds: float = 0.0   # wall-clock spent replanning
     sim_time: float | None = None  # simulated time the event fired (if driven)
     restore_seconds: float = 0.0  # checkpoint-restore charge (NodeFailure)
+    ride_out_latency: float | None = None  # incumbent on the mutated net
+    #                              (inf: riding out impossible; None: unknown)
+    net_changed: bool = True     # did coord.net mutate (Resync: no)
+    decision: object = None      # PolicyDecision when routed via deliver()
 
     @property
     def new_latency(self) -> float:
@@ -82,6 +98,8 @@ class ReplanOutcome:
             "solve_seconds": self.solve_seconds,
             "sim_time": self.sim_time,
             "restore_seconds": self.restore_seconds,
+            "ride_out_latency": self.ride_out_latency,
+            "reason": None if self.decision is None else self.decision.reason,
         }
 
 
@@ -111,7 +129,8 @@ class Coordinator:
     def __init__(self, profile: ModelProfile, net: EdgeNetwork, B: int,
                  *, theta: float = 0.01,
                  microbatch_gain_threshold: float = 0.95, cost_model=None,
-                 restore_cost=0.0):
+                 restore_cost=0.0, policy=None):
+        from .policy import resolve_replan_policy
         self.profile = profile
         self.net = net
         self.B = B
@@ -119,19 +138,60 @@ class Coordinator:
         self.mb_gain_threshold = microbatch_gain_threshold
         self.cost_model = resolve_cost_model(cost_model)
         self.restore_cost = restore_cost
+        self.policy = resolve_replan_policy(policy)
         self.plan = bcd_solve(profile, net, B, theta=theta,
                               cost_model=self.cost_model)
         self.events: list = []
 
+    # -- event delivery (policy seam) -----------------------------------------
+    def deliver(self, event, *, sim_time: float | None = None) -> ReplanOutcome:
+        """Route one event through the replan policy: consult
+        ``policy.decide`` and either ``apply`` (full treatment) or
+        ``absorb`` (mutate the network, keep the incumbent plan).  With no
+        policy this *is* ``apply`` — the historical eager behavior."""
+        if self.policy is None:
+            return self.apply(event, sim_time=sim_time)
+        t = 0.0 if sim_time is None else sim_time
+        with obs.span("ft.policy.decide", policy=self.policy.name,
+                      event=type(event).__name__):
+            decision = self.policy.decide(event, t, self)
+        obs.inc("ft.policy.decisions[%s]"
+                % ("replan" if decision.replan else "absorb"))
+        logger.info("policy %s: %s -> %s (%s)", self.policy.name,
+                    type(event).__name__,
+                    "replan" if decision.replan else "absorb", decision.reason)
+        if decision.replan:
+            outcome = self.apply(event, sim_time=sim_time,
+                                 cost_model=decision.cost_model)
+        else:
+            outcome = self.absorb(event, sim_time=sim_time)
+        outcome.decision = decision
+        self.policy.observe(outcome, t)
+        return outcome
+
     # -- event application ----------------------------------------------------
-    def apply(self, event, *, sim_time: float | None = None) -> ReplanOutcome:
+    def apply(self, event, *, sim_time: float | None = None,
+              cost_model=None) -> ReplanOutcome:
         """Mutate the network per ``event`` and replan.  ``sim_time`` is the
         simulated instant the event fired (recorded on the outcome when the
-        coordinator is driven by ``sim.simulate_with_replanning``)."""
+        coordinator is driven by ``sim.simulate_with_replanning``).
+        ``cost_model`` overrides the coordinator's model for *this* replan
+        only (a ``PolicyDecision`` escalating one solve to, say, the
+        ``RobustMakespan`` objective)."""
+        base_model = self.cost_model
+        if cost_model is not None:
+            self.cost_model = resolve_cost_model(cost_model)
+        try:
+            return self._apply(event, sim_time)
+        finally:
+            self.cost_model = base_model
+
+    def _apply(self, event, sim_time) -> ReplanOutcome:
         with obs.span("ft.apply", event=type(event).__name__):
             t0 = time.perf_counter()
             old_L = self._current_latency()
             old_sol, old_b = self.plan.solution, self.plan.b
+            net_changed = True
             if isinstance(event, NodeFailure):
                 self.net = self.net.degraded([event.server])
                 old_sol = self._remap_across_failure(old_sol, event.server)
@@ -149,11 +209,19 @@ class Coordinator:
                            if i == event.node else n
                            for i, n in enumerate(self.net.nodes)])
                 outcome = self._straggler_mitigation(event, old_L)
+            elif isinstance(event, Resync):
+                # solve against the measured snapshot; base net stays (the
+                # snapshot's multipliers live in the driving scenario)
+                net_changed = False
+                outcome = self._full_replan(event, old_L, net=event.net)
             else:
                 raise TypeError(event)
-            self._prefer_ride_out(old_sol, old_b, outcome)
+            self._prefer_ride_out(
+                old_sol, old_b, outcome,
+                net=event.net if isinstance(event, Resync) else None)
             outcome.solve_seconds = time.perf_counter() - t0
             outcome.sim_time = sim_time
+            outcome.net_changed = net_changed
         obs.inc("ft.replans")
         obs.inc(f"ft.action[{outcome.action}]")
         logger.info(
@@ -165,12 +233,122 @@ class Coordinator:
         self.events.append(outcome)
         return outcome
 
+    # -- event absorption (ride-out path) --------------------------------------
+    def absorb(self, event, *, sim_time: float | None = None) -> ReplanOutcome:
+        """Take the event's network mutation **without replanning**: the
+        incumbent ``(solution, b)`` rides out the change (placement indices
+        remapped across a failure's renumbering), its objective re-priced on
+        the mutated network.  No BCD solve, no pipeline restart, no restore
+        charge.  When riding out is impossible — the failed server hosted a
+        stage, or the incumbent is infeasible on the mutated network — the
+        absorb *escalates* to a forced ``apply``."""
+        with obs.span("ft.absorb", event=type(event).__name__):
+            t0 = time.perf_counter()
+            old_L = self._current_latency()
+            sol, b = self.plan.solution, self.plan.b
+            net_changed = True
+            if isinstance(event, NodeFailure):
+                new_net = self.net.degraded([event.server])
+                sol = self._remap_across_failure(sol, event.server)
+                if sol is None:
+                    return self._escalate(
+                        event, sim_time, "failed server hosts a stage")
+            elif isinstance(event, RateChange):
+                rate = self.net.rate.copy()
+                rate[event.n_from, event.n_to] *= event.factor
+                new_net = dataclasses.replace(self.net, rate=rate)
+            elif isinstance(event, Straggler):
+                new_net = dataclasses.replace(
+                    self.net,
+                    nodes=[dataclasses.replace(n, f=n.f / event.slowdown)
+                           if i == event.node else n
+                           for i, n in enumerate(self.net.nodes)])
+            elif isinstance(event, Resync):
+                new_net = self.net         # true no-op: nothing mutates
+                net_changed = False
+            else:
+                raise TypeError(event)
+            ride_L = self._evaluate_candidate(new_net, sol, b)
+            if not math.isfinite(ride_L):
+                return self._escalate(
+                    event, sim_time, "incumbent infeasible on mutated network")
+            self.net = new_net
+            if net_changed:
+                self.plan = dataclasses.replace(
+                    self.plan, solution=sol, b=b,
+                    T_f=fill_latency(self.profile, new_net, sol, b),
+                    T_i=pipeline_interval(self.profile, new_net, sol, b),
+                    L_t=total_latency(self.profile, new_net, sol, b, self.B),
+                    objective=ride_L, feasible=True,
+                    cost_model=self.cost_model.name)
+            outcome = ReplanOutcome(
+                event=event, old_latency=old_L, new_plan=self.plan,
+                action="absorb", remapped_stages=False,
+                solve_seconds=time.perf_counter() - t0, sim_time=sim_time,
+                ride_out_latency=ride_L, net_changed=net_changed)
+        obs.inc("ft.absorbed")
+        obs.inc("ft.action[absorb]")
+        logger.info("absorb: event=%s new_latency=%.6g sim_time=%s",
+                    type(event).__name__, outcome.new_latency,
+                    "-" if sim_time is None else f"{sim_time:.6g}")
+        self.events.append(outcome)
+        return outcome
+
+    def _escalate(self, event, sim_time, why: str) -> ReplanOutcome:
+        """Ride-out impossible: the absorb becomes a forced full replan."""
+        obs.inc("ft.absorb_escalated")
+        logger.info("absorb escalated to replan: event=%s (%s)",
+                    type(event).__name__, why)
+        outcome = self.apply(event, sim_time=sim_time)
+        if outcome.ride_out_latency is None:
+            outcome.ride_out_latency = math.inf
+        return outcome
+
+    def _evaluate_candidate(self, net, sol, b: int) -> float:
+        """Cost (under the active model) of ``(sol, b)`` on ``net`` —
+        ``inf`` when memory-infeasible or expectedly unevaluable."""
+        if sol is None or b < 1:
+            return math.inf
+        try:
+            if not self.cost_model.memory_feasible(self.profile, net, sol, b):
+                return math.inf
+            return self.cost_model.evaluate(self.profile, net, sol, b, self.B)
+        except (ValueError, ArithmeticError):
+            # expected infeasibility (validate_solution / degenerate
+            # capacity) — anything else is a programming error: re-raise
+            obs.inc("ft.eval_errors")
+            return math.inf
+
+    @staticmethod
+    def preview(net: EdgeNetwork, sol, event):
+        """``(mutated_net, remapped_solution)`` the event *would* produce —
+        no coordinator state touched.  Lets a policy score the incumbent on
+        the post-event network before deciding (``remapped_solution`` is
+        ``None`` when a failure displaces a hosted stage)."""
+        if isinstance(event, NodeFailure):
+            return (net.degraded([event.server]),
+                    Coordinator._remap_across_failure(sol, event.server))
+        if isinstance(event, RateChange):
+            rate = net.rate.copy()
+            rate[event.n_from, event.n_to] *= event.factor
+            return dataclasses.replace(net, rate=rate), sol
+        if isinstance(event, Straggler):
+            return dataclasses.replace(
+                net, nodes=[dataclasses.replace(n, f=n.f / event.slowdown)
+                            if i == event.node else n
+                            for i, n in enumerate(net.nodes)]), sol
+        if isinstance(event, Resync):
+            return event.net, sol
+        raise TypeError(event)
+
     def _current_latency(self) -> float:
         try:
             return self.cost_model.evaluate(self.profile, self.net,
                                             self.plan.solution, self.plan.b,
                                             self.B)
-        except Exception:
+        except (ValueError, ArithmeticError):
+            # expected infeasibility errors only — see _evaluate_candidate
+            obs.inc("ft.eval_errors")
             return math.inf
 
     def _restore_seconds(self) -> float:
@@ -188,42 +366,43 @@ class Coordinator:
         placement = tuple(n - 1 if n > server else n for n in sol.placement)
         return dataclasses.replace(sol, placement=placement)
 
-    def _prefer_ride_out(self, old_sol, old_b: int, outcome) -> None:
+    def _prefer_ride_out(self, old_sol, old_b: int, outcome,
+                         net: EdgeNetwork | None = None) -> None:
         """Score the ride-out candidate — the pre-event ``(solution, b)``
-        on the *mutated* network — and keep it when it strictly beats the
-        fresh solve: the BCD alternation is a heuristic and need not visit
-        the incumbent, but an elastic deployment should never migrate to a
-        plan slower than standing pat.  Mutates ``outcome.new_plan`` (and
-        ``self.plan``) in place; the action stays "replan"/"microbatch"
-        with ``remapped_stages`` downgraded to whether stages still move.
+        on the *mutated* network (``net`` overrides for Resync snapshots) —
+        and keep it when it strictly beats the fresh solve: the BCD
+        alternation is a heuristic and need not visit the incumbent, but an
+        elastic deployment should never migrate to a plan slower than
+        standing pat.  Mutates ``outcome.new_plan`` (and ``self.plan``) in
+        place; the action stays "replan"/"microbatch" with
+        ``remapped_stages`` downgraded to whether stages still move.
+        Always records ``outcome.ride_out_latency`` (``inf`` when riding
+        out is impossible) — rate-limiting policies back off on replans
+        that fail to beat it.
         """
-        if old_sol is None or old_b < 1:
-            return
-        try:
-            if not self.cost_model.memory_feasible(self.profile, self.net,
-                                                   old_sol, old_b):
-                return
-            ride_L = self.cost_model.evaluate(self.profile, self.net,
-                                              old_sol, old_b, self.B)
-        except Exception:
-            return
+        net = self.net if net is None else net
+        ride_L = self._evaluate_candidate(net, old_sol, old_b)
+        outcome.ride_out_latency = ride_L
         if not (math.isfinite(ride_L)
                 and ride_L < self.plan.objective * (1.0 - 1e-12)):
             return
         obs.inc("ft.ride_out_kept")
         self.plan = dataclasses.replace(
             self.plan, solution=old_sol, b=old_b,
-            T_f=fill_latency(self.profile, self.net, old_sol, old_b),
-            T_i=pipeline_interval(self.profile, self.net, old_sol, old_b),
-            L_t=total_latency(self.profile, self.net, old_sol, old_b, self.B),
+            T_f=fill_latency(self.profile, net, old_sol, old_b),
+            T_i=pipeline_interval(self.profile, net, old_sol, old_b),
+            L_t=total_latency(self.profile, net, old_sol, old_b, self.B),
             objective=ride_L, feasible=True,
             cost_model=self.cost_model.name)
         outcome.new_plan = self.plan
         outcome.remapped_stages = False
 
-    def _full_replan(self, event, old_L) -> ReplanOutcome:
+    def _full_replan(self, event, old_L,
+                     net: EdgeNetwork | None = None) -> ReplanOutcome:
+        net = self.net if net is None else net
         old_sol = self.plan.solution
-        self.plan = bcd_solve(self.profile, self.net, self.B,
+        obs.inc("ft.full_solves")
+        self.plan = bcd_solve(self.profile, net, self.B,
                               b0=max(self.plan.b, 1), theta=self.theta,
                               cost_model=self.cost_model)
         return ReplanOutcome(
@@ -234,22 +413,25 @@ class Coordinator:
     def _straggler_mitigation(self, event, old_L) -> ReplanOutcome:
         """Cheap path first: keep (x, y), re-solve b for the new bottleneck
         (no weight movement!); fall back to a full re-plan if that recovers
-        too little."""
-        sol = self.plan.solution
-        T_i = pipeline_interval(self.profile, self.net, sol, self.plan.b)
+        too little.  The full solve is *gated*: a straggler only removes
+        capacity, so the pre-event latency ``old_L`` lower-bounds what a
+        fresh solve can reach — when the micro-batch fix already lands
+        within the gain threshold of that bound, the BCD solve is skipped
+        entirely and the cheap path is actually cheap
+        (``ft.full_solve_saved`` counts the skips)."""
+        incumbent = self.plan
+        sol = incumbent.solution
+        T_i = pipeline_interval(self.profile, self.net, sol, incumbent.b)
         mb = optimal_microbatch(self.profile, self.net, sol, self.B, T_i,
                                 cost_model=self.cost_model)
         if mb.b > 0:
-            cheap_L = self.cost_model.evaluate(self.profile, self.net, sol,
-                                               mb.b, self.B)
+            cheap_L = self._evaluate_candidate(self.net, sol, mb.b)
         else:
             cheap_L = math.inf
-        full = bcd_solve(self.profile, self.net, self.B,
-                         b0=max(self.plan.b, 1), theta=self.theta,
-                         cost_model=self.cost_model)
-        if math.isfinite(cheap_L) and cheap_L <= full.objective / self.mb_gain_threshold:
+
+        def adopt_cheap():
             self.plan = dataclasses.replace(
-                self.plan, b=mb.b,
+                incumbent, b=mb.b,
                 T_f=fill_latency(self.profile, self.net, sol, mb.b),
                 T_i=pipeline_interval(self.profile, self.net, sol, mb.b),
                 L_t=total_latency(self.profile, self.net, sol, mb.b, self.B),
@@ -257,7 +439,13 @@ class Coordinator:
             return ReplanOutcome(event=event, old_latency=old_L,
                                  new_plan=self.plan, action="microbatch",
                                  remapped_stages=False)
-        self.plan = full
-        return ReplanOutcome(event=event, old_latency=old_L,
-                             new_plan=self.plan, action="replan",
-                             remapped_stages=True)
+
+        if (math.isfinite(cheap_L) and math.isfinite(old_L)
+                and cheap_L <= old_L / self.mb_gain_threshold):
+            obs.inc("ft.full_solve_saved")
+            return adopt_cheap()
+        full_outcome = self._full_replan(event, old_L)
+        full = self.plan
+        if math.isfinite(cheap_L) and cheap_L <= full.objective / self.mb_gain_threshold:
+            return adopt_cheap()
+        return dataclasses.replace(full_outcome, remapped_stages=True)

@@ -29,7 +29,8 @@ from .events import (Task, Timeline, TraceRecord, VisitTable,
 from .scenario import (PiecewiseTrace, constant, piecewise, gauss_markov,
                        iid_piecewise, square_wave, NetworkScenario,
                        ReplanTrigger, piecewise_cv_scenario,
-                       gauss_markov_scenario)
+                       gauss_markov_scenario, sampled_network,
+                       periodic_resync_triggers)
 from .policies import (AdmissionPolicy, FIFO, OneFOneB, MemoryBudgeted,
                        resolve_policy, activation_occupancy,
                        stage_activation_highwater)
@@ -45,13 +46,16 @@ from .fuzz import (FuzzCase, FuzzConfig, FuzzSummary, ParityResult,
                    check_parity, fuzz_case, fuzz_event_stream, fuzz_scenario,
                    load_case, load_corpus, run_fuzz, save_case, shrink_case)
 from .robustness import (RobustMakespan, RobustnessReport, cvar,
-                         scenario_distribution, score_plan, score_plans)
+                         scenario_distribution,
+                         importance_scenario_distribution, score_plan,
+                         score_plans)
 
 __all__ = [
     "Task", "Timeline", "TraceRecord", "VisitTable", "write_chrome_trace",
     "PiecewiseTrace", "constant", "piecewise", "gauss_markov",
     "iid_piecewise", "square_wave", "NetworkScenario", "ReplanTrigger",
-    "piecewise_cv_scenario", "gauss_markov_scenario",
+    "piecewise_cv_scenario", "gauss_markov_scenario", "sampled_network",
+    "periodic_resync_triggers",
     "AdmissionPolicy", "FIFO", "OneFOneB", "MemoryBudgeted", "resolve_policy",
     "activation_occupancy", "stage_activation_highwater",
     "PipelineSimulator", "SimReport", "build_tasks", "build_visit_table",
@@ -64,5 +68,5 @@ __all__ = [
     "fuzz_case", "fuzz_event_stream", "fuzz_scenario", "load_case",
     "load_corpus", "run_fuzz", "save_case", "shrink_case",
     "RobustMakespan", "RobustnessReport", "cvar", "scenario_distribution",
-    "score_plan", "score_plans",
+    "importance_scenario_distribution", "score_plan", "score_plans",
 ]

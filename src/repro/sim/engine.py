@@ -869,16 +869,38 @@ class ReplanSimReport:
     makespan: float              # absolute time the mini-batch drains
     segments: list               # SegmentReport
     coordinator: object          # the driven ft.Coordinator (holds outcomes)
+    suppressed: list = dataclasses.field(default_factory=list)
+    #                            # (trigger, outcome) pairs the policy
+    #                            # absorbed without cutting the segment
+    downtime: float = 0.0        # total remap + solve + restore charged
+
+    @property
+    def outcomes(self) -> list:
+        """Every ``ReplanOutcome`` delivered during the run, in order."""
+        out = [s.outcome for s in self.segments if s.outcome is not None]
+        out += [o for _, o in self.suppressed]
+        out.sort(key=lambda o: (o.sim_time is None,
+                                0.0 if o.sim_time is None else o.sim_time))
+        return out
 
     @property
     def num_replans(self) -> int:
-        return sum(1 for s in self.segments if s.trigger is not None)
+        """Replans actually *issued* (full or micro-batch re-solve) —
+        absorbed/suppressed events don't count."""
+        return sum(1 for o in self.outcomes
+                   if o.action in ("replan", "microbatch"))
+
+    @property
+    def num_suppressed(self) -> int:
+        """Events the policy absorbed (no solve, no pipeline restart)."""
+        return sum(1 for o in self.outcomes if o.action == "absorb")
 
 
 def simulate_with_replanning(profile: ModelProfile, net: EdgeNetwork, B: int,
                              triggers=(), *, coordinator=None,
                              scenario: NetworkScenario | None = None,
                              remap_penalty: float = 0.0,
+                             solve_downtime: float | str = 0.0,
                              policy: AdmissionPolicy | str = "fifo",
                              engine: str = "event",
                              **coordinator_kwargs) -> ReplanSimReport:
@@ -887,19 +909,33 @@ def simulate_with_replanning(profile: ModelProfile, net: EdgeNetwork, B: int,
     ``scenario.replan_triggers`` (composed via ``with_replan``); both are
     merged and fired in time order.
 
-    At each trigger: micro-batches fully drained by then are banked,
-    in-flight ones are discarded (they re-run after the remap), the event is
-    applied to the coordinator — mutating its network and replanning per the
-    paper's BCD — and the remaining samples resume at
-    ``trigger.time + remap_penalty + outcome.restore_seconds`` under the new
-    plan: a ``NodeFailure`` additionally pays the checkpoint-restore charge
-    the coordinator's ``restore_cost`` prices (see
+    Each trigger's event is **delivered** to the coordinator
+    (``Coordinator.deliver``): the coordinator's replan policy (pass
+    ``policy=`` among ``coordinator_kwargs``, or a pre-built coordinator)
+    decides between a full replan and *absorbing* the event.  For an
+    adopted replan: micro-batches fully drained by then are banked,
+    in-flight ones are discarded (they re-run after the remap), and the
+    remaining samples resume at ``trigger.time + remap_penalty +
+    solve_downtime + outcome.restore_seconds`` under the new plan — a
+    ``NodeFailure`` additionally pays the checkpoint-restore charge the
+    coordinator's ``restore_cost`` prices (see
     ``repro.checkpoint.estimate_restore_seconds``), since resuming after a
-    lost server means reloading params from the latest checkpoint.  The
-    physical effect of each event (slower node, changed rate, lost server)
-    takes hold from its trigger time via the coordinator's mutated network.
+    lost server means reloading params from the latest checkpoint.
+    ``solve_downtime`` is the per-replan solver stall: a float (seconds),
+    or ``"wall"`` to charge the measured ``outcome.solve_seconds``.  An
+    *absorbed* event that still mutated the network (a rate change ridden
+    out) cuts the segment at the trigger time with **zero** downtime — the
+    capacity change takes hold, the incumbent plan keeps running — while an
+    absorbed no-op (a suppressed ``Resync``: any delivery that changed
+    neither the coordinator's network nor its plan) does not cut at all:
+    the event lands in ``ReplanSimReport.suppressed`` and the in-flight
+    segment keeps streaming.  The physical effect of each event (slower
+    node, changed rate, lost server) takes hold from its trigger time via
+    the coordinator's mutated network.
 
-    ``policy``/``engine`` are forwarded to each segment's ``simulate_plan``.
+    ``policy``/``engine`` are forwarded to each segment's ``simulate_plan``
+    (``policy`` here is the *admission* policy — FIFO/1F1B — not the
+    replan policy).
 
     ``scenario`` capacity traces are keyed by node/link index; a
     ``NodeFailure`` renumbers the network's indices, so combining the two
@@ -919,8 +955,12 @@ def simulate_with_replanning(profile: ModelProfile, net: EdgeNetwork, B: int,
                 "scenario's index-keyed traces would land on the wrong "
                 "nodes/links")
     segments: list = []
+    suppressed: list = []
     t = 0.0
+    total_downtime = 0.0
     samples_left = B
+    cur = None          # in-flight segment's SimReport, memoized across
+    #                     suppressed triggers so no-ops don't re-simulate
     for trig in sorted(all_triggers, key=lambda tr: tr.time):
         if samples_left <= 0:
             break
@@ -928,30 +968,49 @@ def simulate_with_replanning(profile: ModelProfile, net: EdgeNetwork, B: int,
         if not plan.feasible or plan.b <= 0:
             break
         m = max(1, math.ceil(samples_left / plan.b))
-        rep = simulate_plan(profile, coord.net, plan.solution, plan.b,
-                            num_microbatches=m, scenario=scenario, t_start=t,
-                            policy=policy, engine=engine)
+        if cur is None:
+            cur = simulate_plan(profile, coord.net, plan.solution, plan.b,
+                                num_microbatches=m, scenario=scenario,
+                                t_start=t, policy=policy, engine=engine)
+        rep = cur
         if rep.makespan <= trig.time:
             # drained before the event fired — the run is simply over
             segments.append(SegmentReport(plan, rep, m, rep.makespan,
                                           None, None))
-            return ReplanSimReport(rep.makespan, segments, coord)
+            return ReplanSimReport(rep.makespan, segments, coord,
+                                   suppressed, total_downtime)
+        prev_net, prev_plan = coord.net, coord.plan
+        outcome = coord.deliver(trig.event, sim_time=trig.time)
+        if coord.net is prev_net and coord.plan is prev_plan:
+            # pure suppression: nothing the simulation sees changed — the
+            # in-flight segment keeps streaming, no cut, no downtime
+            suppressed.append((trig, outcome))
+            continue
+        cur = None
         done = int(np.searchsorted(rep.mb_complete, trig.time, side="right"))
         samples_left = max(0, samples_left - done * plan.b)
-        outcome = coord.apply(trig.event, sim_time=trig.time)
         segments.append(SegmentReport(plan, rep, done, trig.time, trig,
                                       outcome))
-        t = trig.time + remap_penalty + outcome.restore_seconds
+        if outcome.action in ("replan", "microbatch"):
+            solve_dt = (outcome.solve_seconds if solve_downtime == "wall"
+                        else float(solve_downtime))
+            dt = remap_penalty + solve_dt + outcome.restore_seconds
+        else:
+            dt = 0.0    # absorbed: no restart, no solve stall
+        total_downtime += dt
+        t = trig.time + dt
     if samples_left > 0:
         plan = coord.plan
         if plan.feasible and plan.b > 0:
             m = max(1, math.ceil(samples_left / plan.b))
-            rep = simulate_plan(profile, coord.net, plan.solution, plan.b,
-                                num_microbatches=m, scenario=scenario,
-                                t_start=t, policy=policy, engine=engine)
-            segments.append(SegmentReport(plan, rep, m, rep.makespan,
+            if cur is None:
+                cur = simulate_plan(profile, coord.net, plan.solution,
+                                    plan.b, num_microbatches=m,
+                                    scenario=scenario, t_start=t,
+                                    policy=policy, engine=engine)
+            segments.append(SegmentReport(plan, cur, m, cur.makespan,
                                           None, None))
-            t = rep.makespan
+            t = cur.makespan
         else:
             t = math.inf
-    return ReplanSimReport(t, segments, coord)
+    return ReplanSimReport(t, segments, coord, suppressed, total_downtime)

@@ -520,20 +520,51 @@ def load_corpus(directory: str) -> list:
 
 def fuzz_event_stream(rng: np.random.Generator, net: EdgeNetwork, *,
                       horizon: float, max_events: int = 3,
-                      min_servers: int = 2, allow_failure: bool = True
-                      ) -> tuple:
+                      min_servers: int = 2, allow_failure: bool = True,
+                      flap_fraction: float = 0.0,
+                      flap_window: float | None = None) -> tuple:
     """A time-ordered tuple of ``ReplanTrigger``s drawn from the ``repro.ft``
     event vocabulary — mid-round node churn (``NodeFailure``), rate drops,
     stragglers — with indices kept valid across the renumbering each failure
     causes (the coordinator's ``degraded()`` drops a server and shifts later
-    indices).  Feed to ``simulate_with_replanning``."""
+    indices).  Feed to ``simulate_with_replanning``.
+
+    ``flap_fraction`` of the drawn events (rounded down) become *flaps*: a
+    ``RateChange(a, c, f)`` followed within ``flap_window`` (default
+    ``horizon / 20``) by its exact reversal ``RateChange(a, c, 1/f)`` — the
+    route-dampening workload a debounced replan policy exists to absorb
+    (``repro.ft.Hysteresis`` sees the pair cancel to zero cumulative
+    deviation).  Flaps never stack with node failures; each flap consumes
+    one drawn event slot but emits two triggers."""
     from repro.ft.coordinator import NodeFailure, RateChange, Straggler
     from .scenario import ReplanTrigger
+    if not 0.0 <= flap_fraction <= 1.0:
+        raise ValueError("flap_fraction must be in [0, 1]")
+    if flap_window is None:
+        flap_window = horizon / 20.0
     n_nodes = len(net.nodes)
     times = np.sort(rng.uniform(0.05 * horizon, 0.95 * horizon,
                                 int(rng.integers(1, max_events + 1))))
+    n_flaps = int(math.floor(flap_fraction * len(times)))
+    flap_slots = set(rng.choice(len(times), size=n_flaps, replace=False)
+                     .tolist()) if n_flaps else set()
     trigs = []
-    for t in times:
+    for i, t in enumerate(times):
+        if i in flap_slots:
+            a = int(rng.integers(n_nodes))
+            c = int(rng.integers(n_nodes))
+            if a == c:
+                c = (c + 1) % n_nodes
+            f = float(rng.uniform(0.1, 0.8))
+            dt = float(rng.uniform(0.1, 1.0)) * flap_window
+            if i + 1 < len(times):
+                # keep the reversal before the next drawn event so a later
+                # NodeFailure's renumbering can't invalidate its indices
+                dt = min(dt, 0.5 * (float(times[i + 1]) - float(t)))
+            trigs.append(ReplanTrigger(float(t), RateChange(a, c, f)))
+            trigs.append(ReplanTrigger(float(t) + dt,
+                                       RateChange(a, c, 1.0 / f)))
+            continue
         kinds = ["straggler", "rate"]
         if allow_failure and n_nodes - 1 > min_servers:
             kinds.append("failure")
@@ -553,4 +584,4 @@ def fuzz_event_stream(rng: np.random.Generator, net: EdgeNetwork, *,
                 c = (c + 1) % n_nodes
             trigs.append(ReplanTrigger(
                 float(t), RateChange(a, c, float(rng.uniform(0.1, 0.8)))))
-    return tuple(trigs)
+    return tuple(sorted(trigs, key=lambda tr: tr.time))

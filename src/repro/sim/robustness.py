@@ -40,21 +40,55 @@ from .engine import build_visit_table, simulate_plan, simulate_plans
 from .fuzz import FuzzConfig, fuzz_scenario
 from .scenario import NetworkScenario
 
-__all__ = ["cvar", "scenario_distribution", "RobustnessReport",
-           "score_plan", "score_plans", "RobustMakespan"]
+__all__ = ["cvar", "scenario_distribution", "importance_scenario_distribution",
+           "RobustnessReport", "score_plan", "score_plans", "RobustMakespan"]
 
 
-def cvar(values, alpha: float = 0.95) -> float:
+def cvar(values, alpha: float = 0.95, weights=None) -> float:
     """Conditional value-at-risk: the mean of the worst
     ``ceil((1 - alpha) * n)`` values.  ``alpha=0`` is the plain mean,
-    ``alpha -> 1`` the maximum."""
+    ``alpha -> 1`` the maximum.
+
+    With ``weights`` (e.g. importance-sampling ratios from
+    :func:`importance_scenario_distribution`) this is the *weighted*
+    expected shortfall: the worst values forming exactly ``(1 - alpha)`` of
+    the total weight, the boundary sample counted fractionally.  Note the
+    unweighted path keeps the historical ceil-based tail (a whole number of
+    samples), so ``cvar(v, a)`` and ``cvar(v, a, np.ones(n))`` differ
+    whenever ``(1 - alpha) * n`` is fractional — comparisons across the two
+    must use one convention (the IS regression test passes uniform weights
+    to the reference sample too)."""
     if not 0.0 <= alpha < 1.0:
         raise ValueError("need 0 <= alpha < 1")
-    arr = np.sort(np.asarray(values, dtype=float))
+    arr = np.asarray(values, dtype=float)
     if arr.size == 0:
         raise ValueError("cvar of an empty sample")
-    k = int(math.ceil((1.0 - alpha) * arr.size))
-    return float(arr[-k:].mean())
+    if weights is None:
+        arr = np.sort(arr)
+        k = int(math.ceil((1.0 - alpha) * arr.size))
+        return float(arr[-k:].mean())
+    w = np.asarray(weights, dtype=float)
+    if w.shape != arr.shape:
+        raise ValueError("weights must match values in shape")
+    if np.any(w < 0) or not w.sum() > 0:
+        raise ValueError("weights must be >= 0 with positive total")
+    order = np.argsort(arr)[::-1]            # worst first
+    v, w = arr[order], w[order]
+    tail = (1.0 - alpha) * w.sum()
+    before = np.cumsum(w) - w                # weight strictly worse than i
+    take = np.minimum(w, np.maximum(0.0, tail - before))
+    return float(np.dot(v, take) / tail)
+
+
+def _weighted_quantile(values, weights, q: float) -> float:
+    """Lower weighted quantile: smallest v with cumulative weight >= q."""
+    v = np.asarray(values, dtype=float)
+    w = np.asarray(weights, dtype=float)
+    order = np.argsort(v)
+    v, w = v[order], w[order]
+    cum = np.cumsum(w) / w.sum()
+    return float(v[int(np.searchsorted(cum, q, side="left").clip(0,
+                                                                 v.size - 1))])
 
 
 def scenario_distribution(net: EdgeNetwork, n: int, *, seed: int = 0,
@@ -75,6 +109,48 @@ def scenario_distribution(net: EdgeNetwork, n: int, *, seed: int = 0,
                  for _ in range(n))
 
 
+def importance_scenario_distribution(net: EdgeNetwork, n: int, *,
+                                     seed: int = 0, tilt: float = 3.0,
+                                     config: FuzzConfig | None = None,
+                                     profile=None, sol=None,
+                                     b: int | None = None,
+                                     num_microbatches: int = 4) -> tuple:
+    """``(scenarios, weights)``: an *importance-sampled* scenario
+    distribution that over-draws rare compound failures and reweights.
+
+    The nominal fuzzer draws the event count uniformly on
+    ``[min_events, max_events]``, so at small ``n`` the compound tail — the
+    scenarios stacking ``max_events`` simultaneous failures, which dominate
+    CVaR — gets only ``n / K`` samples.  Here the count is drawn from the
+    tilted proposal ``q(k) ∝ tilt**k`` (conditional stream given the count
+    is unchanged: the fuzzer with ``min_events = max_events = k`` *is* the
+    nominal conditional law), and each scenario carries the likelihood
+    ratio ``p(k) / q(k)``.  Feed the weights to :func:`cvar` /
+    :func:`score_plan`: the estimator stays unbiased for the uniform-count
+    distribution while the tail is sampled ``~tilt**(K-1)`` x more densely.
+
+    ``tilt=1`` recovers uniform counts (all weights 1)."""
+    if tilt <= 0:
+        raise ValueError("tilt must be > 0")
+    config = config or FuzzConfig()
+    ks = np.arange(config.min_events, config.max_events + 1)
+    if ks.size == 0:
+        raise ValueError("empty event-count range")
+    p = np.full(ks.size, 1.0 / ks.size)
+    q = np.power(float(tilt), ks - ks[0])
+    q = q / q.sum()
+    rng = np.random.default_rng(seed)
+    scens, weights = [], []
+    for _ in range(n):
+        j = int(rng.choice(ks.size, p=q))
+        cfg_k = dataclasses.replace(config, min_events=int(ks[j]),
+                                    max_events=int(ks[j]))
+        scens.append(fuzz_scenario(rng, net, cfg_k, profile=profile, sol=sol,
+                                   b=b, num_microbatches=num_microbatches))
+        weights.append(float(p[j] / q[j]))
+    return tuple(scens), tuple(weights)
+
+
 @dataclasses.dataclass(frozen=True)
 class RobustnessReport:
     """Tail-risk profile of one plan across a scenario distribution."""
@@ -82,18 +158,23 @@ class RobustnessReport:
     nominal: float               # scenario-free makespan of the same plan
     alpha: float                 # CVaR confidence level
     blocked: dict | None = None  # resource -> mean blocked seconds, or None
+    weights: tuple | None = None  # importance-sampling ratios, or None
 
     @property
     def mean(self) -> float:
-        return float(np.mean(self.makespans))
+        if self.weights is None:
+            return float(np.mean(self.makespans))
+        return float(np.average(self.makespans, weights=self.weights))
 
     @property
     def p95(self) -> float:
-        return float(np.quantile(np.asarray(self.makespans), 0.95))
+        if self.weights is None:
+            return float(np.quantile(np.asarray(self.makespans), 0.95))
+        return _weighted_quantile(self.makespans, self.weights, 0.95)
 
     @property
     def cvar(self) -> float:
-        return cvar(self.makespans, self.alpha)
+        return cvar(self.makespans, self.alpha, self.weights)
 
     @property
     def worst(self) -> float:
@@ -129,14 +210,18 @@ def _blocked_attribution(profile, net, sol, b, reports, scenarios) -> dict:
 
 def score_plan(profile, net, sol, b: int, *, B: int | None = None,
                num_microbatches: int | None = None, scenarios,
-               policy="fifo", engine: str = "auto", alpha: float = 0.95,
+               weights=None, policy="fifo", engine: str = "auto",
+               alpha: float = 0.95,
                attribution: bool = True) -> RobustnessReport:
     """Run one plan across ``scenarios`` and report its tail risk.  With
     ``attribution=True`` each run keeps its timeline and the report carries
-    mean per-resource blocked time (where the failures actually bit)."""
+    mean per-resource blocked time (where the failures actually bit).
+    ``weights`` (from :func:`importance_scenario_distribution`) makes every
+    summary statistic importance-weighted."""
     scenarios = tuple(scenarios)
     if not scenarios:
         raise ValueError("need at least one scenario")
+    weights = None if weights is None else tuple(weights)
     kw = dict(B=B, num_microbatches=num_microbatches, policy=policy,
               engine=engine)
     nominal = simulate_plan(profile, net, sol, b, **kw)
@@ -155,7 +240,7 @@ def score_plan(profile, net, sol, b: int, *, B: int | None = None,
         blocked = None
     return RobustnessReport(makespans=tuple(r.L_t for r in reports),
                             nominal=nominal.L_t, alpha=alpha,
-                            blocked=blocked)
+                            blocked=blocked, weights=weights)
 
 
 def score_plans(profile, net, cands, *, B: int, scenarios, policy="fifo",

@@ -413,3 +413,40 @@ def gauss_markov_scenario(net: EdgeNetwork, cv: float,
     return _scenario_from_sampler(
         net, lambda: gauss_markov(rng, cv, dt=dt, horizon=horizon, corr=corr,
                                   floor=floor))
+
+
+def sampled_network(net: EdgeNetwork, scenario: NetworkScenario,
+                    t: float) -> EdgeNetwork:
+    """The network's *instantaneous measured capacities* at time ``t`` under
+    ``scenario`` — what a monitoring tick would report: node ``f`` and link
+    rates scaled by each multiplier trace's value at ``t``.  Feed to an
+    ``repro.ft.Resync`` event so a cadence-driven coordinator replans
+    against the measurement snapshot."""
+    nodes = list(net.nodes)
+    for i, mult in scenario.node_mult.items():
+        nodes[i] = dataclasses.replace(nodes[i],
+                                       f=nodes[i].f * mult.value_at(t))
+    rate = net.rate.copy()
+    for (a, c), mult in scenario.link_mult.items():
+        rate[a, c] = rate[a, c] * mult.value_at(t)
+    return dataclasses.replace(net, nodes=nodes, rate=rate)
+
+
+def periodic_resync_triggers(net: EdgeNetwork, scenario: NetworkScenario, *,
+                             cadence: float, horizon: float,
+                             start: float | None = None) -> tuple:
+    """Measurement ticks every ``cadence`` seconds up to ``horizon``: each
+    trigger carries a ``Resync`` with the scenario's sampled capacities at
+    that instant.  This is the ROADMAP's replanning-cadence experiment in
+    trigger form — pair with a ``Periodic``/``Hysteresis`` replan policy to
+    sweep how often the coordinator should chase Gauss-Markov drift (see
+    ``benchmarks/bench_ft_policy.py``)."""
+    from repro.ft.coordinator import Resync  # local: avoid hard dep
+    if cadence <= 0:
+        raise ValueError("cadence must be > 0")
+    t = cadence if start is None else start
+    out = []
+    while t < horizon:
+        out.append(ReplanTrigger(t, Resync(sampled_network(net, scenario, t))))
+        t += cadence
+    return tuple(out)

@@ -1,10 +1,14 @@
 """Fault tolerance: failure -> replan feasibility, straggler mitigation via
-Theorem 1, rate-change replanning."""
+Theorem 1, rate-change replanning, remap-across-failure properties, and the
+coordinator's solve/eval-error telemetry."""
 
+import dataclasses
 import math
 
+import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import total_latency, validate_solution
 from repro.ft import Coordinator, NodeFailure, RateChange, Straggler
 from conftest import small_instance
@@ -74,3 +78,159 @@ def test_event_log(coord):
     c.apply(Straggler(node=1, slowdown=2.0))
     c.apply(RateChange(1, 2, 0.5))
     assert len(c.events) == 2
+
+
+# ---------------------------------------------------------------------------
+# Straggler cheap path: the full solve is gated (satellite: saved solves)
+# ---------------------------------------------------------------------------
+
+def test_mild_straggler_skips_full_solve(coord):
+    """A barely-there straggler is fixed by the Theorem-1 micro-batch
+    re-solve alone: the cheap path lands within the gain threshold of the
+    pre-event latency (a lower bound on what a fresh BCD could reach, since
+    the straggler only removed capacity), so NO full solve runs."""
+    c, _ = coord
+    node = c.plan.solution.placement[-1]
+    with obs.enabled_scope():
+        obs.reset()
+        out = c.apply(Straggler(node=node, slowdown=1.01))
+        assert out.action == "microbatch"
+        assert obs.counter("ft.full_solve_saved") == 1
+        assert obs.counter("ft.full_solves") == 0
+        assert obs.counter("ft.replans") == 1
+
+
+def test_severe_straggler_still_pays_full_solve(coord):
+    """Slowing the client-side node 50x cannot be absorbed by a micro-batch
+    re-solve (cheap_L blows past the old_L gate), so the full BCD runs."""
+    c, _ = coord
+    node = c.plan.solution.placement[0]
+    with obs.enabled_scope():
+        obs.reset()
+        c.apply(Straggler(node=node, slowdown=50.0))
+        assert obs.counter("ft.full_solves") == 1
+
+
+# ---------------------------------------------------------------------------
+# Exception narrowing (satellite): expected infeasibility counted, bugs raise
+# ---------------------------------------------------------------------------
+
+class _BrokenModel:
+    """Cost-model stub whose evaluate raises a chosen exception type."""
+    name = "broken"
+
+    def __init__(self, exc):
+        self.exc = exc
+
+    def evaluate(self, *a, **k):
+        raise self.exc("boom")
+
+    def memory_feasible(self, *a, **k):
+        return True
+
+
+def test_eval_errors_counted_for_expected_infeasibility(coord):
+    c, _ = coord
+    c.cost_model = _BrokenModel(ValueError)
+    with obs.enabled_scope():
+        obs.reset()
+        assert c._current_latency() == math.inf
+        assert c._evaluate_candidate(c.net, c.plan.solution,
+                                     c.plan.b) == math.inf
+        assert obs.counter("ft.eval_errors") == 2
+
+
+def test_programming_errors_are_not_masked(coord):
+    c, _ = coord
+    c.cost_model = _BrokenModel(RuntimeError)
+    with pytest.raises(RuntimeError):
+        c._current_latency()
+    c.cost_model = _BrokenModel(TypeError)
+    with pytest.raises(TypeError):
+        c._evaluate_candidate(c.net, c.plan.solution, c.plan.b)
+
+
+# ---------------------------------------------------------------------------
+# Remap-across-failure properties (satellite): hypothesis suite + seeded twin
+# ---------------------------------------------------------------------------
+
+def _remap_instance(seed: int):
+    from repro.sim.validate import random_instance
+    for s in range(seed, seed + 40):
+        prof, net, sol, b, B = random_instance(s)
+        if len(net.nodes) >= 4:
+            return prof, net, sol, b, B
+    raise RuntimeError("no >=4-node instance found")
+
+
+def _check_remap_properties(prof, net, sol, b, B, server):
+    remapped = Coordinator._remap_across_failure(sol, server)
+    if server in sol.placement:
+        # hosting-server failure: its submodels must move, no ride-out
+        assert remapped is None
+        return
+    degraded = net.degraded([server])
+    # the remapped placement names the SAME physical nodes
+    assert [degraded.nodes[p] for p in remapped.placement] == \
+        [net.nodes[p] for p in sol.placement]
+    # indices above the dropped server shift down by exactly one
+    assert tuple(remapped.placement) == tuple(
+        p - 1 if p > server else p for p in sol.placement)
+    # degraded() keeps the effective-rate submatrix, so the closed-form
+    # ride-out objective is invariant under the renumbering
+    L_old = total_latency(prof, net, sol, b, B)
+    L_new = total_latency(prof, degraded, remapped, b, B)
+    assert L_new == pytest.approx(L_old, rel=1e-12)
+
+
+def test_remap_across_failure_seeded_sweep():
+    """Deterministic twin of the hypothesis property (runs everywhere)."""
+    for seed in (0, 7, 23):
+        prof, net, sol, b, B = _remap_instance(seed)
+        for server in range(1, len(net.nodes)):
+            _check_remap_properties(prof, net, sol, b, B, server)
+
+
+def test_remap_across_failure_hypothesis():
+    pytest.importorskip("hypothesis")  # optional dev dep
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           pick=st.integers(min_value=0, max_value=10_000))
+    def prop(seed, pick):
+        prof, net, sol, b, B = _remap_instance(seed)
+        server = 1 + pick % (len(net.nodes) - 1)
+        _check_remap_properties(prof, net, sol, b, B, server)
+
+    prop()
+
+
+def test_absorbed_failure_keeps_plan_when_not_hosting(coord):
+    """Absorbing a NodeFailure of a non-hosting server remaps indices and
+    keeps the incumbent objective (closed-form invariance), paying neither
+    a solve nor a restore."""
+    c, prof = coord
+    spare = next(s for s in range(1, len(c.net.nodes))
+                 if s not in c.plan.solution.placement)
+    L_before = c.plan.objective
+    out = c.absorb(NodeFailure(server=spare))
+    assert out.action == "absorb"
+    assert out.restore_seconds == 0.0
+    assert c.plan.objective == pytest.approx(L_before, rel=1e-12)
+    validate_solution(c.plan.solution, prof, c.net)
+
+
+def test_absorbed_failure_escalates_when_hosting(coord):
+    """Absorbing a failure of a hosting server is impossible — the absorb
+    escalates to a forced full replan (and pays the restore)."""
+    c, _ = coord
+    c.restore_cost = 0.25
+    hosting = c.plan.solution.placement[-1]
+    with obs.enabled_scope():
+        obs.reset()
+        out = c.absorb(NodeFailure(server=hosting))
+        assert out.action == "replan"
+        assert out.restore_seconds == 0.25
+        assert out.ride_out_latency == math.inf
+        assert obs.counter("ft.absorb_escalated") == 1

@@ -1,0 +1,361 @@
+"""Replan-policy layer: debounce/hysteresis semantics, token-bucket
+rate-limiting with backoff, Resync snapshots, policy-mediated simulation
+accounting, and the corpus-level Eager/RideOut/Hysteresis guarantees."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.ft import (Coordinator, Eager, RideOut, Periodic, Hysteresis,
+                      RateLimited, CVaRPreSpill, NodeFailure, RateChange,
+                      Resync, Straggler, PolicyDecision, ReplanPolicy,
+                      resolve_replan_policy, event_deviation,
+                      evaluate_policies)
+from repro.sim import (fuzz_event_stream, simulate_with_replanning,
+                       sampled_network, periodic_resync_triggers,
+                       gauss_markov_scenario, ReplanTrigger)
+from repro.sim.validate import random_instance
+from conftest import small_instance
+
+
+@pytest.fixture
+def inst():
+    prof, net = small_instance(5, num_layers=6, num_servers=4)
+    return prof, net
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def test_event_deviation_signs():
+    key, d = event_deviation(RateChange(0, 2, 0.5))
+    assert key == ("link", 0, 2) and d == pytest.approx(math.log(0.5))
+    key, d = event_deviation(Straggler(1, 2.0))
+    assert key == ("node", 1) and d == pytest.approx(-math.log(2.0))
+    # a flap's two edges cancel exactly
+    assert event_deviation(RateChange(0, 2, 0.5))[1] + \
+        event_deviation(RateChange(0, 2, 2.0))[1] == pytest.approx(0.0)
+    assert event_deviation(NodeFailure(1))[1] == -math.inf
+
+
+def test_resolve_replan_policy():
+    assert resolve_replan_policy(None) is None
+    assert isinstance(resolve_replan_policy("eager"), Eager)
+    assert isinstance(resolve_replan_policy("ride_out"), RideOut)
+    assert isinstance(resolve_replan_policy("hysteresis"), Hysteresis)
+    p = Periodic(2.0)
+    assert resolve_replan_policy(p) is p
+    with pytest.raises(ValueError):
+        resolve_replan_policy("nope")
+    with pytest.raises(TypeError):
+        resolve_replan_policy(42)
+
+
+def test_policy_constructor_validation():
+    with pytest.raises(ValueError):
+        Hysteresis(threshold=0.0)
+    with pytest.raises(ValueError):
+        Hysteresis(cooldown=-1.0)
+    with pytest.raises(ValueError):
+        Periodic(-1.0)
+    with pytest.raises(ValueError):
+        RateLimited(Eager(), capacity=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Hysteresis: debounce, persistence, reversal, failure reset
+# ---------------------------------------------------------------------------
+
+def test_hysteresis_absorbs_below_threshold(inst):
+    prof, net = inst
+    c = Coordinator(prof, net, B=128, policy=Hysteresis(threshold=0.25))
+    out = c.deliver(RateChange(1, 2, 0.9), sim_time=0.0)   # |ln 0.9| ~ 0.105
+    assert out.action == "absorb"
+    assert not out.decision.replan
+
+
+def test_hysteresis_replans_past_threshold(inst):
+    prof, net = inst
+    c = Coordinator(prof, net, B=128,
+                    policy=Hysteresis(threshold=0.25, cooldown=0.0))
+    out = c.deliver(RateChange(1, 2, 0.4), sim_time=0.0)   # |ln 0.4| ~ 0.92
+    assert out.action in ("replan", "microbatch")
+    assert out.decision.replan
+
+
+def test_hysteresis_accumulates_small_deviations(inst):
+    """Three sub-threshold drops on the SAME link accumulate past the
+    threshold — debounce is cumulative, not per-event."""
+    prof, net = inst
+    c = Coordinator(prof, net, B=128,
+                    policy=Hysteresis(threshold=0.25, cooldown=0.0))
+    acts = [c.deliver(RateChange(1, 2, 0.9), sim_time=float(t)).action
+            for t in range(3)]                            # 3 x 0.105 > 0.25
+    assert acts[0] == "absorb" and acts[1] == "absorb"
+    assert acts[2] in ("replan", "microbatch")
+
+
+def test_hysteresis_reversal_cancels_pending(inst):
+    """A flap: the down edge arms a pending replan, the up edge restores
+    the cumulative deviation to ~0 and CANCELS it — no replan ever fires."""
+    prof, net = inst
+    pol = Hysteresis(threshold=0.25, cooldown=1.0)
+    c = Coordinator(prof, net, B=128, policy=pol)
+    with obs.enabled_scope():
+        obs.reset()
+        out1 = c.deliver(RateChange(1, 2, 0.4), sim_time=0.0)
+        assert out1.action == "absorb"          # inside suppression window
+        assert ("link", 1, 2) in pol._pending
+        out2 = c.deliver(RateChange(1, 2, 2.5), sim_time=0.2)  # recovery
+        assert out2.action == "absorb"
+        assert ("link", 1, 2) not in pol._pending
+        assert obs.counter("ft.policy.reversals") == 1
+        # and much later nothing is armed anymore
+        out3 = c.deliver(RateChange(2, 3, 0.95), sim_time=5.0)
+        assert out3.action == "absorb"
+
+
+def test_hysteresis_deferred_replan_matures(inst):
+    """Trailing-edge debounce: a super-threshold deviation that PERSISTS
+    for the cooldown fires at the next delivery, whatever its key."""
+    prof, net = inst
+    c = Coordinator(prof, net, B=128,
+                    policy=Hysteresis(threshold=0.25, cooldown=1.0))
+    assert c.deliver(RateChange(1, 2, 0.4), sim_time=0.0).action == "absorb"
+    out = c.deliver(RateChange(2, 3, 0.99), sim_time=1.5)
+    assert out.action in ("replan", "microbatch")
+    assert "matured" in out.decision.reason or "persisted" in \
+        out.decision.reason
+
+
+def test_hysteresis_node_failure_always_replans_and_resets(inst):
+    prof, net = inst
+    pol = Hysteresis(threshold=0.25, cooldown=5.0)
+    c = Coordinator(prof, net, B=128, policy=pol)
+    c.deliver(RateChange(1, 2, 0.4), sim_time=0.0)
+    assert pol._pending
+    out = c.deliver(NodeFailure(server=3), sim_time=0.5)
+    assert out.action in ("replan", "microbatch")
+    # renumbering invalidated every per-index key: state dropped
+    assert not pol._pending and not pol._dev
+
+
+# ---------------------------------------------------------------------------
+# Periodic + Resync
+# ---------------------------------------------------------------------------
+
+def test_periodic_cadence(inst):
+    prof, net = inst
+    c = Coordinator(prof, net, B=128, policy=Periodic(cadence=2.0))
+    a0 = c.deliver(RateChange(1, 2, 0.5), sim_time=0.0).action
+    a1 = c.deliver(RateChange(1, 2, 0.5), sim_time=1.0).action
+    a2 = c.deliver(RateChange(1, 2, 0.5), sim_time=2.5).action
+    assert a0 in ("replan", "microbatch")
+    assert a1 == "absorb"
+    assert a2 in ("replan", "microbatch")
+
+
+def test_resync_absorb_is_a_true_noop(inst):
+    prof, net = inst
+    c = Coordinator(prof, net, B=128, policy=RideOut())
+    plan_before, net_before = c.plan, c.net
+    out = c.deliver(Resync(net), sim_time=1.0)
+    assert out.action == "absorb"
+    assert not out.net_changed
+    assert c.plan is plan_before and c.net is net_before
+
+
+def test_resync_replan_keeps_base_network(inst):
+    """Replanning against a snapshot solves on the snapshot but must NOT
+    adopt it as the coordinator's base network (the driving simulation
+    re-applies its scenario multipliers on top of coord.net)."""
+    import dataclasses as dc
+    prof, net = inst
+    c = Coordinator(prof, net, B=128)         # no policy: eager
+    slow = dc.replace(net, nodes=[dc.replace(n, f=n.f * 0.5)
+                                  for n in net.nodes])
+    out = c.apply(Resync(slow), sim_time=1.0)
+    assert out.action in ("replan", "microbatch")
+    assert not out.net_changed
+    assert c.net is net                        # base net untouched
+    # the adopted plan was priced on the snapshot (halved compute)
+    assert out.new_latency > 0
+
+
+def test_sampled_network_and_resync_triggers(inst):
+    prof, net = inst
+    rng = np.random.default_rng(0)
+    scen = gauss_markov_scenario(net, 0.3, rng, dt=0.5, horizon=8.0)
+    snap = sampled_network(net, scen, 1.0)
+    assert len(snap.nodes) == len(net.nodes)
+    assert any(abs(a.f - b.f) > 0 for a, b in zip(snap.nodes, net.nodes))
+    trigs = periodic_resync_triggers(net, scen, cadence=2.0, horizon=8.0)
+    assert [t.time for t in trigs] == [2.0, 4.0, 6.0]
+    assert all(isinstance(t.event, Resync) for t in trigs)
+    with pytest.raises(ValueError):
+        periodic_resync_triggers(net, scen, cadence=0.0, horizon=8.0)
+
+
+# ---------------------------------------------------------------------------
+# RateLimited: token bucket + exponential backoff
+# ---------------------------------------------------------------------------
+
+def test_rate_limited_bucket_absorbs_when_empty(inst):
+    prof, net = inst
+    pol = RateLimited(Eager(), capacity=1.0, refill_period=100.0)
+    c = Coordinator(prof, net, B=128, policy=pol)
+    with obs.enabled_scope():
+        obs.reset()
+        out1 = c.deliver(RateChange(1, 2, 0.5), sim_time=0.0)
+        assert out1.action in ("replan", "microbatch")
+        out2 = c.deliver(RateChange(1, 2, 0.5), sim_time=1.0)
+        assert out2.action == "absorb"
+        assert "rate-limited" in out2.decision.reason
+        assert obs.counter("ft.policy.rate_limited") == 1
+
+
+def test_rate_limited_backoff_grows_on_unhelpful_replans(inst):
+    """Replans that fail to beat riding out by the margin stretch the
+    refill period exponentially; the wrapped reason is preserved."""
+    prof, net = inst
+    pol = RateLimited(Eager(), capacity=3.0, refill_period=1.0,
+                      backoff=2.0, margin=0.02)
+    c = Coordinator(prof, net, B=128, policy=pol)
+    assert pol.effective_refill_period == 1.0
+    with obs.enabled_scope():
+        obs.reset()
+        # mild rate changes: the fresh solve cannot beat riding out, so
+        # every adopted replan is "unhelpful"
+        c.deliver(RateChange(1, 2, 0.95), sim_time=0.0)
+        c.deliver(RateChange(1, 2, 0.95), sim_time=0.01)
+        assert obs.counter("ft.policy.backoff_steps") == 2
+    assert pol.effective_refill_period == 4.0
+    pol.reset()
+    assert pol.effective_refill_period == 1.0
+    assert pol._tokens == 3.0
+
+
+def test_rate_limited_refills_with_time(inst):
+    prof, net = inst
+    pol = RateLimited(Eager(), capacity=1.0, refill_period=1.0, margin=0.9)
+    # margin=0.9: essentially every replan counts as helpful is impossible,
+    # but helpful-ness doesn't matter here — only the refill clock does
+    c = Coordinator(prof, net, B=128, policy=pol)
+    c.deliver(RateChange(1, 2, 0.9), sim_time=0.0)      # spends the token
+    out = c.deliver(RateChange(1, 2, 0.9), sim_time=0.1)
+    assert out.action == "absorb"                       # bucket empty
+
+
+# ---------------------------------------------------------------------------
+# CVaRPreSpill
+# ---------------------------------------------------------------------------
+
+def test_cvar_pre_spill_decides_by_tail():
+    prof, net, sol, b, B = random_instance(3)
+    tight = CVaRPreSpill(bound=1.05, n_scenarios=4, seed=0)
+    loose = CVaRPreSpill(bound=1e6, n_scenarios=4, seed=0)
+    c = Coordinator(prof, net, B=B, policy=tight)
+    ev = Straggler(1, 3.0)
+    d_tight = tight.decide(ev, 1.0, c)
+    d_loose = loose.decide(ev, 1.0, c)
+    # a loose bound absorbs; a tight bound escalates (robust cost model)
+    assert not d_loose.replan
+    if d_tight.replan:
+        assert d_tight.cost_model is tight.robust
+
+
+# ---------------------------------------------------------------------------
+# simulate_with_replanning: suppression + downtime accounting
+# ---------------------------------------------------------------------------
+
+def test_suppressed_events_do_not_cut_segments(inst):
+    prof, net = inst
+    c = Coordinator(prof, net, B=128, policy=RideOut())
+    trigs = [ReplanTrigger(0.1, Resync(net)), ReplanTrigger(0.2, Resync(net))]
+    rep = simulate_with_replanning(prof, net, 128, trigs, coordinator=c)
+    assert rep.num_suppressed == 2
+    assert rep.num_replans == 0
+    assert len(rep.suppressed) == 2
+    assert len(rep.segments) == 1              # one unbroken run
+    assert rep.downtime == 0.0
+    assert len(rep.outcomes) == 2
+
+
+def test_downtime_charged_only_for_adopted_replans(inst):
+    prof, net = inst
+    trig = ReplanTrigger(0.1, RateChange(1, 2, 0.5))
+    eager = simulate_with_replanning(prof, net, 128, [trig],
+                                     remap_penalty=0.25, solve_downtime=0.5)
+    assert eager.num_replans == 1
+    assert eager.downtime == pytest.approx(0.75)
+    c = Coordinator(prof, net, B=128, policy=RideOut())
+    ride = simulate_with_replanning(prof, net, 128, [trig], coordinator=c,
+                                    remap_penalty=0.25, solve_downtime=0.5)
+    assert ride.num_replans == 0
+    assert ride.downtime == 0.0
+    # the absorbed rate change still takes physical effect: segment cut
+    assert len(ride.segments) == 2
+
+
+def test_wall_clock_solve_downtime(inst):
+    prof, net = inst
+    trig = ReplanTrigger(0.1, RateChange(1, 2, 0.5))
+    rep = simulate_with_replanning(prof, net, 128, [trig],
+                                   solve_downtime="wall")
+    out = rep.segments[0].outcome
+    assert rep.downtime == pytest.approx(out.solve_seconds)
+    assert rep.downtime > 0.0
+
+
+# ---------------------------------------------------------------------------
+# corpus-level guarantees (the CI smoke contract; bench asserts the same)
+# ---------------------------------------------------------------------------
+
+def _flap_corpus(net, n_streams=4, horizon=4.0):
+    return [fuzz_event_stream(np.random.default_rng(1000 + s), net,
+                              horizon=horizon, max_events=5,
+                              allow_failure=False, flap_fraction=0.75)
+            for s in range(n_streams)]
+
+
+def test_corpus_hysteresis_vs_eager_vs_rideout():
+    prof, net, sol, b, B = random_instance(3)
+    streams = _flap_corpus(net)
+    reports = evaluate_policies(
+        prof, net, B, streams,
+        {"eager": lambda: None,
+         "ride_out": RideOut,
+         "hysteresis": lambda: RateLimited(Hysteresis(0.25, cooldown=0.3))},
+        remap_penalty=0.01, solve_downtime=0.05)
+    eager, ride, hyst = (reports["eager"], reports["ride_out"],
+                         reports["hysteresis"])
+    assert eager.replans > 0
+    # debounce + backoff: a small fraction of eager's replans...
+    assert hyst.replans <= 0.25 * eager.replans
+    # ...never more than eager issues, with less downtime...
+    assert hyst.downtime <= eager.downtime
+    # ...an end-to-end makespan (incl. solve downtime) no worse than eager's
+    assert np.mean(hyst.makespans) <= np.mean(eager.makespans) * (1 + 1e-9)
+    # ...and a final objective never worse than never replanning at all
+    assert np.mean(hyst.final_objectives) <= \
+        np.mean(ride.final_objectives) * (1 + 1e-9)
+    # replans + suppressions account for every delivered event
+    assert hyst.replans + hyst.suppressed == eager.replans + eager.suppressed
+
+
+def test_evaluate_policies_report_surface():
+    prof, net, sol, b, B = random_instance(3)
+    streams = _flap_corpus(net, n_streams=2)
+    reports = evaluate_policies(prof, net, B, streams,
+                                {"eager": lambda: None}, attribution=True,
+                                solve_downtime=0.05)
+    r = reports["eager"]
+    row = r.row()
+    assert set(row) == {"policy", "mean", "cvar", "replans", "suppressed",
+                        "downtime", "mean_final_objective"}
+    assert r.cvar >= r.mean > 0
+    assert r.blocked is not None
+    assert len(r.makespans) == 2
