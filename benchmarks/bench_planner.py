@@ -1,14 +1,23 @@
-"""Planner scaling benchmark (ISSUE 3): nodes x layers x B grid for
-``solve_msp`` / ``bcd_solve`` / ``exhaustive_joint``, threshold-batched vs
-the legacy scan, with wall-clocks and DP sweep counts.
+"""Planner scaling benchmark (ISSUE 3 grid + ISSUE 9 fleet).
+
+Grid: nodes x layers x B for ``solve_msp`` / ``bcd_solve`` /
+``exhaustive_joint``, threshold-batched vs the legacy scan, with
+wall-clocks and DP sweep counts.
+
+Fleet (ISSUE 9): plans-per-second numbers for the planner-as-a-service
+paths on the acceptance instance (24 servers x 30 layers x B = 64) —
+  - ``solve_many`` numpy vs the compiled jax pipeline (>= 3x bar),
+  - cold solve vs incremental ``Planner.update`` warm replans on
+    single-edge deltas (>= 5x bar),
+  - an N-topology sweep: cold / incremental / pallas plans per second.
 
 Outputs:
   results/bench/bench_planner.csv   the full grid
-  BENCH_planner.json (repo root)    summary incl. the acceptance instance
-                                    (24 servers x 30 layers x B = 64) —
+  BENCH_planner.json (repo root)    summary incl. acceptance + fleet —
                                     the perf trajectory tracked across PRs
 
-``--smoke`` shrinks the grid for the CI invocation (a few seconds).
+``--smoke`` shrinks the grid for the CI invocation (a few seconds) and
+asserts the fleet speedup bars instead of recording them.
 """
 
 from __future__ import annotations
@@ -18,8 +27,10 @@ import json
 import os
 import time
 
-from repro.core import (bcd_solve, exhaustive_joint, make_edge_network,
-                        solve_msp, transformer_profile)
+from repro.core import (Planner, bcd_solve, exhaustive_joint,
+                        make_edge_network, planner_jax, solve_msp,
+                        transformer_profile)
+from repro.ft import RateChange, Straggler
 from .common import Timer, emit
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -80,6 +91,115 @@ def acceptance_run(b_step: int = 1):
     }
 
 
+def fleet_run(smoke: bool = False) -> dict:
+    """ISSUE 9 planner-as-a-service numbers on the acceptance instance."""
+    prof, net = acceptance_instance()
+    B = 64
+    bs = list(range(1, B + 1, 8 if smoke else 1))
+
+    # -- batched solve_many: numpy vs the compiled jax pipeline ------------
+    pl_np = Planner(prof, net)
+    pl_np.solve_many(bs, B)                      # warm graph/DP caches
+    with Timer() as t_np:
+        pl_np.solve_many(bs, B)
+    jax_seconds = speedup = None
+    if planner_jax.available():
+        pl_jx = Planner(prof, net)
+        pl_jx.solve_many(bs, B, backend="jax")   # compile + warm caches
+        with Timer() as t_jx:
+            pl_jx.solve_many(bs, B, backend="jax")
+        jax_seconds = round(t_jx.seconds, 4)
+        speedup = round(t_np.seconds / t_jx.seconds, 2)
+    solve_many = {
+        "servers": 24, "layers": 30, "B": B, "num_bs": len(bs),
+        "numpy_seconds": round(t_np.seconds, 4),
+        "jax_seconds": jax_seconds, "jax_speedup": speedup,
+        "jax_dtype": planner_jax.sweep_dtype()
+        if planner_jax.available() else None,
+    }
+
+    # -- incremental: warm Planner.update vs cold re-solve -----------------
+    b = 8
+    deltas = []
+    n = len(net.nodes)
+    for k in range(8 if smoke else 16):
+        if k % 2 == 0:
+            deltas.append(RateChange(n_from=1 + k % (n - 1),
+                                     n_to=1 + (k + 1) % (n - 1),
+                                     factor=0.8 if k % 4 else 1.25))
+        else:
+            deltas.append(Straggler(node=1 + k % (n - 1),
+                                    slowdown=1.5 if k % 4 == 1 else 1 / 1.5))
+    warm_pl = Planner(prof, net)
+    warm_pl.solve(b, B, solver="batched")        # seed the warm hint
+    identical = True
+    with Timer() as t_warm:
+        warm_results = []
+        for d in deltas:
+            warm_pl.update(d)
+            warm_results.append(warm_pl.solve(b, B, solver="batched"))
+    # cold baseline: what _full_replan paid before ISSUE 9 — a fresh
+    # Planner (factory + graph build) per delta on the mutated net
+    from repro.ft.coordinator import Coordinator
+    cold_net = net
+    with Timer() as t_cold:
+        for d, wr in zip(deltas, warm_results):
+            cold_net, _ = Coordinator.preview(cold_net, None, d)
+            cr = Planner(prof, cold_net).solve(b, B, solver="batched")
+            identical = identical and (cr.objective == wr.objective
+                                       and cr.solution == wr.solution)
+    incremental = {
+        "deltas": len(deltas), "b": b, "B": B,
+        "cold_seconds": round(t_cold.seconds, 4),
+        "warm_seconds": round(t_warm.seconds, 4),
+        "speedup": round(t_cold.seconds / t_warm.seconds, 2),
+        "identical_plans": bool(identical),
+    }
+
+    # -- N-topology fleet: plans per second per backend --------------------
+    topo_bs = [4, 8, 16, 32]
+    seeds = range(2 if smoke else 8)
+    nets = [bench_instance(24, 28, seed=3 + s)[1] for s in seeds]
+    rates = {}
+    for name in (["cold", "incremental"]
+                 + (["pallas"] if planner_jax.available() else [])):
+        plans = 0
+        with Timer() as t:
+            for topo in nets:
+                if name == "cold":
+                    for bb in topo_bs:
+                        Planner(prof, topo).solve(bb, B, solver="batched")
+                        plans += 1
+                elif name == "incremental":
+                    p = Planner(prof, topo)
+                    for bb in topo_bs:
+                        p.solve(bb, B, solver="batched")
+                        plans += 1
+                    for d in deltas[:4]:
+                        p.update(d)
+                        for bb in topo_bs:
+                            p.solve(bb, B, solver="batched")
+                            plans += 1
+                else:                            # pallas window sweeps
+                    p = Planner(prof, topo)
+                    for bb in topo_bs:
+                        p.solve(bb, B, solver="batched", backend="pallas")
+                        plans += 1
+        rates[name] = {"plans": plans, "seconds": round(t.seconds, 4),
+                       "plans_per_sec": round(plans / t.seconds, 2)}
+
+    fleet = {"solve_many": solve_many, "incremental": incremental,
+             "topologies": {"n": len(nets), "b_grid": topo_bs, **rates}}
+    # CI bars (ISSUE 9): incremental >= 5x always; the jax >= 3x bar only
+    # on the full b-sweep — the smoke subset (8 of 64 sizes) under-fills
+    # the batched dispatches, so its ratio is not the acceptance number
+    assert incremental["speedup"] >= 5.0, incremental
+    assert incremental["identical_plans"], incremental
+    if not smoke and speedup is not None:
+        assert speedup >= 3.0, solve_many
+    return fleet
+
+
 def run(smoke: bool = False, b_step: int | None = None) -> dict:
     rows = []
     grid = ([(4, 8, 32)] if smoke else
@@ -91,11 +211,13 @@ def run(smoke: bool = False, b_step: int | None = None) -> dict:
           "msp_scan_s", "scan_sweeps", "bcd_s", "exhaustive_batched_s"])
     acc = acceptance_run(b_step=b_step if b_step is not None
                          else (32 if smoke else 1))
+    fleet = fleet_run(smoke=smoke)
     summary = {
-        "issue": 3,
+        "issue": 9,
         "generated_unix": int(time.time()),
         "smoke": smoke,
         "acceptance": acc,
+        "fleet": fleet,
         "grid": [dict(zip(["servers", "layers", "B", "msp_batched_s",
                            "batched_sweeps", "msp_scan_s", "scan_sweeps",
                            "bcd_s", "exhaustive_batched_s"], r))
@@ -107,6 +229,7 @@ def run(smoke: bool = False, b_step: int | None = None) -> dict:
             f.write("\n")
         print(f"# wrote {JSON_PATH}")
     print(json.dumps(acc, indent=2))
+    print(json.dumps(fleet, indent=2))
     return summary
 
 

@@ -143,6 +143,66 @@ class GraphFactory:
         self.rate = net.rate                                    # (N, N)
         self.rate_T = net.rate.T
 
+    # -- in-place patching (Planner.update; ISSUE 9) ------------------------
+    def patch_rate(self, net: EdgeNetwork) -> None:
+        """Rebind to a network whose ``rate`` matrix changed (same nodes).
+
+        Only the rate views are swapped; every other basis tensor is
+        b-independent of link rates, so cached graphs stay valid except for
+        the comm entries of the changed link pair (see :meth:`comm_pair`)."""
+        self.net = net
+        self.rate = net.rate
+        self.rate_T = net.rate.T
+
+    def patch_node_speed(self, net: EdgeNetwork) -> None:
+        """Rebind to a network whose node ``f`` vector changed (same nodes,
+        same rates) — the straggler mutation.  Cached graphs stay valid
+        except the seg row of the changed node (see :meth:`seg_node`)."""
+        self.net = net
+        self.f = np.array([n.f for n in net.nodes])
+
+    def comm_pair(self, eff: np.ndarray, a: int, c: int):
+        """``(comm_cost[:, a, c], comm_beta[:, a, c])`` columns for the
+        *current* rate matrix — the same formula chain as :meth:`graph`
+        restricted to one (n, m) pair, so patched entries are bitwise equal
+        to a fresh assembly (every op is the identical IEEE-754 op on the
+        identical operands)."""
+        fb = eff[a] * self.fb1                       # (I1,) fwd bytes at cut i
+        gb = eff[a] * self.gb1                       # (I1,) bwd bytes at cut i
+        # both byte volumes scale with eff of the *forward sender* a — the
+        # gradient flows back to a, whose effective batch sizes the tensor
+        r, rT = self.rate[a, c], self.rate_T[a, c]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            tf = np.where(fb == 0.0, 0.0,
+                          np.where(r > 0, fb / r, np.inf))
+            tb = np.where(gb == 0.0, 0.0,
+                          np.where(rT > 0, gb / rT, np.inf))
+        cost = tf + tb
+        beta = np.maximum(tf, tb)
+        cost[0] = np.inf
+        beta[0] = np.inf
+        if a == c:
+            cost[:] = np.inf
+            beta[:] = np.inf
+        return cost, beta
+
+    def seg_node(self, eff: np.ndarray, n: int):
+        """``(seg_cost[n], seg_beta[n])`` rows (I1, I1) for the *current*
+        node constants — :meth:`graph`'s segment formulas restricted to one
+        node, bitwise equal to a fresh assembly (same op chain)."""
+        e = eff[n]
+        fp = (e * self.kappa[n]) * self.W_fp / self.f[n] + self.t0[n]
+        bp_w = (np.maximum(e - self.b_th[n], 0.0) * self.kappa[n]) * self.W_bp
+        bp = np.where(bp_w == 0.0, self.t1[n], bp_w / self.f[n] + self.t1[n])
+        if self.memory_model == "paper":
+            mem_ok = e * self.Mem_ps <= self.mem[n]
+        else:
+            mem_ok = e * self.Mem_act + self.Mem_static <= self.mem[n]
+        ok = self.tri & mem_ok
+        seg_cost = np.where(ok, fp + bp, np.inf)
+        seg_beta = np.where(ok, np.maximum(fp, bp), np.inf)
+        return seg_cost, seg_beta
+
     # -- assembly -----------------------------------------------------------
     def effective_batch(self, b: int) -> np.ndarray:
         """Per-node effective micro-batch: Eq. (1) max share on the client

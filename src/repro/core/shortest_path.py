@@ -91,11 +91,12 @@ class MSPResult:
 # ---------------------------------------------------------------------------
 
 class _SweepResult:
-    __slots__ = ("best_val", "best_k", "best_m", "parents")
+    __slots__ = ("best_val", "best_k", "best_m", "parents", "stack")
 
-    def __init__(self, best_val, best_k, best_m, parents):
+    def __init__(self, best_val, best_k, best_m, parents, stack=None):
         self.best_val, self.best_k, self.best_m = best_val, best_k, best_m
         self.parents = parents
+        self.stack = stack          # per-layer dist copies (want_stack=True)
 
 
 def _ws_get(ws: dict, name: str, shape: tuple, dtype) -> np.ndarray:
@@ -108,7 +109,8 @@ def _ws_get(ws: dict, name: str, shape: tuple, dtype) -> np.ndarray:
 
 
 def _sweep(Ccom, Bcom, Sseg, Bseg, src_cost, src_beta, K, ts, *,
-           mode="sum", masks=None, want_parents=False, ws=None):
+           mode="sum", masks=None, want_parents=False, want_stack=False,
+           ws=None):
     """Threshold-batched layered-DP sweep over the (k, n, i) DAG.
 
     Tensor layouts (a leading slice axis of size 1 broadcasts, size S runs
@@ -128,6 +130,11 @@ def _sweep(Ccom, Bcom, Sseg, Bseg, src_cost, src_beta, K, ts, *,
     i of A[s, i, m] (+|max) Sseg[s, i, m, j].  Ties break to the smallest n
     and then the smallest i (np.argmin takes the first minimum), identically
     for every slice count — which is what makes scan == batched exact.
+
+    ``want_stack=True`` additionally collects the per-layer ``dist`` tensors
+    (``stack[k - 2]`` = dist after layer k) so a path can be reconstructed
+    host-side *after* the sweep (``planner_jax.backtrace_stack``) without
+    paying the argmin parent tracking — the warm-replan reconstruction path.
     """
     ts = np.asarray(ts, dtype=float)
     S = ts.shape[0]
@@ -144,6 +151,7 @@ def _sweep(Ccom, Bcom, Sseg, Bseg, src_cost, src_beta, K, ts, *,
     best_k = np.where(fin0, 1, 0)
     best_m = np.zeros(S, dtype=np.int64)
     parents = []
+    stack = [] if want_stack else None
 
     # the threshold mask is layer-independent: fold beta > t edges to inf
     # ONCE per sweep instead of re-masking per layer (the per-layer work then
@@ -180,6 +188,8 @@ def _sweep(Ccom, Bcom, Sseg, Bseg, src_cost, src_beta, K, ts, *,
         else:
             nd = cand_s.min(axis=1)                  # (S, N, I1)
         dist = nd
+        if want_stack:
+            stack.append(nd)                         # fresh array (no alias)
         if N > 1:
             term = nd[:, 1:, I]
             v = term.min(axis=1)
@@ -190,7 +200,7 @@ def _sweep(Ccom, Bcom, Sseg, Bseg, src_cost, src_beta, K, ts, *,
                 best_m = np.where(upd, term.argmin(axis=1) + 1, best_m)
         if not np.isfinite(nd).any():
             break
-    return _SweepResult(best_val, best_k, best_m, parents)
+    return _SweepResult(best_val, best_k, best_m, parents, stack)
 
 
 def _slices_per_chunk(N: int, I1: int) -> int:
@@ -217,10 +227,28 @@ def _betas_from_arrays(Bcom, Bseg, src_beta, lo=-_INF, hi=_INF,
                        mask_c=None, mask_s=None) -> list:
     """Finite candidate bottleneck values max(Bcom, Bseg) within [lo, hi].
 
-    The distinct edge-beta set is materialized transiently (chunked over the
-    source-node axis so no O(N^2 I^2) tensor persists)."""
+    Unmasked case: ``max(a, b)`` is always one of its arguments, so the
+    distinct edge-beta *value set* is exactly
+
+        {Bcom[n,i,m]  : Bcom[n,i,m] >= min_j Bseg[i,m,j]}  |
+        {Bseg[i,m,j]  : Bseg[i,m,j] >= min_n Bcom[n,i,m]}
+
+    (each side dominating some compatible partner on the shared (i, m)
+    pairing) — computed in O(N I N + I N I) instead of materializing the
+    O(N^2 I^2) dense max (ISSUE 9: this scan dominated the warm-replan
+    wall-clock).  Masked (restricted) calls keep the dense chunked path."""
     vals = [src_beta[(src_beta >= lo) & (src_beta <= hi)
                      & np.isfinite(src_beta)]]
+    if mask_c is None and mask_s is None:
+        min_seg = Bseg.min(axis=2)                       # (I1, N) over (i, m)
+        min_com = Bcom.min(axis=0)                       # (I1, N) over (i, m)
+        a_ok = ((Bcom >= lo) & (Bcom <= hi) & np.isfinite(Bcom)
+                & (Bcom >= min_seg[None]))
+        b_ok = ((Bseg >= lo) & (Bseg <= hi) & np.isfinite(Bseg)
+                & (Bseg >= min_com[:, :, None]))
+        vals.append(Bcom[a_ok])
+        vals.append(Bseg[b_ok])
+        return vals
     N = Bcom.shape[0]
     chunk = max(1, int(2 ** 22 // max(1, Bseg.size)))
     for n0 in range(0, N, chunk):
@@ -312,12 +340,20 @@ class _LayeredDP:
         return mc, ms
 
     # -- sweeps --------------------------------------------------------------
-    def sweep(self, ts, *, mode="sum", want_parents=False) -> _SweepResult:
+    def sweep(self, ts, *, mode="sum", want_parents=False,
+              want_stack=False) -> _SweepResult:
         return _sweep(self._Ccom, self._Bcom, self._Sseg, self._Bseg,
                       self._src_cost, self._src_beta, self.K,
                       np.atleast_1d(np.asarray(ts, dtype=float)),
                       mode=mode, masks=self._masks if self.restricted else None,
-                      want_parents=want_parents, ws=self._ws)
+                      want_parents=want_parents, want_stack=want_stack,
+                      ws=self._ws)
+
+    def mirror(self):
+        """The bound graph tensors in backtrace layout (see
+        ``planner_jax.backtrace_stack``) — the DP's own float64 buffers."""
+        return (self._Ccom[0], self._Bcom[0], self._Sseg[0], self._Bseg[0],
+                self._src_cost[0], self._src_beta[0])
 
     def run(self, t: float):
         """Shortest path with all edge betas <= t. Returns (dist, path)."""
@@ -433,25 +469,39 @@ class _LayeredDP:
 # ---------------------------------------------------------------------------
 
 def _dist_at_jax(dp: _LayeredDP, ts: np.ndarray) -> np.ndarray:
-    """dist(t) per threshold via jax (jit + vmap).  Numerically equivalent to
-    the numpy kernel (bit-exact under JAX_ENABLE_X64; float32 otherwise — use
-    the numpy backend where the scan/batched equality contract matters)."""
+    """dist(t) per threshold via jax (jit + vmap over thresholds).
+
+    Dtype contract (ISSUE 9 satellite): jax *silently truncates* float64
+    inputs to float32 unless x64 is enabled, so the compute dtype is
+    **detected** (``planner_jax.sweep_dtype``), the inputs are cast to it
+    explicitly, and the tolerance vs the numpy kernel is the documented
+    ``planner_jax.parity_tolerance()``:
+
+      - x64 enabled  -> float64, bit-exact with the numpy kernel;
+      - x64 disabled -> float32, dist values within rtol 1e-4 (asserted by
+        the both-modes parity test in tests/test_planner_jax.py).  Use the
+        numpy backend where the scan == batched equality contract matters.
+    """
     import jax
     import jax.numpy as jnp
 
+    from . import planner_jax
+
     if dp.restricted:                 # masks are numpy-side; keep it simple
         return dp.sweep(ts).best_val
-    Ccom = jnp.asarray(dp._Ccom[0])
-    Bcom = jnp.asarray(dp._Bcom[0])
-    Sseg = jnp.asarray(dp._Sseg[0])
-    Bseg = jnp.asarray(dp._Bseg[0])
-    src_cost = jnp.asarray(dp._src_cost[0])
-    src_beta = jnp.asarray(dp._src_beta[0])
+    dt = np.dtype(planner_jax.sweep_dtype())
+    Ccom = jnp.asarray(dp._Ccom[0].astype(dt))
+    Bcom = jnp.asarray(dp._Bcom[0].astype(dt))
+    Sseg = jnp.asarray(dp._Sseg[0].astype(dt))
+    Bseg = jnp.asarray(dp._Bseg[0].astype(dt))
+    src_cost = jnp.asarray(dp._src_cost[0].astype(dt))
+    src_beta = jnp.asarray(dp._src_beta[0].astype(dt))
     K, I, N = dp.K, dp.I, dp.N
     inf = jnp.inf
+    obs.inc("planner.jax_dispatches")
 
     def one(t):
-        dist = jnp.full((N, I + 1), inf)
+        dist = jnp.full((N, I + 1), inf, dtype=Ccom.dtype)
         dist = dist.at[0, :].set(jnp.where(src_beta <= t, src_cost, inf))
         best = jnp.where(jnp.isfinite(dist[0, I]), dist[0, I], inf)
         for _ in range(2, K + 1):
@@ -463,7 +513,8 @@ def _dist_at_jax(dp: _LayeredDP, ts: np.ndarray) -> np.ndarray:
                 best = jnp.minimum(best, dist[1:, I].min())
         return best
 
-    return np.asarray(jax.jit(jax.vmap(one))(jnp.asarray(ts)))
+    out = jax.jit(jax.vmap(one))(jnp.asarray(ts.astype(dt)))
+    return np.asarray(out).astype(np.float64)
 
 
 # ---------------------------------------------------------------------------
@@ -488,6 +539,10 @@ class Planner:
         self._graphs: dict = {}
         self._dps: dict = {}
         self._solved: dict = {}
+        self._epoch = 0                 # bumped by update(); keys jax caches
+        self._jax_dps: dict = {}        # (K, dtype) -> planner_jax.JaxDP
+        self._mirrors: dict = {}        # (b, dtype) -> host-mirror tensors
+        self._hints: dict = {}          # (b, B, K) -> warm-start hint
 
     # -- caches -------------------------------------------------------------
     def graph(self, b: int) -> MSPGraph:
@@ -518,6 +573,133 @@ class Planner:
         if K is not None:
             return K
         return min(1 + self.net.num_servers, self.profile.num_layers)
+
+    def _jax_dp(self, K: int):
+        """Compiled jax backend for this factory (cached; see planner_jax)."""
+        from . import planner_jax
+        key = (K, planner_jax.sweep_dtype())
+        jdp = self._jax_dps.get(key)
+        if jdp is None:
+            jdp = planner_jax.JaxDP(self.factory, K)
+            self._jax_dps[key] = jdp
+        return jdp
+
+    def _jax_mirror(self, b: int, dtype: str):
+        """Host mirror of the assembled graph for ``b`` in the kernel dtype
+        (window candidates + backtraces for the jax backend; cached)."""
+        m = self._mirrors.get((b, dtype))
+        if m is None:
+            from . import planner_jax
+            m = planner_jax.host_mirror(self.factory, b, dtype)
+            self._mirrors[(b, dtype)] = m
+        return m
+
+    # -- incremental updates (ISSUE 9 tentpole) -----------------------------
+    def update(self, delta) -> "Planner":
+        """Apply a single-resource delta *in place* and invalidate exactly
+        what it touched — the warm-replan entry point.
+
+        ``delta`` is duck-typed against the ``ft.coordinator`` events:
+
+          - ``RateChange``-like (``n_from``/``n_to``/``factor``): the rate
+            mutation is replicated float-op-for-float-op, the factory's rate
+            views are swapped, and each cached graph's comm columns for the
+            (n_from, n_to) **pair** (both directions use the link) are
+            re-assembled via ``GraphFactory.comm_pair`` — bitwise equal to a
+            cold rebuild on the mutated network.
+          - ``Straggler``-like (``node``/``slowdown``): the node-speed
+            mutation, patching that node's seg row (``seg_node``) and, for
+            the client tier, the source vectors.
+          - ``NodeFailure``-like (``server``): renumbering — everything is
+            rebuilt on ``net.degraded([server])`` (shapes change).
+          - ``Resync``-like (``net``): full rebuild on the snapshot.
+
+        Warm-start hints survive a patch with their lower bounds scaled by
+        ``r_min`` — the largest factor by which any edge weight may have
+        *shrunk* (1/factor for a rate increase, the slowdown for a node
+        speed-up, 1 otherwise), so the scaled values still lower-bound the
+        new ``dist(inf)`` and ``beta*`` and the next ``solve`` runs one
+        windowed sweep instead of a cold Algorithm 1 (proof sketch on
+        ``_solve_warm``).  ``r_min`` compounds across successive updates:
+        bounds only loosen, never break.  Returns ``self``.
+        """
+        if hasattr(delta, "server"):                      # NodeFailure
+            obs.inc("planner.updates[rebuild]")
+            self._rebuild(self.net.degraded([delta.server]))
+            return self
+        if hasattr(delta, "factor"):                      # RateChange
+            obs.inc("planner.updates[rate]")
+            rate = self.net.rate.copy()
+            rate[delta.n_from, delta.n_to] *= delta.factor
+            self.net = dataclasses.replace(self.net, rate=rate)
+            self.factory.patch_rate(self.net)
+            u, v = int(delta.n_from), int(delta.n_to)
+            for b, g in list(self._graphs.items()):
+                eff = self.factory.effective_batch(b)
+                for (a, c) in {(u, v), (v, u)}:
+                    cost, beta = self.factory.comm_pair(eff, a, c)
+                    g.comm_cost[:, a, c] = cost
+                    g.comm_beta[:, a, c] = beta
+                # a NEW graph object (sharing the patched arrays) so cached
+                # DPs see ``dp.g is not g`` and rebind their buffers
+                self._graphs[b] = dataclasses.replace(g, net=self.net)
+            r_min = min(1.0, 1.0 / delta.factor) if delta.factor > 0 else 0.0
+            self._after_patch(r_min)
+            return self
+        if hasattr(delta, "slowdown"):                    # Straggler
+            obs.inc("planner.updates[speed]")
+            w = int(delta.node)
+            self.net = dataclasses.replace(
+                self.net,
+                nodes=[dataclasses.replace(n, f=n.f / delta.slowdown)
+                       if i == w else n
+                       for i, n in enumerate(self.net.nodes)])
+            self.factory.patch_node_speed(self.net)
+            for b, g in list(self._graphs.items()):
+                eff = self.factory.effective_batch(b)
+                sc, sb = self.factory.seg_node(eff, w)
+                g.seg_cost[w] = sc
+                g.seg_beta[w] = sb
+                kw = {"net": self.net}
+                if w == 0:
+                    kw["src_cost"] = sc[0].copy()
+                    kw["src_beta"] = sb[0].copy()
+                self._graphs[b] = dataclasses.replace(g, **kw)
+            r_min = min(1.0, float(delta.slowdown))
+            self._after_patch(r_min)
+            return self
+        if getattr(delta, "net", None) is not None:       # Resync snapshot
+            obs.inc("planner.updates[rebuild]")
+            self._rebuild(delta.net)
+            return self
+        raise TypeError(f"unsupported planner delta: {delta!r}")
+
+    def _after_patch(self, r_min: float) -> None:
+        """Invalidate what an in-place patch touched: solve memos, host
+        mirrors, and the jax backends' device copies of rate/f (kernels are
+        kept — the mutable tensors ride as arguments).  Hints survive with
+        their lower bounds scaled by ``r_min``."""
+        self._epoch += 1
+        self._solved.clear()
+        self._mirrors.clear()
+        for jdp in self._jax_dps.values():
+            jdp.refresh()
+        for h in self._hints.values():
+            h["lb_dist"] *= r_min
+            h["lb_beta"] *= r_min
+
+    def _rebuild(self, net: EdgeNetwork) -> None:
+        """Full invalidation (renumbering / snapshot): new factory, drop
+        every cache; hints die with the old node indices."""
+        self._epoch += 1
+        self.net = net
+        self.factory = GraphFactory(self.profile, net, self.memory_model)
+        self._graphs.clear()
+        self._dps.clear()
+        self._solved.clear()
+        self._mirrors.clear()
+        self._jax_dps.clear()
+        self._hints.clear()
 
     # -- result assembly ----------------------------------------------------
     def _finish(self, g: MSPGraph, dist, path, b, B, xi, sweeps, solver):
@@ -564,7 +746,18 @@ class Planner:
             if solver == "scan":
                 res = self._solve_scan(dp, g, b, B, xi)
             elif solver == "batched":
-                res = self._solve_batched(dp, g, b, B, xi, backend)
+                res = None
+                hint = (self._hints.get((b, B, K))
+                        if rc is None and rp is None and backend == "numpy"
+                        else None)
+                if hint is not None and xi > 0:
+                    res = self._solve_warm(dp, g, b, B, xi, hint)
+                if res is not None:
+                    obs.inc("planner.incremental_hits")
+                else:
+                    if rc is None and rp is None:
+                        obs.inc("planner.cold_solves")
+                    res = self._solve_batched(dp, g, b, B, xi, backend)
             else:
                 raise ValueError(
                     f"unknown solver {solver!r} (want 'scan'|'batched')")
@@ -642,7 +835,7 @@ class Planner:
         window = dp.betas_window(beta_star, cap * (1 + 1e-12) + 1e-12)
         if window.size == 0:                   # numerical corner: fall back
             window = np.array([beta_star])
-        dvals = dp.dist_at(window, backend=backend)
+        dvals = self._dist_window(dp, window, backend)
         sweeps += 1
         j = int(np.argmin(dvals + xi * window))   # first minimum: smallest t
         t_hat = float(window[j])
@@ -651,11 +844,98 @@ class Planner:
         else:
             d_hat, p_hat = dp.run(t_hat)
             sweeps += 1
+        if not dp.restricted and p_hat is not None:
+            self._hints[(b, B, dp.K)] = {"lb_dist": dist_full,
+                                         "lb_beta": beta_star,
+                                         "path": list(p_hat)}
         return self._finish(g, d_hat, p_hat, b, B, xi, sweeps, "batched")
 
+    def _dist_window(self, dp: _LayeredDP, window, backend: str) -> np.ndarray:
+        """The phase-3 window sweep, dispatched per backend:
+
+          - ``"numpy"``  the reference chunked ``_sweep`` (bit-exact contract)
+          - ``"jax"``    the batched on-the-fly-assembly kernel
+                         (``planner_jax.dist_at_jax``; float32 unless x64)
+          - ``"pallas"`` the ``kernels.minplus`` Pallas kernel (interpreter
+                         mode off-TPU)
+
+        Both accelerated paths degrade to numpy when unavailable or when the
+        DP carries restriction masks (numpy-side only)."""
+        if backend == "pallas":
+            from repro.kernels.minplus import pallas_available, sweep_minplus
+            if not dp.restricted and pallas_available():
+                obs.inc("planner.pallas_dispatches")
+                return sweep_minplus(dp._Ccom[0], dp._Bcom[0], dp._Sseg[0],
+                                     dp._Bseg[0], dp._src_cost[0],
+                                     dp._src_beta[0], dp.K, window)
+            return dp.dist_at(window)
+        if backend == "jax":
+            from . import planner_jax
+            if not dp.restricted and planner_jax.available():
+                return planner_jax.dist_at_jax(dp, window, planner=self)
+            return dp.dist_at(window)
+        return dp.dist_at(window, backend=backend)
+
+    def _solve_warm(self, dp: _LayeredDP, g: MSPGraph, b, B, xi,
+                    hint: dict):
+        """Warm-started Algorithm 1 from a surviving hint — bit-identical to
+        the cold batched solve, in a fraction of its sweeps.
+
+        The hint carries a known-valid path (the previous optimum, repriced
+        here on the patched graph -> upper bound UB) and scaled lower bounds
+        ``lb_dist <= dist(inf)`` and ``lb_beta <= beta*``.  Every global
+        minimizer t of dist(t) + xi*t then lies in
+        ``[lb_beta, (UB - lb_dist) / xi]``: t >= beta* >= lb_beta, and
+        xi*t = OPT - dist(t) <= UB - dist(inf) <= UB - lb_dist.  The cold
+        solver's window is pruned by the *same* argument with its own valid
+        bounds, so both windows contain every global minimizer; the
+        first-minimum argmin therefore lands on the same smallest minimizing
+        threshold, and the reconstruction at that threshold runs the same
+        kernel — same path, same floats (``tests/test_planner_update.py``
+        asserts the end-to-end equality).  One windowed sweep + one
+        single-threshold stack sweep replace the cold solve's 4-5 sweeps.
+
+        Returns None (caller falls back to a cold solve) when the hinted
+        path went infeasible or a numerical corner empties the window."""
+        from . import planner_jax
+
+        cost, beta_p = planner_jax.reprice_dp_order(g, hint["path"])
+        if not (math.isfinite(cost) and math.isfinite(beta_p)):
+            return None
+        ub = cost + xi * beta_p
+        cap = (ub - hint["lb_dist"]) / xi
+        window = dp.betas_window(hint["lb_beta"], cap * (1 + 1e-12) + 1e-12)
+        if window.size == 0:
+            return None
+        # small windows (the common case: a local delta barely moves the
+        # optimum) fuse the window sweep and the reconstruction sweep into
+        # one want_stack dispatch; big windows keep the stack memory bounded
+        # by sweeping values first and re-running only the argmin threshold
+        fused = window.size <= 32
+        if fused:
+            out = dp.sweep(window, want_stack=True)
+            dvals = out.best_val
+        else:
+            dvals = dp.dist_at(window)
+        j = int(np.argmin(dvals + xi * window))   # first minimum: smallest t
+        t_hat = float(window[j])
+        if not math.isfinite(dvals[j]):
+            return None
+        if not fused:
+            out = dp.sweep([t_hat], want_stack=True)
+            j = 0
+        if out.best_k[j] == 0:
+            return None
+        path = planner_jax.backtrace_stack(
+            [layer[j] for layer in out.stack], dp.mirror(), t_hat,
+            int(out.best_k[j]), int(out.best_m[j]), dp.I)
+        self._hints[(b, B, dp.K)]["path"] = list(path)
+        return self._finish(g, float(out.best_val[j]), path, b, B, xi,
+                            1 if fused else 2, "batched")
+
     # -- batched micro-batch sweep (exhaustive_joint's inner loop) ----------
-    def solve_many(self, bs: Sequence[int], B: int,
-                   K: int | None = None) -> list:
+    def solve_many(self, bs: Sequence[int], B: int, K: int | None = None,
+                   backend: str = "numpy") -> list:
         """Algorithm 1 for every micro-batch size in ``bs`` at once.
 
         The b-axis rides the same kernel slice axis as the thresholds: the
@@ -663,10 +943,23 @@ class Planner:
         stacked threshold windows and the reconstructions each execute as
         ONE multi-slice sweep across all b.  Results are bit-identical to
         ``[self.solve(b, B, K, solver="batched") for b in bs]`` (asserted in
-        tests/test_msp.py)."""
+        tests/test_msp.py).
+
+        ``backend="jax"`` dispatches the whole pipeline — graph assembly
+        included — to the compiled batched kernel of
+        :mod:`repro.core.planner_jax` (phases A-D as a handful of XLA
+        dispatches; bit-exact under x64, documented float32 tolerance
+        otherwise); it degrades to numpy when jax is unavailable."""
         bs = list(bs)
-        with obs.span("planner.solve_many", n=len(bs), B=B):
-            results = self._solve_many(bs, B, K)
+        with obs.span("planner.solve_many", n=len(bs), B=B, backend=backend):
+            if backend == "jax":
+                from . import planner_jax
+                if planner_jax.available():
+                    results = planner_jax.solve_many_jax(self, bs, B, K)
+                else:
+                    results = self._solve_many(bs, B, K)
+            else:
+                results = self._solve_many(bs, B, K)
         obs.inc("planner.dp_sweeps",
                 sum(r.thresholds_scanned for r in results))
         return results

@@ -31,6 +31,7 @@ from repro.core import (EdgeNetwork, ModelProfile, Plan, bcd_solve,
                         optimal_microbatch, total_latency, pipeline_interval,
                         fill_latency, num_fills)
 from repro.core.cost_model import resolve_cost_model
+from repro.core.shortest_path import Planner
 from repro import obs
 
 
@@ -65,6 +66,19 @@ class Resync:
 
 
 logger = logging.getLogger("repro.ft.coordinator")
+
+
+def _event_key(event):
+    """Hashable identity of an event for the preview-planner memo."""
+    if isinstance(event, NodeFailure):
+        return ("NF", event.server)
+    if isinstance(event, RateChange):
+        return ("RC", event.n_from, event.n_to, event.factor)
+    if isinstance(event, Straggler):
+        return ("ST", event.node, event.slowdown)
+    if isinstance(event, Resync):
+        return ("RS", id(event.net))
+    return ("??", id(event))
 
 
 @dataclasses.dataclass
@@ -139,8 +153,15 @@ class Coordinator:
         self.cost_model = resolve_cost_model(cost_model)
         self.restore_cost = restore_cost
         self.policy = resolve_replan_policy(policy)
+        # ONE Planner serves every replan of this coordinator's lifetime:
+        # events route through Planner.update (in-place graph patches + warm
+        # hints) so an adopted replan after a single-link event costs a
+        # patched re-sweep, not a cold Algorithm-1 solve (ISSUE 9)
+        self.planner = Planner(profile, net)
+        self._preview_planners: dict = {}   # net-identity -> Planner memo
         self.plan = bcd_solve(profile, net, B, theta=theta,
-                              cost_model=self.cost_model)
+                              cost_model=self.cost_model,
+                              planner=self.planner)
         self.events: list = []
 
     # -- event delivery (policy seam) -----------------------------------------
@@ -193,21 +214,15 @@ class Coordinator:
             old_sol, old_b = self.plan.solution, self.plan.b
             net_changed = True
             if isinstance(event, NodeFailure):
-                self.net = self.net.degraded([event.server])
+                self._mutate(event)
                 old_sol = self._remap_across_failure(old_sol, event.server)
                 outcome = self._full_replan(event, old_L)
                 outcome.restore_seconds = self._restore_seconds()
             elif isinstance(event, RateChange):
-                rate = self.net.rate.copy()
-                rate[event.n_from, event.n_to] *= event.factor
-                self.net = dataclasses.replace(self.net, rate=rate)
+                self._mutate(event)
                 outcome = self._full_replan(event, old_L)
             elif isinstance(event, Straggler):
-                self.net = dataclasses.replace(
-                    self.net,
-                    nodes=[dataclasses.replace(n, f=n.f / event.slowdown)
-                           if i == event.node else n
-                           for i, n in enumerate(self.net.nodes)])
+                self._mutate(event)
                 outcome = self._straggler_mitigation(event, old_L)
             elif isinstance(event, Resync):
                 # solve against the measured snapshot; base net stays (the
@@ -232,6 +247,35 @@ class Coordinator:
             "-" if sim_time is None else f"{sim_time:.6g}")
         self.events.append(outcome)
         return outcome
+
+    def _mutate(self, event) -> None:
+        """Commit an event's network mutation through the shared planner.
+
+        ``Planner.update`` replicates the historical in-place mutations
+        float-op-for-float-op (asserted in tests/test_planner_update.py), so
+        ``self.net`` stays bit-identical to the pre-ISSUE-9 behavior while
+        the planner's cached graphs are patched instead of rebuilt."""
+        self.planner.update(event)
+        self.net = self.planner.net
+        self._preview_planners.clear()      # previews were for the old net
+
+    def _planner_for(self, net: EdgeNetwork) -> Planner:
+        """The memoized Planner for ``net``: the live planner when ``net``
+        IS the coordinator's network, else one planner per network identity
+        (Resync snapshots, policy previews) so replays stop re-paying graph
+        builds (ISSUE 9 satellite)."""
+        if net is self.planner.net or net is self.net:
+            return self.planner
+        for pl in self._preview_planners.values():    # bounded dict: scan ok
+            if pl.net is net:
+                obs.inc("ft.preview_planner_hit")
+                return pl
+        obs.inc("ft.preview_planner_miss")
+        pl = Planner(self.profile, net)
+        self._preview_planners[id(net)] = pl
+        while len(self._preview_planners) > 8:    # bounded: drop the oldest
+            self._preview_planners.pop(next(iter(self._preview_planners)))
+        return pl
 
     # -- event absorption (ride-out path) --------------------------------------
     def absorb(self, event, *, sim_time: float | None = None) -> ReplanOutcome:
@@ -272,8 +316,11 @@ class Coordinator:
             if not math.isfinite(ride_L):
                 return self._escalate(
                     event, sim_time, "incumbent infeasible on mutated network")
-            self.net = new_net
             if net_changed:
+                # commit through the shared planner (same float ops as the
+                # hand-built new_net above — values stay bit-identical)
+                self._mutate(event)
+                new_net = self.net
                 self.plan = dataclasses.replace(
                     self.plan, solution=sol, b=b,
                     T_f=fill_latency(self.profile, new_net, sol, b),
@@ -341,6 +388,24 @@ class Coordinator:
             return event.net, sol
         raise TypeError(event)
 
+    def preview_cached(self, sol, event):
+        """``(mutated_net, remapped_solution, planner)`` for the event —
+        :meth:`preview` plus a memoized :class:`Planner` per (base network,
+        event) identity, so policy replays (CVaRPreSpill tail scoring,
+        repeated decide calls on the same flap) stop re-paying graph builds.
+        Coordinator state is untouched."""
+        key = (id(self.net), _event_key(event))
+        got = self._preview_planners.get(key)
+        if got is not None:
+            obs.inc("ft.preview_planner_hit")
+            psol = (self._remap_across_failure(sol, event.server)
+                    if isinstance(event, NodeFailure) else sol)
+            return got.net, psol, got
+        net, psol = Coordinator.preview(self.net, sol, event)
+        pl = self._planner_for(net)
+        self._preview_planners[key] = pl
+        return net, psol, pl
+
     def _current_latency(self) -> float:
         try:
             return self.cost_model.evaluate(self.profile, self.net,
@@ -404,7 +469,8 @@ class Coordinator:
         obs.inc("ft.full_solves")
         self.plan = bcd_solve(self.profile, net, self.B,
                               b0=max(self.plan.b, 1), theta=self.theta,
-                              cost_model=self.cost_model)
+                              cost_model=self.cost_model,
+                              planner=self._planner_for(net))
         return ReplanOutcome(
             event=event, old_latency=old_L, new_plan=self.plan,
             action="replan",

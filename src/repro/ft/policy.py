@@ -441,7 +441,9 @@ class CVaRPreSpill(ReplanPolicy):
         if isinstance(event, NodeFailure):
             return PolicyDecision.do_replan("pre-spill: node failure",
                                             cost_model=self.robust)
-        net, sol = Coordinator.preview(coord.net, coord.plan.solution, event)
+        # memoized preview: repeated decides on the same flap reuse one
+        # Planner per previewed network identity (ISSUE 9 satellite)
+        net, sol, _pl = coord.preview_cached(coord.plan.solution, event)
         if sol is None:
             return PolicyDecision.do_replan("pre-spill: incumbent displaced",
                                             cost_model=self.robust)

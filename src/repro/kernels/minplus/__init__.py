@@ -1,0 +1,15 @@
+"""Pallas min-plus / min-max scan kernel for the Algorithm-1 layered DP.
+
+``sweep_minplus`` runs the full K-layer masked relaxation for a batch of
+thresholds in one ``pl.pallas_call`` (grid over threshold tiles), mirroring
+the numpy reference in :mod:`repro.core.shortest_path` (``_sweep``).  On
+hosts without a TPU the kernel runs in interpreter mode — correct but slow,
+kept for CI parity; the XLA-fused jit backend in
+:mod:`repro.core.planner_jax` is the fast CPU path.
+"""
+
+from .kernel import sweep_minplus, pallas_available, default_interpret
+from .ref import sweep_ref
+
+__all__ = ["sweep_minplus", "sweep_ref", "pallas_available",
+           "default_interpret"]

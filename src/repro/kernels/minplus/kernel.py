@@ -1,0 +1,140 @@
+"""Pallas implementation of the masked min-plus / min-max DP sweep.
+
+Follows the ``kernels/flash`` idiom: a 1-D grid over threshold tiles, the
+graph tensors passed as whole blocks shared by every grid step (their
+``index_map`` pins block 0), per-tile threshold/output blocks, and the
+two-stage relaxation written with ``lax.fori_loop`` over the cut index so
+no O(N^2 I^2) candidate tensor is materialized in VMEM.
+
+On CPU hosts the kernel runs with ``interpret=True`` (set automatically by
+:func:`default_interpret`) — numerically identical, slow; it exists so the
+TPU path is exercised by the same parity tests everywhere.  Block shapes
+here are not forced to the (8, 128) f32 tile grid, which the Mosaic
+compiler tolerates for these small operand sizes; revisit if lowering to a
+real TPU complains.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+_INF = np.inf
+
+
+def pallas_available() -> bool:
+    try:
+        from jax.experimental import pallas as pl  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+def default_interpret() -> bool:
+    """Interpreter mode unless running on a real TPU backend."""
+    import jax
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:
+        return True
+
+
+def _sweep_kernel(ts_ref, Cc_ref, Bc_ref, Ss_ref, Bs_ref, sc_ref, sb_ref,
+                  out_ref, *, K: int, N: int, I1: int, mode: str):
+    import jax.numpy as jnp
+    from jax import lax
+
+    dt = Cc_ref.dtype
+    INF = jnp.asarray(np.asarray(_INF, dtype=dt))
+    is_sum = mode == "sum"
+    I = I1 - 1
+
+    ts = ts_ref[...]                                   # (St,)
+    t3 = ts[None, None, :]
+    Cc = Cc_ref[...]                                   # (n, i, m)
+    Bc = Bc_ref[...]
+    Ss = Ss_ref[...]                                   # (i, m, j)
+    Bs = Bs_ref[...]
+    sc = sc_ref[...]                                   # (i,)
+    sb = sb_ref[...]
+    St = ts.shape[0]
+
+    Vc = Cc if is_sum else Bc
+    Vs = Ss if is_sum else Bs
+    src = sc if is_sum else sb
+
+    dist0 = jnp.where(sb[:, None] <= ts[None, :], src[:, None], INF)
+    dist = jnp.full((N, I1, St), INF, dt).at[0].set(dist0)
+    best = jnp.where(jnp.isfinite(dist[0, I]), dist[0, I], INF)
+
+    def layer(dist):
+        def per_i(i, nd):
+            vc = jnp.where(Bc[:, i, :][:, :, None] <= t3,
+                           Vc[:, i, :][:, :, None], INF)       # (n, m, St)
+            dcol = dist[:, i, :][:, None, :]
+            cand = dcol + vc if is_sum else jnp.maximum(dcol, vc)
+            Ai = cand.min(axis=0)                              # (m, St)
+            vs = jnp.where(Bs[i][:, :, None] <= t3,
+                           Vs[i][:, :, None], INF)             # (m, j, St)
+            cand2 = Ai[:, None, :] + vs if is_sum \
+                else jnp.maximum(Ai[:, None, :], vs)
+            return jnp.minimum(nd, cand2)
+        return lax.fori_loop(0, I1, per_i, jnp.full((N, I1, St), INF, dt))
+
+    def body(_k, carry):
+        dist, best = carry
+        nd = layer(dist)
+        return nd, jnp.minimum(best, nd[1:, I].min(axis=0))
+
+    dist, best = lax.fori_loop(2, K + 1, body, (dist, best))
+    out_ref[...] = best
+
+
+def sweep_minplus(Ccom, Bcom, Sseg, Bseg, src_cost, src_beta, K, ts, *,
+                  mode: str = "sum", interpret: bool | None = None,
+                  block_s: int = 128) -> np.ndarray:
+    """Best terminal DP value per threshold, via one ``pallas_call``.
+
+    Layouts match ``_LayeredDP`` buffers: ``Ccom/Bcom[n, i, m]``,
+    ``Sseg/Bseg[i, m, j]``, structural masks pre-folded.  Returns a float
+    array the shape of ``ts``.  Parity oracle: :func:`repro.kernels.minplus.
+    ref.sweep_ref` (and transitively the numpy ``_sweep``)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    if interpret is None:
+        interpret = default_interpret()
+    ts = np.atleast_1d(np.asarray(ts))
+    S = ts.shape[0]
+    N, I1 = Ccom.shape[0], Ccom.shape[1]
+    # compute in the dtype jax will honor: f64 only under JAX_ENABLE_X64
+    dt = np.dtype("float64" if jax.config.jax_enable_x64 else "float32")
+    Sp = ((S + block_s - 1) // block_s) * block_s
+    ts_p = np.full(Sp, -_INF, dtype=dt)
+    ts_p[:S] = ts.astype(dt)
+
+    grid = (Sp // block_s,)
+    shared = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    fn = pl.pallas_call(
+        functools.partial(_sweep_kernel, K=int(K), N=N, I1=I1, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+            shared(N, I1, N), shared(N, I1, N),
+            shared(I1, N, I1), shared(I1, N, I1),
+            shared(I1), shared(I1),
+        ],
+        out_specs=pl.BlockSpec((block_s,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Sp,), dt),
+        interpret=interpret,
+    )
+    out = fn(jnp.asarray(ts_p),
+             jnp.asarray(np.asarray(Ccom, dtype=dt)),
+             jnp.asarray(np.asarray(Bcom, dtype=dt)),
+             jnp.asarray(np.asarray(Sseg, dtype=dt)),
+             jnp.asarray(np.asarray(Bseg, dtype=dt)),
+             jnp.asarray(np.asarray(src_cost, dtype=dt)),
+             jnp.asarray(np.asarray(src_beta, dtype=dt)))
+    return np.asarray(out)[:S].astype(np.float64)

@@ -12,6 +12,10 @@ def pytest_configure(config):
         "markers",
         "slow: long-running checks (wall-clock measurements); deselect "
         "with -m 'not slow'")
+    config.addinivalue_line(
+        "markers",
+        "pallas: kernel parity tests; skip (not fail) where the Pallas "
+        "lowering toolchain is unavailable")
 
 
 @pytest.fixture

@@ -52,3 +52,21 @@ def test_bench_planner_json_tracks_acceptance():
     assert (acc["servers"], acc["layers"], acc["B"]) == (24, 30, 64)
     assert acc["identical_plans"] is True
     assert acc["speedup"] >= 10.0
+
+
+def test_bench_planner_json_tracks_fleet_bars():
+    """ISSUE 9 acceptance: the recorded fleet section shows batched-jax
+    ``solve_many`` >= 3x numpy on the full 64-size sweep and incremental
+    ``Planner.update`` replans >= 5x a cold re-solve, plan-identical."""
+    assert os.path.isfile(JSON_PATH), "run `make bench-planner` to record"
+    with open(JSON_PATH) as f:
+        data = json.load(f)
+    fleet = data["fleet"]
+    sm = fleet["solve_many"]
+    assert (sm["servers"], sm["layers"], sm["B"]) == (24, 30, 64)
+    if sm["jax_speedup"] is not None:   # jax was available at record time
+        assert sm["num_bs"] == 64
+        assert sm["jax_speedup"] >= 3.0
+    inc = fleet["incremental"]
+    assert inc["identical_plans"] is True
+    assert inc["speedup"] >= 5.0

@@ -162,6 +162,45 @@ def test_solve_many_matches_per_b_solve(seed):
         assert _same_result(many, solo), (b, many, solo)
 
 
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 60), b=st.sampled_from([4, 8, 16]))
+def test_numpy_vs_jax_randomized_cross_check(seed, b):
+    """Standing randomized parity gate: the jitted JAX planner pipeline
+    (on-the-fly graph assembly + scanned min-plus sweeps) against the
+    numpy batched solver.  Bit-exact under x64; objective within
+    ``parity_tolerance()`` and identical feasibility/solution under the
+    default float32 config (see planner_jax module docstring)."""
+    pytest.importorskip("jax")
+    from repro.core import planner_jax
+    if not planner_jax.available():
+        pytest.skip("jax backend unavailable")
+    prof, net = small_instance(seed, num_layers=5, num_servers=3)
+    pl = Planner(prof, net)
+    B = 32
+    r_np = pl.solve(b, B, solver="batched")
+    r_jx = Planner(prof, net).solve(b, B, solver="batched", backend="jax")
+    rtol = planner_jax.parity_tolerance()
+    if rtol == 0.0:
+        assert _same_result(r_np, r_jx), (r_np, r_jx)
+    else:
+        assert r_np.feasible == r_jx.feasible
+        if r_np.feasible:
+            assert r_jx.objective == pytest.approx(r_np.objective, rel=rtol)
+            assert r_jx.b == r_np.b
+    # full batched dispatch (solve_many) through the same gate
+    bs = [max(1, b - 2), b]
+    many_np = pl.solve_many(bs, B)
+    many_jx = Planner(prof, net).solve_many(bs, B, backend="jax")
+    for m_np, m_jx in zip(many_np, many_jx):
+        assert m_np.feasible == m_jx.feasible
+        if m_np.feasible:
+            if rtol == 0.0:
+                assert _same_result(m_np, m_jx), (m_np, m_jx)
+            else:
+                assert m_jx.objective == pytest.approx(m_np.objective,
+                                                       rel=rtol)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 50))
 def test_more_servers_never_hurt(seed):

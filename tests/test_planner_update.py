@@ -1,0 +1,203 @@
+"""Incremental warm-started replanning (ISSUE 9 tentpole).
+
+``Planner.update(delta)`` patches the cached graph tensors in place and
+scales the warm-start hints; these tests pin the two contracts that make
+that safe:
+
+  1. **Bitwise patch equality** — after an update, every cached graph
+     array is ``np.array_equal`` to a from-scratch ``GraphFactory``
+     assembly on the mutated network (the patch replays the exact float
+     op chains of the full build).
+  2. **Warm == cold** — the warm-started solve after an update is
+     ``same_msp_result``-identical to a cold solve on a fresh Planner
+     (the hint window provably contains every global minimizer; see the
+     ``_solve_warm`` docstring for the proof sketch).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import GraphFactory, Planner
+from repro.ft import Coordinator, NodeFailure, RateChange, Straggler
+from conftest import same_msp_result as _same_result, small_instance
+
+B = 64
+SEEDS = [0, 1, 2, 3, 7, 11]
+
+
+def _warm_planner(prof, net, bs=(4, 12)):
+    """A planner with populated graph/DP caches and warm hints."""
+    pl = Planner(prof, net)
+    for b in bs:
+        pl.solve(b, B, solver="batched")
+    return pl
+
+
+def _deltas(net):
+    n = len(net.nodes)
+    return [RateChange(n_from=1, n_to=2, factor=0.25),
+            RateChange(n_from=0, n_to=1, factor=4.0),
+            Straggler(node=n - 1, slowdown=3.0),
+            Straggler(node=0, slowdown=2.0)]      # client node: src row
+
+
+# -- contract 1: bitwise patched graphs == fresh assembly ------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_patched_graphs_bitwise_equal_fresh_assembly(seed):
+    prof, net = small_instance(seed, num_layers=6, num_servers=3)
+    for delta in _deltas(net):
+        pl = _warm_planner(prof, net)
+        pl.update(delta)
+        fresh = GraphFactory(prof, pl.net)
+        for b, g in pl._graphs.items():
+            want = fresh.graph(b)
+            for f in ("comm_cost", "comm_beta", "seg_cost", "seg_beta",
+                      "src_cost", "src_beta"):
+                assert np.array_equal(getattr(g, f), getattr(want, f)), \
+                    (delta, b, f)
+
+
+# -- contract 2: warm update == cold solve ---------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_update_matches_cold_solve(seed):
+    prof, net = small_instance(seed, num_layers=6, num_servers=3)
+    for delta in _deltas(net) + [NodeFailure(server=1)]:
+        pl = _warm_planner(prof, net)
+        pl.update(delta)
+        for b in (4, 12):
+            warm = pl.solve(b, B, solver="batched")
+            cold = Planner(prof, pl.net).solve(b, B, solver="batched")
+            assert _same_result(warm, cold), (delta, b, warm, cold)
+
+
+@pytest.mark.parametrize("seed", [0, 4, 9])
+def test_update_sequence_matches_cold_solve(seed):
+    """Compounded deltas: each update scales the surviving hints' lower
+    bounds by that delta's r_min, so the warm window stays valid across
+    an arbitrary update sequence."""
+    prof, net = small_instance(seed, num_layers=6, num_servers=3)
+    pl = _warm_planner(prof, net)
+    for delta in _deltas(net):
+        pl.update(delta)
+        warm = pl.solve(4, B, solver="batched")
+        cold = Planner(prof, pl.net).solve(4, B, solver="batched")
+        assert _same_result(warm, cold), (delta, warm, cold)
+
+
+def test_node_failure_renumbers_and_matches_cold():
+    """NodeFailure is a rebuild: server removal renumbers every node
+    after it, so patching is unsound — update() must swap in a degraded
+    network and still agree with a cold solve on it."""
+    prof, net = small_instance(3, num_layers=6, num_servers=4)
+    pl = _warm_planner(prof, net)
+    n_before = len(pl.net.nodes)
+    pl.update(NodeFailure(server=2))
+    assert len(pl.net.nodes) == n_before - 1
+    r = pl.solve(4, B, solver="batched")
+    cold = Planner(prof, pl.net).solve(4, B, solver="batched")
+    assert _same_result(r, cold)
+    if r.feasible:
+        assert all(p < len(pl.net.nodes) for p in r.solution.placement)
+
+
+def test_update_rejects_nothing_quietly():
+    """An unknown delta type raises instead of silently no-oping."""
+    prof, net = small_instance(0)
+    pl = Planner(prof, net)
+    with pytest.raises(TypeError):
+        pl.update(object())
+
+
+# -- counters ---------------------------------------------------------------
+
+
+def test_incremental_hit_and_cold_counters():
+    prof, net = small_instance(1, num_layers=6, num_servers=3)
+    pl = _warm_planner(prof, net, bs=(4,))
+    obs.reset()
+    with obs.enabled_scope():
+        pl.update(RateChange(n_from=1, n_to=2, factor=0.5))
+        pl.solve(4, B, solver="batched")         # warm: hint survives
+        pl.solve(12, B, solver="batched")        # cold: no hint for b=12
+    assert obs.counter("planner.incremental_hits") == 1
+    assert obs.counter("planner.cold_solves") == 1
+    assert obs.counter("planner.updates[rate]") == 1
+    obs.reset()
+
+
+def test_warm_solve_scans_fewer_thresholds():
+    prof, net = small_instance(2, num_layers=6, num_servers=3)
+    pl = _warm_planner(prof, net, bs=(8,))
+    cold = pl.solve(8, B, solver="batched")      # memoized pre-update
+    pl.update(Straggler(node=1, slowdown=1.5))
+    warm = pl.solve(8, B, solver="batched")
+    if warm.feasible and cold.feasible:
+        assert warm.thresholds_scanned <= cold.thresholds_scanned
+
+
+# -- coordinator integration ----------------------------------------------
+
+
+def _coord(seed=5):
+    prof, net = small_instance(seed, num_layers=6, num_servers=4)
+    return Coordinator(prof, net, B=128), prof
+
+
+@pytest.mark.parametrize("event", [
+    RateChange(n_from=1, n_to=2, factor=0.2),
+    Straggler(node=1, slowdown=2.0),
+    NodeFailure(server=1),
+])
+def test_coordinator_apply_routes_through_planner_update(event):
+    """apply() now mutates the network through the shared planner;
+    the resulting plan must match a coordinator built from scratch on
+    the mutated network (same BCD search, warm caches)."""
+    c, prof = _coord()
+    c.apply(event)
+    assert c.net is c.planner.net
+    fresh = Coordinator(prof, c.net, B=128)
+    assert c.plan.feasible == fresh.plan.feasible
+    if c.plan.feasible:
+        assert c.plan.L_t == pytest.approx(fresh.plan.L_t, rel=1e-9)
+
+
+def test_coordinator_absorb_keeps_planner_in_sync():
+    c, prof = _coord(6)
+    node = c.plan.solution.placement[-1]
+    c.absorb(Straggler(node=node, slowdown=1.2))
+    assert c.net is c.planner.net
+    # a later replan reuses the patched planner and stays consistent
+    c.apply(RateChange(n_from=1, n_to=2, factor=0.5))
+    assert c.net is c.planner.net
+    assert c.plan.feasible
+
+
+def test_preview_cached_memoizes_per_event():
+    c, _ = _coord(7)
+    ev = RateChange(n_from=1, n_to=2, factor=0.5)
+    obs.reset()
+    with obs.enabled_scope():
+        net1, sol1, pl1 = c.preview_cached(c.plan.solution, ev)
+        net2, sol2, pl2 = c.preview_cached(c.plan.solution, ev)
+    assert net1 is net2 and pl1 is pl2
+    assert obs.counter("ft.preview_planner_hit") >= 1
+    assert sol1 == sol2 == c.plan.solution
+    # coordinator state untouched by previews
+    assert c.net is c.planner.net and c.planner is not pl1
+    obs.reset()
+
+
+def test_preview_cache_invalidated_by_mutation():
+    c, _ = _coord(8)
+    ev = Straggler(node=1, slowdown=2.0)
+    _, _, pl1 = c.preview_cached(c.plan.solution, ev)
+    c.apply(RateChange(n_from=1, n_to=2, factor=0.5))   # mutates c.net
+    _, _, pl2 = c.preview_cached(c.plan.solution, ev)
+    assert pl1 is not pl2            # old preview was for the old net
