@@ -9,7 +9,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify verify-ci verify-docs test dev-deps sim-check fuzz bench \
         bench-planner bench-costmodel bench-sim bench-robustness bench-ft \
-        bench-fig6b bench-sweep bench-obs example-sim
+        bench-adaptive bench-fig6b bench-sweep bench-obs example-sim
 
 verify:
 	$(PYTHON) -m pytest -x -q
@@ -25,7 +25,7 @@ DOCTEST_MODULES := \
   src/repro/sim/advance.py src/repro/sim/fuzz.py src/repro/sim/robustness.py \
   src/repro/core/bcd.py src/repro/core/cost_model.py \
   src/repro/core/microbatch.py \
-  src/repro/ft/policy.py \
+  src/repro/ft/policy.py src/repro/ft/adaptive.py \
   src/repro/pipeline/schedule.py
 
 # docs job: doctests over the documented APIs + the docs/*.md anchor/link
@@ -74,8 +74,14 @@ bench-robustness:
 bench-ft:
 	$(PYTHON) -m benchmarks.bench_ft_policy
 
+# adaptive-cadence vs fixed-cadence regimes, tail-sized admission under
+# fuzzed memory pressure, and the successive-halving policy tuner;
+# rewrites the repo-root BENCH_adaptive.json trajectory file
+bench-adaptive:
+	$(PYTHON) -m benchmarks.bench_adaptive
+
 bench: bench-planner bench-costmodel bench-sim bench-robustness bench-ft \
-       bench-fig6b bench-sweep bench-obs
+       bench-adaptive bench-fig6b bench-sweep bench-obs
 
 # telemetry overhead on the 10k-micro-batch acceptance chain: asserts the
 # enabled-mode slowdown stays < 5% and disabled mode is a true no-op

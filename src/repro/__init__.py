@@ -30,17 +30,19 @@ _SIM_EXPORTS = frozenset({
     "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
     "compare_utilization",
     "random_chain_solution", "random_instance", "random_reentrant_solution",
-    "FuzzCase", "FuzzConfig", "FuzzSummary", "ParityResult", "check_parity",
-    "fuzz_case", "fuzz_event_stream", "fuzz_scenario", "load_case",
-    "load_corpus", "run_fuzz", "save_case", "shrink_case",
+    "ALL_FAMILIES", "FuzzCase", "FuzzConfig", "FuzzSummary", "ParityResult",
+    "check_parity", "fuzz_case", "fuzz_event_stream", "fuzz_scenario",
+    "fuzz_scenario_weighted", "load_case", "load_corpus", "run_fuzz",
+    "save_case", "shrink_case",
     "RobustMakespan", "RobustnessReport", "cvar", "scenario_distribution",
-    "importance_scenario_distribution", "score_plan", "score_plans",
+    "importance_scenario_distribution", "memory_occupancy_overflow",
+    "score_plan", "score_plans",
 })
 
 # the cost-model seam (ISSUE 4): mirrored from ``repro.core.cost_model``'s
 # ``__all__`` — the same sync contract as _SIM_EXPORTS, same test.
 _COST_MODEL_EXPORTS = frozenset({
-    "CostModel", "ClosedForm", "SimMakespan", "StageClaim",
+    "CostModel", "ClosedForm", "SimMakespan", "StageClaim", "DegradedTail",
     "stage_memory_claims", "node_budget_windows",
     "node_budget_windows_many", "budget_feasible", "resolve_cost_model",
     "memoized_cost_model",

@@ -16,9 +16,10 @@ from .msp_graph import GraphFactory, MSPGraph, build_graph, graph_stats
 from .shortest_path import (DEFAULT_SOLVER, MSPResult, Planner, solve_msp,
                             brute_force_msp, enumerate_solutions)
 from .cost_model import (CostModel, ClosedForm, SimMakespan, StageClaim,
-                         stage_memory_claims, node_budget_windows,
-                         node_budget_windows_many, budget_feasible,
-                         resolve_cost_model, memoized_cost_model)
+                         DegradedTail, stage_memory_claims,
+                         node_budget_windows, node_budget_windows_many,
+                         budget_feasible, resolve_cost_model,
+                         memoized_cost_model)
 from .microbatch import (MicrobatchResult, optimal_microbatch,
                          exhaustive_microbatch, feasibility_box)
 from .bcd import Plan, bcd_solve, exhaustive_joint
@@ -38,7 +39,8 @@ __all__ = [
     "build_graph", "graph_stats", "MSPResult", "Planner", "DEFAULT_SOLVER",
     "solve_msp", "brute_force_msp",
     "enumerate_solutions", "CostModel", "ClosedForm", "SimMakespan",
-    "StageClaim", "stage_memory_claims", "node_budget_windows",
+    "StageClaim", "DegradedTail", "stage_memory_claims",
+    "node_budget_windows",
     "node_budget_windows_many", "budget_feasible", "resolve_cost_model",
     "memoized_cost_model", "MicrobatchResult",
     "optimal_microbatch",

@@ -49,7 +49,7 @@ from .network import EdgeNetwork
 from .profiles import ModelProfile
 
 __all__ = ["CostModel", "ClosedForm", "SimMakespan", "StageClaim",
-           "stage_memory_claims", "node_budget_windows",
+           "DegradedTail", "stage_memory_claims", "node_budget_windows",
            "node_budget_windows_many", "budget_feasible",
            "resolve_cost_model", "memoized_cost_model"]
 
@@ -88,9 +88,70 @@ def stage_memory_claims(profile: ModelProfile, net: EdgeNetwork,
     return claims
 
 
+@dataclasses.dataclass(frozen=True)
+class DegradedTail:
+    """Tail-sized node memory budgets for admission windows.
+
+    Nominal windows size claims against ``Node.mem`` — the budget when
+    nothing else is running.  Under memory pressure (a co-tenant claiming
+    part of the device, ``NetworkScenario.mem_mult``) the *degraded tail*
+    is what OOMs, so this mode sizes windows to a lower-tail CVaR of the
+    effective capacity across a fuzzed scenario distribution instead:
+    ``mem[n]`` is the mean of the worst ``ceil((1 - alpha) * n_scen)``
+    per-scenario minima of node ``n``'s memory trace.  At ``alpha`` high
+    enough that the tail is a single scenario, this is the distribution's
+    worst case — windows sized by it never overflow any sampled scenario.
+
+    Thread through ``node_budget_windows(..., tail=)`` /
+    ``budget_feasible(..., tail=)`` / ``MemoryBudgeted(tail=)`` /
+    ``SimMakespan(tail=)``.  Nodes beyond ``len(mem)`` (or with a ``None``
+    entry) keep their nominal budget.
+
+    >>> import numpy as np
+    >>> from repro.core import make_edge_network
+    >>> net = make_edge_network(num_servers=2, num_clients=1, seed=0)
+    >>> DegradedTail(mem=(None,) * 3).node_mem(net, 1) == net.nodes[1].mem
+    True
+    """
+
+    mem: tuple                   # per-node effective budget (None: nominal)
+    alpha: float = 0.95
+
+    @classmethod
+    def from_scenarios(cls, net: EdgeNetwork, scenarios,
+                       alpha: float = 0.95) -> "DegradedTail":
+        """Size budgets from a scenario distribution's ``mem_mult`` traces
+        (worst instant per scenario, lower-tail CVaR across scenarios)."""
+        if not 0.0 <= alpha < 1.0:
+            raise ValueError("need 0 <= alpha < 1")
+        scenarios = tuple(scenarios)
+        if not scenarios:
+            raise ValueError("need at least one scenario")
+        k = int(math.ceil((1.0 - alpha) * len(scenarios)))
+        mems = []
+        for i, node in enumerate(net.nodes):
+            worst_mult = sorted(
+                min(s.mem_mult[i].values) if i in s.mem_mult else 1.0
+                for s in scenarios)
+            mems.append(node.mem * float(sum(worst_mult[:k]) / k))
+        return cls(mem=tuple(mems), alpha=alpha)
+
+    def node_mem(self, net: EdgeNetwork, n: int) -> float:
+        if n < len(self.mem) and self.mem[n] is not None:
+            return self.mem[n]
+        return net.nodes[n].mem
+
+    def __repr__(self):
+        sized = [m for m in self.mem if m is not None]
+        return (f"DegradedTail(alpha={self.alpha}, nodes={len(self.mem)}, "
+                f"min_mem={min(sized):.4g})" if sized else
+                f"DegradedTail(alpha={self.alpha}, nominal)")
+
+
 def node_budget_windows(profile: ModelProfile, net: EdgeNetwork,
                         sol: SplitSolution, b: int,
-                        memory_model: str = "refined") -> list:
+                        memory_model: str = "refined",
+                        tail: DegradedTail | None = None) -> list:
     """Per-stage admission windows derived from ``Node.mem``.
 
     Co-located stages share their node's budget: for node ``n`` hosting
@@ -99,6 +160,10 @@ def node_budget_windows(profile: ModelProfile, net: EdgeNetwork,
     i.e. ``floor((mem_n - static_n) / act_n)``.  ``None`` means unbounded
     (zero activation bytes); ``0`` means even a single live micro-batch
     does not fit (the plan is memory-infeasible at this ``b``).
+
+    ``tail`` substitutes :class:`DegradedTail` effective budgets for the
+    nominal ``Node.mem`` — windows sized for the degraded-memory tail of a
+    scenario distribution instead of the unloaded device.
     """
     claims = stage_memory_claims(profile, net, sol, b, memory_model)
     static_n: dict = {}
@@ -108,7 +173,9 @@ def node_budget_windows(profile: ModelProfile, net: EdgeNetwork,
         act_n[c.node] = act_n.get(c.node, 0.0) + c.act_bytes
     windows = []
     for c in claims:
-        free = net.nodes[c.node].mem - static_n[c.node]
+        mem = net.nodes[c.node].mem if tail is None \
+            else tail.node_mem(net, c.node)
+        free = mem - static_n[c.node]
         act = act_n[c.node]
         if act <= 0.0:
             windows.append(None if free >= 0.0 else 0)
@@ -119,7 +186,8 @@ def node_budget_windows(profile: ModelProfile, net: EdgeNetwork,
 
 def node_budget_windows_many(profile: ModelProfile, net: EdgeNetwork,
                              sol: SplitSolution, bs,
-                             memory_model: str = "refined") -> list:
+                             memory_model: str = "refined",
+                             tail: DegradedTail | None = None) -> list:
     """:func:`node_budget_windows` for a whole range of micro-batch sizes.
 
     The Eq. (11) cumulative lookups are b-independent
@@ -146,7 +214,9 @@ def node_budget_windows_many(profile: ModelProfile, net: EdgeNetwork,
         act_n[node] = act_n.get(node, 0.0) + eff * per_sample
     cols = []
     for node, _, _ in per:
-        free = net.nodes[node].mem - static_n[node]
+        mem = net.nodes[node].mem if tail is None \
+            else tail.node_mem(net, node)
+        free = mem - static_n[node]
         act = act_n[node]
         ws: list = [None] * len(bs)
         for i in range(len(bs)):
@@ -161,13 +231,15 @@ def node_budget_windows_many(profile: ModelProfile, net: EdgeNetwork,
 
 def budget_feasible(profile: ModelProfile, net: EdgeNetwork,
                     sol: SplitSolution, b: int,
-                    memory_model: str = "refined") -> bool:
+                    memory_model: str = "refined",
+                    tail: DegradedTail | None = None) -> bool:
     """Window >= 1 everywhere: one live micro-batch per stage fits every
     node's memory — the memory predicate behind the memory-budgeted
-    feasible-b box (monotone non-increasing in ``b``)."""
+    feasible-b box (monotone non-increasing in ``b``).  ``tail`` sizes the
+    budgets for a degraded-memory scenario tail (:class:`DegradedTail`)."""
     return all(w is None or w >= 1
                for w in node_budget_windows(profile, net, sol, b,
-                                            memory_model))
+                                            memory_model, tail))
 
 
 # ---------------------------------------------------------------------------
@@ -251,21 +323,25 @@ class SimMakespan(CostModel):
     name = "sim_makespan"
 
     def __init__(self, policy="memory", engine: str = "auto",
-                 memory_model: str = "refined"):
+                 memory_model: str = "refined",
+                 tail: DegradedTail | None = None):
         # keep the feasibility predicate and the executed admission windows
         # on ONE memory model: a "memory" policy name is materialized with
-        # this model's memory_model, and a pre-built MemoryBudgeted instance
-        # donates its own (otherwise the box would prune b values the
-        # simulated windows would happily schedule, or vice versa)
+        # this model's memory_model (and tail budgets), and a pre-built
+        # MemoryBudgeted instance donates its own (otherwise the box would
+        # prune b values the simulated windows would happily schedule, or
+        # vice versa)
         if isinstance(policy, str) and \
                 policy.lower() in ("memory", "memory_budgeted"):
             from repro.sim.policies import MemoryBudgeted  # deferred
-            policy = MemoryBudgeted(memory_model)
+            policy = MemoryBudgeted(memory_model, tail=tail)
         elif getattr(policy, "name", None) == "memory":
             memory_model = policy.memory_model
+            tail = policy.tail
         self.policy = policy
         self.engine = engine
         self.memory_model = memory_model
+        self.tail = tail
 
     def evaluate(self, profile, net, sol, b, B) -> float:
         if b < 1 or not self.memory_feasible(profile, net, sol, b):
@@ -305,16 +381,19 @@ class SimMakespan(CostModel):
         return out
 
     def memory_feasible(self, profile, net, sol, b) -> bool:
-        return budget_feasible(profile, net, sol, b, self.memory_model)
+        return budget_feasible(profile, net, sol, b, self.memory_model,
+                               self.tail)
 
     def memory_feasible_many(self, profile, net, sol, bs) -> list:
         wss = node_budget_windows_many(profile, net, sol, bs,
-                                       self.memory_model)
+                                       self.memory_model, self.tail)
         return [all(w is None or w >= 1 for w in ws) for ws in wss]
 
     def __repr__(self):
+        extra = "" if self.tail is None else f", tail={self.tail!r}"
         return (f"SimMakespan(policy={getattr(self.policy, 'name', self.policy)!r}, "
-                f"engine={self.engine!r}, memory_model={self.memory_model!r})")
+                f"engine={self.engine!r}, "
+                f"memory_model={self.memory_model!r}{extra})")
 
 
 class _MemoCostModel(CostModel):

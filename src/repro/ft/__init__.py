@@ -7,12 +7,18 @@ from .coordinator import (Coordinator, NodeFailure, RateChange, Straggler,
                           Resync, ReplanOutcome)
 from .policy import (PolicyDecision, ReplanPolicy, Eager, RideOut, Periodic,
                      Hysteresis, RateLimited, CVaRPreSpill,
-                     resolve_replan_policy, event_deviation,
+                     resolve_replan_policy, event_deviation, net_deviation,
                      PolicyEvalReport, evaluate_policies)
+from .adaptive import (DriftEstimator, AdaptiveCadence, TuneResult,
+                       default_tuning_grid, tune_policies, network_signature,
+                       clear_tune_cache)
 
 __all__ = ["Coordinator", "NodeFailure", "RateChange", "Straggler",
            "Resync", "ReplanOutcome",
            "PolicyDecision", "ReplanPolicy", "Eager", "RideOut", "Periodic",
            "Hysteresis", "RateLimited", "CVaRPreSpill",
-           "resolve_replan_policy", "event_deviation",
-           "PolicyEvalReport", "evaluate_policies"]
+           "resolve_replan_policy", "event_deviation", "net_deviation",
+           "PolicyEvalReport", "evaluate_policies",
+           "DriftEstimator", "AdaptiveCadence", "TuneResult",
+           "default_tuning_grid", "tune_policies", "network_signature",
+           "clear_tune_cache"]

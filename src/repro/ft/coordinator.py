@@ -143,8 +143,11 @@ class Coordinator:
     def __init__(self, profile: ModelProfile, net: EdgeNetwork, B: int,
                  *, theta: float = 0.01,
                  microbatch_gain_threshold: float = 0.95, cost_model=None,
-                 restore_cost=0.0, policy=None):
+                 restore_cost=0.0, policy=None,
+                 preview_cache_size: int = 8):
         from .policy import resolve_replan_policy
+        if preview_cache_size < 1:
+            raise ValueError("preview_cache_size must be >= 1")
         self.profile = profile
         self.net = net
         self.B = B
@@ -158,7 +161,14 @@ class Coordinator:
         # hints) so an adopted replan after a single-link event costs a
         # patched re-sweep, not a cold Algorithm-1 solve (ISSUE 9)
         self.planner = Planner(profile, net)
+        # LRU memo of preview Planners, capped at preview_cache_size: a
+        # long flap storm previews a fresh (net, event) pair per flap and
+        # would otherwise grow this without bound (ISSUE 10 satellite)
+        self.preview_cache_size = int(preview_cache_size)
         self._preview_planners: dict = {}   # net-identity -> Planner memo
+        self.eval_errors = 0   # expected-infeasibility evals (also counted
+        #                        in obs as "ft.eval_errors", but obs may be
+        #                        disabled — this attribute always counts)
         self.plan = bcd_solve(profile, net, B, theta=theta,
                               cost_model=self.cost_model,
                               planner=self.planner)
@@ -266,16 +276,32 @@ class Coordinator:
         builds (ISSUE 9 satellite)."""
         if net is self.planner.net or net is self.net:
             return self.planner
-        for pl in self._preview_planners.values():    # bounded dict: scan ok
+        hit = None
+        for k, pl in self._preview_planners.items():  # bounded dict: scan ok
             if pl.net is net:
-                obs.inc("ft.preview_planner_hit")
-                return pl
+                hit = k
+                break
+        if hit is not None:
+            obs.inc("ft.preview_planner_hit")
+            return self._memo_touch(hit)
         obs.inc("ft.preview_planner_miss")
         pl = Planner(self.profile, net)
-        self._preview_planners[id(net)] = pl
-        while len(self._preview_planners) > 8:    # bounded: drop the oldest
-            self._preview_planners.pop(next(iter(self._preview_planners)))
+        self._memo_put(id(net), pl)
         return pl
+
+    def _memo_touch(self, key):
+        """Mark ``key`` most-recently-used and return its planner."""
+        pl = self._preview_planners.pop(key)
+        self._preview_planners[key] = pl
+        return pl
+
+    def _memo_put(self, key, pl) -> None:
+        """Insert into the preview-planner memo, evicting least-recently
+        used entries over the cap (``ft.preview_evictions`` counts them)."""
+        self._preview_planners[key] = pl
+        while len(self._preview_planners) > self.preview_cache_size:
+            self._preview_planners.pop(next(iter(self._preview_planners)))
+            obs.inc("ft.preview_evictions")
 
     # -- event absorption (ride-out path) --------------------------------------
     def absorb(self, event, *, sim_time: float | None = None) -> ReplanOutcome:
@@ -363,6 +389,7 @@ class Coordinator:
         except (ValueError, ArithmeticError):
             # expected infeasibility (validate_solution / degenerate
             # capacity) — anything else is a programming error: re-raise
+            self.eval_errors += 1
             obs.inc("ft.eval_errors")
             return math.inf
 
@@ -395,15 +422,15 @@ class Coordinator:
         repeated decide calls on the same flap) stop re-paying graph builds.
         Coordinator state is untouched."""
         key = (id(self.net), _event_key(event))
-        got = self._preview_planners.get(key)
-        if got is not None:
+        if key in self._preview_planners:
             obs.inc("ft.preview_planner_hit")
+            got = self._memo_touch(key)
             psol = (self._remap_across_failure(sol, event.server)
                     if isinstance(event, NodeFailure) else sol)
             return got.net, psol, got
         net, psol = Coordinator.preview(self.net, sol, event)
         pl = self._planner_for(net)
-        self._preview_planners[key] = pl
+        self._memo_put(key, pl)
         return net, psol, pl
 
     def _current_latency(self) -> float:
@@ -413,6 +440,7 @@ class Coordinator:
                                             self.B)
         except (ValueError, ArithmeticError):
             # expected infeasibility errors only — see _evaluate_candidate
+            self.eval_errors += 1
             obs.inc("ft.eval_errors")
             return math.inf
 

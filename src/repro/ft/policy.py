@@ -59,7 +59,7 @@ from repro import obs
 
 __all__ = ["PolicyDecision", "ReplanPolicy", "Eager", "RideOut", "Periodic",
            "Hysteresis", "RateLimited", "CVaRPreSpill",
-           "resolve_replan_policy", "event_deviation",
+           "resolve_replan_policy", "event_deviation", "net_deviation",
            "PolicyEvalReport", "evaluate_policies"]
 
 
@@ -117,9 +117,11 @@ def event_deviation(event) -> tuple:
     return ("other", type(event).__name__), -math.inf
 
 
-def _net_deviation(ref, net) -> float:
+def net_deviation(ref, net) -> float:
     """Largest absolute log capacity ratio between two same-shape networks
-    — the magnitude of a ``Resync`` measurement snapshot."""
+    — the magnitude of a ``Resync`` measurement snapshot.  The deviation
+    coordinate :class:`Hysteresis` measures snapshots in, and the increment
+    ``repro.ft.adaptive.DriftEstimator`` accumulates drift rates from."""
     if ref is None or len(ref.nodes) != len(net.nodes):
         return math.inf
     dev = 0.0
@@ -258,7 +260,7 @@ class Hysteresis(ReplanPolicy):
         key, delta = event_deviation(event)
         if isinstance(event, Resync):
             ref = self._ref_net if self._ref_net is not None else coord.net
-            dev = _net_deviation(ref, event.net)
+            dev = net_deviation(ref, event.net)
         else:
             self._dev[key] = self._dev.get(key, 0.0) + delta
             dev = abs(self._dev[key])
@@ -453,6 +455,7 @@ class CVaRPreSpill(ReplanPolicy):
             tail = self.robust.evaluate(coord.profile, net, sol,
                                         coord.plan.b, coord.B)
         except (ValueError, ArithmeticError):
+            coord.eval_errors += 1
             obs.inc("ft.eval_errors")
             return PolicyDecision.do_replan("pre-spill: incumbent unscorable",
                                             cost_model=self.robust)
@@ -494,6 +497,10 @@ class PolicyEvalReport:
     downtime: float              # total solve + restore + remap seconds
     blocked: dict | None = None  # resource -> mean blocked seconds/stream
     alpha: float = 0.9
+    eval_errors: int = 0         # expected-infeasibility evals swallowed
+    #                              (Coordinator.eval_errors, summed) — a
+    #                              policy silently failing its evals is
+    #                              visible here, not just in the obs registry
 
     @property
     def mean(self) -> float:
@@ -508,6 +515,7 @@ class PolicyEvalReport:
         return {"policy": self.policy, "mean": self.mean, "cvar": self.cvar,
                 "replans": self.replans, "suppressed": self.suppressed,
                 "downtime": self.downtime,
+                "eval_errors": self.eval_errors,
                 "mean_final_objective":
                     float(np.mean(self.final_objectives))}
 
@@ -536,7 +544,7 @@ def evaluate_policies(profile, net, B: int, streams, policies, *,
     out = {}
     for name, factory in policies.items():
         makespans, finals = [], []
-        replans = suppressed = 0
+        replans = suppressed = eval_errors = 0
         downtime = 0.0
         blocked: dict = {}
         for stream in streams:
@@ -554,6 +562,7 @@ def evaluate_policies(profile, net, B: int, streams, policies, *,
             replans += rep.num_replans
             suppressed += rep.num_suppressed
             downtime += rep.downtime
+            eval_errors += coord.eval_errors
             if attribution:
                 for seg in rep.segments:
                     u = seg.report.utilization()
@@ -565,7 +574,8 @@ def evaluate_policies(profile, net, B: int, streams, policies, *,
             policy=name, makespans=tuple(makespans),
             final_objectives=tuple(finals), replans=replans,
             suppressed=suppressed, downtime=downtime,
-            blocked=(blocked if attribution else None), alpha=alpha)
+            blocked=(blocked if attribution else None), alpha=alpha,
+            eval_errors=eval_errors)
     return out
 
 
@@ -585,11 +595,14 @@ def resolve_replan_policy(policy) -> ReplanPolicy | None:
     if policy is None or isinstance(policy, ReplanPolicy):
         return policy
     if isinstance(policy, str):
+        if policy.lower() == "adaptive":     # lazy: adaptive imports us
+            from repro.ft.adaptive import AdaptiveCadence
+            return AdaptiveCadence()
         try:
             return _NAMED[policy.lower()]()
         except KeyError:
             raise ValueError(
                 f"unknown replan policy {policy!r}; named policies: "
-                f"{sorted(set(_NAMED))}") from None
+                f"{sorted(set(_NAMED) | {'adaptive'})}") from None
     raise TypeError(f"expected a ReplanPolicy, name, or None, got "
                     f"{policy!r}")

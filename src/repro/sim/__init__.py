@@ -42,12 +42,14 @@ from .validate import (CrossCheck, cross_validate, cross_validate_many,
                        compare_engines, compare_utilization,
                        random_chain_solution, random_instance,
                        random_reentrant_solution)
-from .fuzz import (FuzzCase, FuzzConfig, FuzzSummary, ParityResult,
-                   check_parity, fuzz_case, fuzz_event_stream, fuzz_scenario,
-                   load_case, load_corpus, run_fuzz, save_case, shrink_case)
+from .fuzz import (ALL_FAMILIES, FuzzCase, FuzzConfig, FuzzSummary,
+                   ParityResult, check_parity, fuzz_case, fuzz_event_stream,
+                   fuzz_scenario, fuzz_scenario_weighted, load_case,
+                   load_corpus, run_fuzz, save_case, shrink_case)
 from .robustness import (RobustMakespan, RobustnessReport, cvar,
                          scenario_distribution,
-                         importance_scenario_distribution, score_plan,
+                         importance_scenario_distribution,
+                         memory_occupancy_overflow, score_plan,
                          score_plans)
 
 __all__ = [
@@ -64,9 +66,11 @@ __all__ = [
     "CrossCheck", "cross_validate", "cross_validate_many", "compare_engines",
     "compare_utilization",
     "random_chain_solution", "random_instance", "random_reentrant_solution",
-    "FuzzCase", "FuzzConfig", "FuzzSummary", "ParityResult", "check_parity",
-    "fuzz_case", "fuzz_event_stream", "fuzz_scenario", "load_case",
-    "load_corpus", "run_fuzz", "save_case", "shrink_case",
+    "ALL_FAMILIES", "FuzzCase", "FuzzConfig", "FuzzSummary", "ParityResult",
+    "check_parity", "fuzz_case", "fuzz_event_stream", "fuzz_scenario",
+    "fuzz_scenario_weighted", "load_case", "load_corpus", "run_fuzz",
+    "save_case", "shrink_case",
     "RobustMakespan", "RobustnessReport", "cvar", "scenario_distribution",
-    "importance_scenario_distribution", "score_plan", "score_plans",
+    "importance_scenario_distribution", "memory_occupancy_overflow",
+    "score_plan", "score_plans",
 ]

@@ -57,7 +57,9 @@ from .validate import (TOPOLOGIES, random_chain_solution,
 
 __all__ = [
     "FuzzConfig", "FuzzCase", "ParityResult", "FuzzSummary",
-    "fuzz_scenario", "fuzz_case", "fuzz_event_stream", "check_parity",
+    "FAMILIES", "ALL_FAMILIES",
+    "fuzz_scenario", "fuzz_scenario_weighted", "fuzz_case",
+    "fuzz_event_stream", "check_parity",
     "run_fuzz", "shrink_case", "save_case", "load_case", "load_corpus",
     "scenario_to_dict", "scenario_from_dict",
 ]
@@ -65,6 +67,12 @@ __all__ = [
 #: failure families the fuzzer samples from (see module docstring)
 FAMILIES = ("degradation", "flapping", "outage", "straggler", "drift",
             "adversarial")
+
+#: every family, including the opt-in "mem_pressure" (a co-tenant claiming
+#: part of a node's memory — no timing effect, so it is excluded from the
+#: default tuple to keep every historical seeded stream byte-identical;
+#: enable via ``FuzzConfig(families=ALL_FAMILIES)``)
+ALL_FAMILIES = FAMILIES + ("mem_pressure",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,16 +136,34 @@ def _bottleneck_resource(profile, net, sol, b) -> tuple:
     return max(totals, key=totals.get)
 
 
-def fuzz_scenario(rng: np.random.Generator, net: EdgeNetwork,
-                  config: FuzzConfig = FuzzConfig(), *, profile=None,
-                  sol=None, b: int | None = None,
-                  num_microbatches: int = 4) -> NetworkScenario:
-    """Compose ``min_events..max_events`` sampled failure families into one
-    scenario.  With a plan (``profile``/``sol``/``b``), windows scale to the
-    closed-form run length and the ``adversarial`` family targets the plan's
-    bottleneck resource; without one, that family is skipped and windows use
-    ``config.horizon``.
-    """
+def _sev(rng: np.random.Generator, lo: float, hi: float, tilt: float,
+         worse: str) -> tuple:
+    """One severity draw on ``[lo, hi)``, optionally tilted toward the
+    *worse* end (``"high"`` or ``"low"``), as ``(value, log_lr)``.
+
+    ``tilt=1`` is exactly ``rng.uniform(lo, hi)`` (same single RNG call,
+    zero log-likelihood-ratio), so untilted streams stay byte-identical to
+    the historical sampler.  ``tilt>1`` draws the unit coordinate from
+    ``Beta(tilt, 1)`` (inverse CDF of one ``rng.random()``), concentrating
+    mass near the worse end; the returned ``log_lr`` is
+    ``log p(x) - log q(x)`` for the uniform nominal law ``p``."""
+    if tilt == 1.0:
+        return float(rng.uniform(lo, hi)), 0.0
+    u = max(float(rng.random()) ** (1.0 / tilt), 1e-12)
+    log_lr = -(math.log(tilt) + (tilt - 1.0) * math.log(u))
+    x = u if worse == "high" else 1.0 - u
+    return lo + (hi - lo) * x, log_lr
+
+
+def _fuzz_scenario_impl(rng: np.random.Generator, net: EdgeNetwork,
+                        config: FuzzConfig, *, profile, sol, b,
+                        num_microbatches: int, family_probs=None,
+                        severity_tilt: float = 1.0) -> tuple:
+    """Shared sampler behind :func:`fuzz_scenario` (nominal law) and
+    :func:`fuzz_scenario_weighted` (tilted proposal).  Returns
+    ``(scenario, log_likelihood_ratio)``; the nominal path (no
+    ``family_probs``, ``severity_tilt=1``) consumes the RNG stream
+    byte-identically to the historical sampler and returns ``log_lr=0``."""
     planful = profile is not None and sol is not None and b is not None
     t_scale = _timescale(profile, net, sol, b, num_microbatches) \
         if planful else config.horizon
@@ -147,9 +173,16 @@ def fuzz_scenario(rng: np.random.Generator, net: EdgeNetwork,
         raise ValueError("no applicable failure families")
     links = _links(net)
     scen = NetworkScenario()
+    log_lr = 0.0
     n_events = int(rng.integers(config.min_events, config.max_events + 1))
     for _ in range(n_events):
-        fam = families[int(rng.integers(len(families)))]
+        if family_probs is None:
+            fam = families[int(rng.integers(len(families)))]
+        else:
+            j = int(rng.choice(len(families), p=family_probs))
+            fam = families[j]
+            log_lr += math.log(1.0 / len(families)) - \
+                math.log(family_probs[j])
         start, end = _window(rng, t_scale)
         if fam == "degradation":
             n_nodes = len(net.nodes)
@@ -158,28 +191,32 @@ def fuzz_scenario(rng: np.random.Generator, net: EdgeNetwork,
                       rng.choice(n_nodes, size=k, replace=False)]
             touched = [lk for lk in links
                        if lk[0] in region or lk[1] in region]
-            scen = scen.with_region_degradation(
-                region, touched, start, end,
-                factor=float(rng.uniform(0.05, 0.6)))
+            factor, lw = _sev(rng, 0.05, 0.6, severity_tilt, "low")
+            scen = scen.with_region_degradation(region, touched, start, end,
+                                                factor=factor)
+            log_lr += lw
         elif fam == "flapping" and links:
             a, c = links[int(rng.integers(len(links)))]
+            period = float(rng.uniform(0.05, 0.25)) * t_scale
+            duty, lw = _sev(rng, 0.3, 0.7, severity_tilt, "low")
             scen = scen.with_flapping(
-                a, c, start, end,
-                period=float(rng.uniform(0.05, 0.25)) * t_scale,
-                duty=float(rng.uniform(0.3, 0.7)),
+                a, c, start, end, period=period, duty=duty,
                 low=float(rng.choice([0.0, 0.1])))
+            log_lr += lw
         elif fam == "outage" and links:
             a, c = links[int(rng.integers(len(links)))]
             scen = scen.with_outage(a, c, start, end)
         elif fam == "straggler":
             node = int(rng.integers(len(net.nodes)))
-            scen = scen.with_straggler(node, start, end,
-                                       slowdown=float(rng.uniform(2.0, 16.0)))
+            slowdown, lw = _sev(rng, 2.0, 16.0, severity_tilt, "high")
+            scen = scen.with_straggler(node, start, end, slowdown=slowdown)
+            log_lr += lw
         elif fam == "drift":
             from .scenario import gauss_markov
-            tr = gauss_markov(rng, cv=float(rng.uniform(0.1, 0.5)),
-                              dt=t_scale / 16, horizon=2 * t_scale,
-                              corr=0.9)
+            cv, lw = _sev(rng, 0.1, 0.5, severity_tilt, "high")
+            tr = gauss_markov(rng, cv=cv, dt=t_scale / 16,
+                              horizon=2 * t_scale, corr=0.9)
+            log_lr += lw
             if rng.random() < 0.5 or not links:
                 node = int(rng.integers(len(net.nodes)))
                 nm = dict(scen.node_mult)
@@ -190,6 +227,11 @@ def fuzz_scenario(rng: np.random.Generator, net: EdgeNetwork,
                 lm = dict(scen.link_mult)
                 lm[(a, c)] = lm[(a, c)] * tr if (a, c) in lm else tr
                 scen = dataclasses.replace(scen, link_mult=lm)
+        elif fam == "mem_pressure":
+            node = int(rng.integers(len(net.nodes)))
+            factor, lw = _sev(rng, 0.25, 0.9, severity_tilt, "low")
+            scen = scen.with_mem_pressure(node, start, end, factor)
+            log_lr += lw
         elif fam == "adversarial":
             res = _bottleneck_resource(profile, net, sol, b)
             t_fill = L.fill_latency(profile, net, sol, b)
@@ -213,7 +255,68 @@ def fuzz_scenario(rng: np.random.Generator, net: EdgeNetwork,
         scen = dataclasses.replace(scen, link_mult=lm)
     if not config.allow_dead:
         assert scen.drains(), "fuzzer invariant: scenarios must drain"
+    return scen, log_lr
+
+
+def fuzz_scenario(rng: np.random.Generator, net: EdgeNetwork,
+                  config: FuzzConfig = FuzzConfig(), *, profile=None,
+                  sol=None, b: int | None = None,
+                  num_microbatches: int = 4) -> NetworkScenario:
+    """Compose ``min_events..max_events`` sampled failure families into one
+    scenario.  With a plan (``profile``/``sol``/``b``), windows scale to the
+    closed-form run length and the ``adversarial`` family targets the plan's
+    bottleneck resource; without one, that family is skipped and windows use
+    ``config.horizon``.
+    """
+    scen, _ = _fuzz_scenario_impl(rng, net, config, profile=profile, sol=sol,
+                                  b=b, num_microbatches=num_microbatches)
     return scen
+
+
+def fuzz_scenario_weighted(rng: np.random.Generator, net: EdgeNetwork,
+                           config: FuzzConfig = FuzzConfig(), *,
+                           profile=None, sol=None, b: int | None = None,
+                           num_microbatches: int = 4, family_tilt=None,
+                           severity_tilt: float = 1.0) -> tuple:
+    """Importance-sampled :func:`fuzz_scenario`: draw from a *tilted*
+    proposal and return ``(scenario, weight)`` with the likelihood-ratio
+    weight ``p(scenario) / q(scenario)`` against the nominal fuzzer law.
+
+    ``family_tilt`` maps failure-family name -> relative proposal mass
+    (unnormalized; families absent from the map keep mass 1), so e.g.
+    ``{"outage": 4.0}`` over-draws outages 4x while the weights keep every
+    downstream weighted statistic unbiased.  ``severity_tilt > 1`` tilts
+    each family's magnitude draw toward its damaging end (low degradation
+    factor, high straggler slowdown, ...) via a ``Beta(tilt, 1)`` unit
+    coordinate.  Both tilts compose: the joint weight is the product of the
+    per-event family and severity ratios.  ``family_tilt=None`` with
+    ``severity_tilt=1`` recovers :func:`fuzz_scenario` exactly (same RNG
+    stream, weight 1).
+
+    Feed the weights to ``repro.sim.robustness.cvar`` / ``score_plan`` —
+    see ``importance_scenario_distribution(kind_tilt=..., severity_tilt=...)``
+    for the distribution-level wrapper that also tilts event counts."""
+    if severity_tilt <= 0:
+        raise ValueError("severity_tilt must be > 0")
+    family_probs = None
+    if family_tilt:
+        planful = profile is not None and sol is not None and b is not None
+        families = [f for f in config.families
+                    if f != "adversarial" or planful]
+        unknown = set(family_tilt) - set(config.families)
+        if unknown:
+            raise ValueError(f"family_tilt names unknown families "
+                             f"{sorted(unknown)}; config has "
+                             f"{sorted(config.families)}")
+        if any(v <= 0 for v in family_tilt.values()):
+            raise ValueError("family_tilt masses must be > 0")
+        q = np.asarray([float(family_tilt.get(f, 1.0)) for f in families])
+        family_probs = q / q.sum()
+    scen, log_lr = _fuzz_scenario_impl(
+        rng, net, config, profile=profile, sol=sol, b=b,
+        num_microbatches=num_microbatches, family_probs=family_probs,
+        severity_tilt=severity_tilt)
+    return scen, float(math.exp(log_lr))
 
 
 # ---------------------------------------------------------------------------
@@ -268,12 +371,16 @@ def scenario_to_dict(scen: NetworkScenario) -> dict:
     triggers carry arbitrary event objects and are rejected)."""
     if scen.replan_triggers:
         raise ValueError("replan triggers are not serializable")
-    return {
+    out = {
         "node_mult": {str(n): _trace_to_dict(tr)
                       for n, tr in sorted(scen.node_mult.items())},
         "link_mult": {f"{a},{c}": _trace_to_dict(tr)
                       for (a, c), tr in sorted(scen.link_mult.items())},
     }
+    if scen.mem_mult:            # omitted when empty: corpus back-compat
+        out["mem_mult"] = {str(n): _trace_to_dict(tr)
+                           for n, tr in sorted(scen.mem_mult.items())}
+    return out
 
 
 def scenario_from_dict(d: dict) -> NetworkScenario:
@@ -283,7 +390,10 @@ def scenario_from_dict(d: dict) -> NetworkScenario:
     for key, tr in d.get("link_mult", {}).items():
         a, c = key.split(",")
         link_mult[(int(a), int(c))] = _trace_from_dict(tr)
-    return NetworkScenario(node_mult=node_mult, link_mult=link_mult)
+    mem_mult = {int(n): _trace_from_dict(tr)
+                for n, tr in d.get("mem_mult", {}).items()}
+    return NetworkScenario(node_mult=node_mult, link_mult=link_mult,
+                           mem_mult=mem_mult)
 
 
 def _instance_from_rng(rng: np.random.Generator, seed: int, reentrant: bool):

@@ -183,8 +183,10 @@ class MemoryBudgeted(AdmissionPolicy):
 
     name = "memory"
 
-    def __init__(self, memory_model: str = "refined"):
+    def __init__(self, memory_model: str = "refined", tail=None):
         self.memory_model = memory_model
+        self.tail = tail             # core.cost_model.DegradedTail or None:
+        #                              windows sized for the degraded tail
         self._windows: tuple | None = None
 
     @property
@@ -193,9 +195,10 @@ class MemoryBudgeted(AdmissionPolicy):
 
     def bind(self, profile, net, sol, b) -> "MemoryBudgeted":
         from repro.core.cost_model import node_budget_windows
-        pol = MemoryBudgeted(self.memory_model)
+        pol = MemoryBudgeted(self.memory_model, self.tail)
         pol._windows = tuple(node_budget_windows(profile, net, sol, b,
-                                                 self.memory_model))
+                                                 self.memory_model,
+                                                 self.tail))
         return pol
 
     def bind_many(self, profile, net, plans) -> list:
@@ -212,9 +215,9 @@ class MemoryBudgeted(AdmissionPolicy):
             sol = plans[idxs[0]][0]
             wss = node_budget_windows_many(profile, net, sol,
                                            [plans[i][1] for i in idxs],
-                                           self.memory_model)
+                                           self.memory_model, self.tail)
             for i, ws in zip(idxs, wss):
-                pol = MemoryBudgeted(self.memory_model)
+                pol = MemoryBudgeted(self.memory_model, self.tail)
                 pol._windows = tuple(ws)
                 out[i] = pol
         return out

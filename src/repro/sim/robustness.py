@@ -37,11 +37,12 @@ import numpy as np
 from repro.core.cost_model import CostModel, SimMakespan
 from repro.core.network import EdgeNetwork
 from .engine import build_visit_table, simulate_plan, simulate_plans
-from .fuzz import FuzzConfig, fuzz_scenario
+from .fuzz import FuzzConfig, fuzz_scenario, fuzz_scenario_weighted
 from .scenario import NetworkScenario
 
 __all__ = ["cvar", "scenario_distribution", "importance_scenario_distribution",
-           "RobustnessReport", "score_plan", "score_plans", "RobustMakespan"]
+           "RobustnessReport", "score_plan", "score_plans", "RobustMakespan",
+           "memory_occupancy_overflow"]
 
 
 def cvar(values, alpha: float = 0.95, weights=None) -> float:
@@ -111,6 +112,8 @@ def scenario_distribution(net: EdgeNetwork, n: int, *, seed: int = 0,
 
 def importance_scenario_distribution(net: EdgeNetwork, n: int, *,
                                      seed: int = 0, tilt: float = 3.0,
+                                     kind_tilt: dict | None = None,
+                                     severity_tilt: float = 1.0,
                                      config: FuzzConfig | None = None,
                                      profile=None, sol=None,
                                      b: int | None = None,
@@ -129,7 +132,15 @@ def importance_scenario_distribution(net: EdgeNetwork, n: int, *,
     :func:`score_plan`: the estimator stays unbiased for the uniform-count
     distribution while the tail is sampled ``~tilt**(K-1)`` x more densely.
 
-    ``tilt=1`` recovers uniform counts (all weights 1)."""
+    Beyond the count marginal, ``kind_tilt`` tilts the per-event *family*
+    choice (name -> relative proposal mass, e.g. ``{"outage": 4.0}``) and
+    ``severity_tilt > 1`` tilts each family's magnitude draw toward its
+    damaging end — ``sim.fuzz.fuzz_scenario_weighted``.  The returned
+    weights are the *joint* likelihood ratios (count x family x severity),
+    so weighted estimators stay unbiased under any tilt combination.
+
+    ``tilt=1`` with no kind/severity tilt recovers the uniform sampler
+    (all weights 1, same RNG stream as :func:`scenario_distribution`)."""
     if tilt <= 0:
         raise ValueError("tilt must be > 0")
     config = config or FuzzConfig()
@@ -145,9 +156,12 @@ def importance_scenario_distribution(net: EdgeNetwork, n: int, *,
         j = int(rng.choice(ks.size, p=q))
         cfg_k = dataclasses.replace(config, min_events=int(ks[j]),
                                     max_events=int(ks[j]))
-        scens.append(fuzz_scenario(rng, net, cfg_k, profile=profile, sol=sol,
-                                   b=b, num_microbatches=num_microbatches))
-        weights.append(float(p[j] / q[j]))
+        scen, w = fuzz_scenario_weighted(
+            rng, net, cfg_k, profile=profile, sol=sol, b=b,
+            num_microbatches=num_microbatches, family_tilt=kind_tilt,
+            severity_tilt=severity_tilt)
+        scens.append(scen)
+        weights.append(float(p[j] / q[j]) * w)
     return tuple(scens), tuple(weights)
 
 
@@ -261,6 +275,61 @@ def score_plans(profile, net, cands, *, B: int, scenarios, policy="fifo",
                 makespans=tuple(col[i].L_t for col in cols),
                 nominal=nominal[i].L_t, alpha=alpha)
             for i in range(len(cands))]
+
+
+def memory_occupancy_overflow(profile, net, sol, b: int, report,
+                              scenario: NetworkScenario | None = None, *,
+                              memory_model: str = "refined") -> dict:
+    """Measured peak bytes ABOVE each node's *effective* memory budget
+    during one simulated run — ``{}`` when occupancy fits everywhere.
+
+    Occupied bytes on node ``n`` at time ``t`` are the Eq. (11) claims
+    (``core.cost_model.stage_memory_claims``) driven by the engine's
+    measured per-stage activation occupancy
+    (``sim.policies.activation_occupancy``):
+    ``static_n + sum_j occ_j(t) * act_j`` over the node's stages.  The
+    budget is ``scenario.mem_trace(net, n)`` — ``Node.mem`` scaled by the
+    scenario's memory-pressure trace (nominal when ``scenario`` is None) —
+    evaluated at every occupancy change and every budget breakpoint inside
+    the run.  Returns ``{node: peak_overflow_bytes}`` for nodes that
+    overflow: the ground truth the tail-sized admission bars in
+    ``benchmarks/bench_adaptive.py`` measure nominal vs
+    :class:`~repro.core.cost_model.DegradedTail` windows against."""
+    from repro.core.cost_model import stage_memory_claims
+    from .policies import activation_occupancy
+    scenario = scenario or NetworkScenario()
+    claims = stage_memory_claims(profile, net, sol, b, memory_model)
+    occ = activation_occupancy(report.records)
+    static_n: dict = {}
+    stages_n: dict = {}
+    for c in claims:
+        static_n[c.node] = static_n.get(c.node, 0.0) + c.static_bytes
+        stages_n.setdefault(c.node, []).append(c)
+    horizon = report.makespan
+    out: dict = {}
+    for node, cls in stages_n.items():
+        mem_tr = scenario.mem_trace(net, node)
+        times = {0.0}
+        for c in cls:
+            times.update(t for t, _ in occ.get(c.position, ()))
+        times.update(t for t in mem_tr.times if 0.0 <= t <= horizon)
+        ts = np.asarray(sorted(times), dtype=float)
+        occupied = np.full(ts.shape, static_n[node])
+        for c in cls:
+            series = occ.get(c.position, [])
+            if not series:
+                continue
+            st = np.asarray([t for t, _ in series], dtype=float)
+            sv = np.asarray([o for _, o in series], dtype=float)
+            # post-event occupancy at the last change <= t (step function)
+            idx = np.searchsorted(st, ts, side="right") - 1
+            occupied += np.where(idx >= 0, sv[np.clip(idx, 0, None)],
+                                 0.0) * c.act_bytes
+        budget = np.asarray([mem_tr.value_at(float(t)) for t in ts])
+        over = float(np.max(occupied - budget)) if ts.size else 0.0
+        if over > 0.0:
+            out[node] = over
+    return out
 
 
 class RobustMakespan(CostModel):

@@ -295,10 +295,18 @@ class NetworkScenario:
     ``link_mult[(n, n')]`` scales the directed effective rate.  Absent keys
     mean "constant 1".  Scenarios are immutable; ``with_*`` helpers compose
     extra windows multiplicatively.
+
+    ``mem_mult[n]`` scales node n's *available memory* (``Node.mem``) —
+    co-tenant pressure, not a timing effect: the engines ignore it (task
+    durations depend on compute/link capacity only), but admission sizing
+    (``core.cost_model.DegradedTail``) and measurement snapshots
+    (:func:`sampled_network`) consume it, so plans can be sized for the
+    degraded-memory tail instead of the nominal budget.
     """
     node_mult: dict = dataclasses.field(default_factory=dict)
     link_mult: dict = dataclasses.field(default_factory=dict)
     replan_triggers: tuple = ()
+    mem_mult: dict = dataclasses.field(default_factory=dict)
 
     # -- capacity traces ----------------------------------------------------
     def node_trace(self, net: EdgeNetwork, node: int) -> PiecewiseTrace:
@@ -309,6 +317,12 @@ class NetworkScenario:
     def link_trace(self, net: EdgeNetwork, a: int, c: int) -> PiecewiseTrace:
         base = constant(net.rate[a, c])
         m = self.link_mult.get((a, c))
+        return base * m if m is not None else base
+
+    def mem_trace(self, net: EdgeNetwork, node: int) -> PiecewiseTrace:
+        """Node ``node``'s *available memory* in bytes over time."""
+        base = constant(net.nodes[node].mem)
+        m = self.mem_mult.get(node)
         return base * m if m is not None else base
 
     # -- composition --------------------------------------------------------
@@ -348,6 +362,17 @@ class NetworkScenario:
             s = dataclasses.replace(s, link_mult=lm)
         return s
 
+    def with_mem_pressure(self, node: int, start: float, end: float,
+                          factor: float) -> "NetworkScenario":
+        """Node ``node``'s available memory shrinks to ``factor`` x on
+        [start, end) — a co-tenant claiming part of the device.  No timing
+        effect (the engines ignore it); consumed by tail-sized admission
+        (``core.cost_model.DegradedTail``) and :func:`sampled_network`."""
+        if factor < 0.0:
+            raise ValueError("memory factor must be >= 0")
+        return dataclasses.replace(self, mem_mult=self._compose(
+            self.mem_mult, node, _window(start, end, factor)))
+
     def with_region_degradation(self, nodes, links, start: float, end: float,
                                 factor: float) -> "NetworkScenario":
         """Correlated regional degradation: every node in ``nodes`` and every
@@ -373,7 +398,9 @@ class NetworkScenario:
     def drains(self) -> bool:
         """True when every multiplier trace ends at positive capacity — no
         resource can stall forever, so makespans stay finite (the fuzzer's
-        standing guarantee; see ``repro.sim.fuzz``)."""
+        standing guarantee; see ``repro.sim.fuzz``).  ``mem_mult`` is not
+        part of the predicate: memory pressure resizes admission windows
+        (a count, not a runtime resource), so it cannot wedge a run."""
         return all(tr.drains() for tr in self.node_mult.values()) and \
             all(tr.drains() for tr in self.link_mult.values())
 
@@ -426,6 +453,9 @@ def sampled_network(net: EdgeNetwork, scenario: NetworkScenario,
     for i, mult in scenario.node_mult.items():
         nodes[i] = dataclasses.replace(nodes[i],
                                        f=nodes[i].f * mult.value_at(t))
+    for i, mult in scenario.mem_mult.items():
+        nodes[i] = dataclasses.replace(nodes[i],
+                                       mem=nodes[i].mem * mult.value_at(t))
     rate = net.rate.copy()
     for (a, c), mult in scenario.link_mult.items():
         rate[a, c] = rate[a, c] * mult.value_at(t)

@@ -1,0 +1,371 @@
+"""Adaptive robustness (ISSUE 10): the online drift-rate estimator and
+AdaptiveCadence replan policy, the successive-halving policy tuner, tail-sized
+admission budgets (``DegradedTail``), the preview-planner LRU bound, and the
+``mem_pressure`` fuzz family's serialization round-trip."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.bcd import bcd_solve
+from repro.core.cost_model import (DegradedTail, SimMakespan,
+                                   budget_feasible, node_budget_windows)
+from repro.ft import (AdaptiveCadence, Coordinator, DriftEstimator,
+                      Hysteresis, RateChange, Resync, Straggler,
+                      clear_tune_cache, default_tuning_grid,
+                      network_signature, resolve_replan_policy,
+                      tune_policies)
+from repro.ft.adaptive import _signed_net_deviations
+from repro.sim import fuzz as F
+from repro.sim.fuzz import FuzzConfig, fuzz_event_stream, fuzz_scenario
+from repro.sim.policies import MemoryBudgeted
+from repro.sim.scenario import NetworkScenario, sampled_network
+from repro.sim.validate import random_instance
+
+
+# ---------------------------------------------------------------------------
+# DriftEstimator
+# ---------------------------------------------------------------------------
+
+def test_estimator_learns_a_ramp():
+    est = DriftEstimator(halflife=2.0, z=2.0)
+    for t in range(12):
+        est.observe(0.3 * t, float(t))
+    assert est.rate == pytest.approx(0.3, rel=0.05)
+
+
+def test_estimator_detects_negative_drift():
+    # degradations drift the level DOWN; the gate must be two-sided
+    est = DriftEstimator(halflife=2.0, z=2.0)
+    for t in range(12):
+        est.observe(-0.3 * t, float(t))
+    assert est.rate == pytest.approx(0.3, rel=0.05)
+
+
+def test_estimator_rejects_flapping_as_noise():
+    est = DriftEstimator(halflife=2.0, z=2.0)
+    for t in range(40):
+        est.observe(0.5 * (t % 2), 0.25 * t)
+    assert est.rate == 0.0
+
+
+def test_estimator_rebase_keeps_statistics():
+    est = DriftEstimator(halflife=2.0, z=2.0)
+    for t in range(12):
+        est.observe(0.3 * t, float(t))
+    r = est.rate
+    est.rebase()                      # new level reference (post-replan)...
+    assert est.rate == pytest.approx(r)   # ...but the learned rate survives
+    # the first post-rebase sample re-arms instead of reading a level jump
+    est.observe(100.0, 12.0)
+    assert est.rate == pytest.approx(r)
+    est.reset()
+    assert est.rate == 0.0
+
+
+def test_estimator_ignores_nonfinite_levels():
+    est = DriftEstimator()
+    est.observe(0.0, 0.0)
+    est.observe(-math.inf, 1.0)       # NodeFailure deviation: not a rate
+    est.observe(0.1, 2.0)
+    assert math.isfinite(est.rate)
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveCadence
+# ---------------------------------------------------------------------------
+
+def _coord(seed=3):
+    prof, net, _sol, _b, B = random_instance(seed)
+    return Coordinator(prof, net, B), net
+
+
+def test_cadence_follows_square_root_rule():
+    p = AdaptiveCadence(solve_cost=0.05, staleness_weight=1.0)
+    assert p.cadence == math.inf      # no drift yet: ride out
+    est = DriftEstimator(halflife=2.0, z=2.0)
+    for t in range(12):
+        est.observe(0.2 * t, float(t))
+    p.estimator = est
+    assert p.cadence == pytest.approx(math.sqrt(2 * 0.05 / est.rate),
+                                      rel=1e-9)
+    clamped = AdaptiveCadence(solve_cost=0.05, min_cadence=2.0,
+                              max_cadence=3.0)
+    clamped.estimator = est
+    assert clamped.cadence == 2.0
+
+
+def test_adaptive_replans_on_failure_and_rides_out_flaps():
+    from repro.ft.coordinator import NodeFailure
+    c, net = _coord()
+    p = AdaptiveCadence()
+    assert p.decide(NodeFailure(server=1), 0.5, c).replan
+    # a flap pair cancels in the cumulative coordinate: no replan, ever
+    assert not p.decide(RateChange(0, 1, 0.25), 1.0, c).replan
+    assert not p.decide(RateChange(0, 1, 4.0), 1.1, c).replan
+    assert p.cadence == math.inf
+
+
+def test_adaptive_cadence_fires_under_sustained_resync_drift():
+    c, net = _coord()
+    p = AdaptiveCadence(solve_cost=0.01, halflife=1.0, z=1.0)
+    fired = []
+    scen = NetworkScenario()          # identity; we degrade by hand below
+    for k in range(1, 30):
+        t = 0.1 * k
+        nodes = [n.__class__(**{**n.__dict__, "f": n.f * math.exp(-0.4 * t)})
+                 for n in net.nodes]
+        import dataclasses
+        snap = dataclasses.replace(net, nodes=nodes)
+        d = p.decide(Resync(snap), t, c)
+        if d.replan:
+            fired.append(t)
+            # emulate the harness: adopted replan -> policy observes it
+            from repro.ft.coordinator import ReplanOutcome
+            p.observe(ReplanOutcome(event=Resync(snap), old_latency=1.0,
+                                    new_plan=c.plan, action="replan",
+                                    remapped_stages=False), t)
+    assert fired, "sustained capacity decay must eventually trigger replans"
+
+
+def test_step_guard_is_opt_in():
+    c, _net = _coord()
+    # default: no guard — a single severe step is left to the estimator
+    assert AdaptiveCadence()._guard is None
+    p = AdaptiveCadence(step_threshold=0.25, step_cooldown=0.0)
+    assert isinstance(p._guard, Hysteresis)
+    d = p.decide(Straggler(1, 8.0), 1.0, c)
+    assert d.replan and "step guard" in d.reason
+    assert "step_threshold" in repr(p)
+
+
+def test_resolve_replan_policy_knows_adaptive():
+    assert isinstance(resolve_replan_policy("adaptive"), AdaptiveCadence)
+    with pytest.raises(ValueError, match="adaptive"):
+        resolve_replan_policy("nope")
+
+
+def test_signed_net_deviations_roundtrip():
+    _c, net = _coord()
+    assert all(v == 0.0 for v in _signed_net_deviations(net, net).values())
+    import dataclasses
+    nodes = list(net.nodes)
+    nodes[1] = dataclasses.replace(nodes[1], f=nodes[1].f * 2.0)
+    up = dataclasses.replace(net, nodes=nodes)
+    devs = _signed_net_deviations(net, up)
+    assert devs[("node", 1)] == pytest.approx(math.log(2.0))
+    # degraded() renumbers: shapes differ -> no comparable coordinate
+    assert _signed_net_deviations(net, net.degraded([1])) == {}
+
+
+# ---------------------------------------------------------------------------
+# network_signature + tune_policies
+# ---------------------------------------------------------------------------
+
+def test_network_signature_discriminates():
+    from repro.core import make_edge_network
+    a = make_edge_network(num_servers=2, seed=0)
+    b = make_edge_network(num_servers=2, seed=0)
+    c = make_edge_network(num_servers=2, seed=1)
+    assert network_signature(a) == network_signature(b)
+    assert network_signature(a) != network_signature(c)
+
+
+def _tune_setup():
+    prof, net, _sol, _b, B = random_instance(3)
+    streams = [fuzz_event_stream(np.random.default_rng(s), net, horizon=4.0,
+                                 max_events=4, allow_failure=False,
+                                 flap_fraction=0.75)
+               for s in range(300, 306)]
+    return prof, net, B, streams
+
+
+def test_tune_policies_deterministic_and_cached():
+    prof, net, B, streams = _tune_setup()
+    grid = default_tuning_grid(solve_cost=0.15)
+    assert "rate_limited+hyst(0.25,cd=0.3)" in grid and len(grid) == 10
+    clear_tune_cache()
+    with obs.enabled_scope():
+        obs.reset()
+        r1 = tune_policies(prof, net, B, streams, configs=grid,
+                           min_streams=2, solve_downtime=0.15)
+        assert not r1.from_cache
+        assert r1.best in grid
+        assert r1.signature == network_signature(net)
+        # rounds consume monotonically more of the corpus, never more than n
+        consumed = [n for _alive, n in r1.rounds]
+        assert consumed == sorted(consumed) and consumed[-1] <= len(streams)
+        assert obs.counter("ft.tune.rounds") == len(r1.rounds)
+        # identical call: served from the per-signature cache
+        r2 = tune_policies(prof, net, B, streams, configs=grid,
+                           min_streams=2, solve_downtime=0.15)
+        assert r2.from_cache and r2.best == r1.best
+        assert obs.counter("ft.tune.cache_hits") == 1
+    clear_tune_cache()
+    r3 = tune_policies(prof, net, B, streams, configs=grid,
+                       min_streams=2, solve_downtime=0.15, cache=False)
+    assert r3.best == r1.best and r3.score == pytest.approx(r1.score)
+    # leaderboard rows are (name, score, n_streams) with full-corpus winners
+    names = [row[0] for row in r3.leaderboard]
+    assert r3.best in names and len(names) == len(grid)
+    d = r3.row()
+    assert d["best"] == r3.best and d["signature"] == r3.signature
+
+
+def test_tune_policies_single_config_and_validation():
+    prof, net, B, streams = _tune_setup()
+    only = {"hand": lambda: Hysteresis(0.25, cooldown=0.3)}
+    res = tune_policies(prof, net, B, streams[:3], configs=only,
+                        min_streams=2, cache=False)
+    assert res.best == "hand"
+    with pytest.raises(ValueError):
+        tune_policies(prof, net, B, [], configs=only, cache=False)
+    with pytest.raises(ValueError):
+        tune_policies(prof, net, B, streams, configs=only, eta=1,
+                      cache=False)
+
+
+def test_tune_one_se_rule_prefers_parsimony():
+    """Two configs that act identically on the corpus (statistically tied
+    by construction) must rank by replans-per-stream: the eager clone that
+    replans on everything cannot displace the quiet one."""
+    prof, net, B, streams = _tune_setup()
+    from repro.ft import Eager, RideOut
+    res = tune_policies(prof, net, B, streams,
+                        configs={"eager": Eager, "quiet": RideOut},
+                        min_streams=2, solve_downtime=0.0, cache=False)
+    # zero downtime: both see identical makespans -> tied -> parsimony
+    assert res.best == "quiet"
+
+
+# ---------------------------------------------------------------------------
+# DegradedTail admission budgets
+# ---------------------------------------------------------------------------
+
+def _mem_scenarios(net, n, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = FuzzConfig(families=("mem_pressure",), min_events=1, max_events=2)
+    return [fuzz_scenario(rng, net, cfg) for _ in range(n)]
+
+
+def test_degraded_tail_arithmetic():
+    prof, net, _sol, _b, B = random_instance(3)
+    scens = _mem_scenarios(net, 8)
+    alpha = 1.0 - 1.0 / len(scens) + 1e-9          # tail = worst scenario
+    tail = DegradedTail.from_scenarios(net, scens, alpha=alpha)
+    for i, node in enumerate(net.nodes):
+        worst = min(min(s.mem_mult[i].values) if i in s.mem_mult else 1.0
+                    for s in scens)
+        assert tail.node_mem(net, i) == pytest.approx(node.mem * worst)
+        assert tail.node_mem(net, i) <= node.mem + 1e-9
+    # None entries and short tuples fall back to the nominal budget
+    assert DegradedTail(mem=(None,)).node_mem(net, 0) == net.nodes[0].mem
+    with pytest.raises(ValueError):
+        DegradedTail.from_scenarios(net, [], alpha=0.5)
+    with pytest.raises(ValueError):
+        DegradedTail.from_scenarios(net, scens, alpha=1.0)
+
+
+def test_tail_windows_never_exceed_nominal():
+    prof, net, sol, b, B = random_instance(3)
+    scens = _mem_scenarios(net, 8)
+    tail = DegradedTail.from_scenarios(net, scens, alpha=0.8)
+    nominal = node_budget_windows(prof, net, sol, b)
+    tightened = node_budget_windows(prof, net, sol, b, tail=tail)
+    assert len(tightened) == len(nominal)
+    for tw, nw in zip(tightened, nominal):
+        if nw is None:                    # unbounded: no activation bytes
+            assert tw is None
+        else:
+            assert tw <= nw
+    if budget_feasible(prof, net, sol, b, tail=tail):
+        assert budget_feasible(prof, net, sol, b)
+    # the admission policy and the planning cost model accept the same seam
+    MemoryBudgeted(tail=tail)
+    SimMakespan(policy="memory", tail=tail)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator preview-planner LRU (the 10k-flap regression)
+# ---------------------------------------------------------------------------
+
+def test_preview_memo_is_bounded_under_flap_storm():
+    prof, net, _sol, _b, B = random_instance(3)
+    with obs.enabled_scope():
+        obs.reset()
+        c = Coordinator(prof, net, B, preview_cache_size=8)
+        sol = c.plan.solution
+        for i in range(10_000):        # 5k flaps: distinct (factor, 1/factor)
+            f = 0.3 + (i % 4_999) * 1e-4
+            c.preview_cached(sol, RateChange(0, 1, f if i % 2 == 0
+                                             else 1.0 / f))
+        assert len(c._preview_planners) <= 8
+        assert obs.counter("ft.preview_evictions") > 0
+    with pytest.raises(ValueError):
+        Coordinator(prof, net, B, preview_cache_size=0)
+
+
+def test_preview_memo_lru_keeps_hot_entries():
+    prof, net, _sol, _b, B = random_instance(3)
+    # each miss memoizes two entries (per-network planner + per-event key),
+    # so size 3 holds exactly one hot event across a stream of cold misses
+    c = Coordinator(prof, net, B, preview_cache_size=3)
+    sol = c.plan.solution
+    hot = RateChange(0, 1, 0.5)
+    c.preview_cached(sol, hot)
+    hot_key = (id(c.net), ("RC", 0, 1, 0.5))
+    for f in (0.6, 0.7, 0.8):
+        c.preview_cached(sol, hot)     # touch: most-recently-used again
+        c.preview_cached(sol, RateChange(0, 1, f))
+        assert hot_key in c._preview_planners
+    assert len(c._preview_planners) <= 3
+    assert (id(c.net), ("RC", 0, 1, 0.6)) not in c._preview_planners
+
+
+# ---------------------------------------------------------------------------
+# mem_pressure fuzz family: scenario + serialization round-trip
+# ---------------------------------------------------------------------------
+
+def test_mem_pressure_scenario_and_roundtrip(tmp_path):
+    prof, net, _sol, _b, B = random_instance(3)
+    rng = np.random.default_rng(0)
+    cfg = FuzzConfig(families=("mem_pressure",), min_events=1, max_events=2)
+    scen = fuzz_scenario(rng, net, cfg)
+    assert scen.mem_mult                              # family fired
+    for n, tr in scen.mem_mult.items():
+        assert min(tr.values) >= 0.25 - 1e-12         # documented floor
+        assert max(tr.values) <= 1.0 + 1e-12
+        # mem_trace is the absolute byte trace: budget x multiplier
+        trace = scen.mem_trace(net, n)
+        assert trace.values == pytest.approx(
+            tuple(net.nodes[n].mem * v for v in tr.values))
+    # the multiplier scales available memory in the sampled network
+    t_mid = sum(next(iter(scen.mem_mult.values())).times[:2]) / 2.0 \
+        if len(next(iter(scen.mem_mult.values())).times) > 1 else 0.0
+    snap = sampled_network(net, scen, t_mid)
+    for i, node in enumerate(net.nodes):
+        assert snap.nodes[i].mem <= node.mem + 1e-9
+    # byte-stable save/load through the corpus format
+    case = F.fuzz_case(7)
+    case = type(case)(**{**case.__dict__, "scenario": scen})
+    path = F.save_case(case, str(tmp_path), "mem_case")
+    loaded = F.load_case(path)
+    assert loaded.scenario.mem_mult.keys() == scen.mem_mult.keys()
+    for n in scen.mem_mult:
+        assert loaded.scenario.mem_mult[n].times == scen.mem_mult[n].times
+        assert loaded.scenario.mem_mult[n].values == scen.mem_mult[n].values
+
+
+def test_fuzz_scenario_weighted_untilted_matches_nominal():
+    prof, net, _sol, _b, B = random_instance(3)
+    cfg = FuzzConfig(min_events=1, max_events=3)
+    s1 = fuzz_scenario(np.random.default_rng(11), net, cfg)
+    s2, w = F.fuzz_scenario_weighted(np.random.default_rng(11), net, cfg)
+    assert w == pytest.approx(1.0)
+    assert s2.node_mult.keys() == s1.node_mult.keys()
+    assert s2.link_mult.keys() == s1.link_mult.keys()
+    for k in s1.node_mult:
+        assert s2.node_mult[k].times == s1.node_mult[k].times
+        assert s2.node_mult[k].values == s1.node_mult[k].values

@@ -355,7 +355,8 @@ def test_evaluate_policies_report_surface():
     r = reports["eager"]
     row = r.row()
     assert set(row) == {"policy", "mean", "cvar", "replans", "suppressed",
-                        "downtime", "mean_final_objective"}
+                        "downtime", "eval_errors", "mean_final_objective"}
     assert r.cvar >= r.mean > 0
+    assert r.eval_errors >= 0
     assert r.blocked is not None
     assert len(r.makespans) == 2
